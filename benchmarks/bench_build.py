@@ -1,0 +1,67 @@
+"""Paper §3.1 (Fig. 2): index construction behaviour — level structure,
+per-level TD, outlier promotion, build time vs gl, k-medoids vs k-means."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+
+
+def run(seed: int = 0):
+    rows = []
+    data = make_dataset("dense_embed", n=6000, seed=seed)
+    for gl in (64, 128, 256, 512):
+        t0 = time.perf_counter()
+        idx = PDASCIndex.build(data, gl=gl, distance="euclidean")
+        dt = time.perf_counter() - t0
+        rows.append(dict(
+            bench="build_gl", gl=gl, n_levels=idx.n_levels,
+            level_sizes=list(idx.stats.level_sizes),
+            build_s=round(dt, 2),
+            td0=round(idx.stats.level_td[0], 1),
+        ))
+        print(f"[build] gl={gl}: levels={idx.stats.level_sizes} "
+              f"t={dt:.2f}s", flush=True)
+
+    # clusterer comparison (paper §3.3: k-means is Euclidean-bound)
+    for method in ("pam", "alternate", "build", "kmeans"):
+        t0 = time.perf_counter()
+        idx = PDASCIndex.build(data[:3000], gl=128, distance="euclidean",
+                               method=method)
+        dt = time.perf_counter() - t0
+        rows.append(dict(bench="build_method", method=method,
+                         build_s=round(dt, 2),
+                         td0=round(idx.stats.level_td[0], 1)))
+        print(f"[build] method={method}: td0={idx.stats.level_td[0]:.1f} "
+              f"t={dt:.2f}s", flush=True)
+
+    # outlier promotion: islands (geo) keep their own prototypes
+    geo = make_dataset("geo_clusters", n=2000, seed=seed)
+    idx = PDASCIndex.build(geo, gl=60, distance="haversine")
+    top = np.asarray(idx.data.levels[-1].points)
+    top = top[np.asarray(idx.data.levels[-1].valid)]
+    lat_deg = top[:, 0] * 180 / np.pi
+    n_island = int((lat_deg < 32).sum())
+    rows.append(dict(bench="outliers", top_level_protos=len(top),
+                     island_protos=n_island))
+    print(f"[build] top-level prototypes={len(top)}, island={n_island}")
+    assert n_island >= 1, "island outliers must surface at the top level"
+    return rows
+
+
+def main(argv=None):
+    import json
+    import os
+
+    rows = run()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/build.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

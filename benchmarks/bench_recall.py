@@ -1,0 +1,136 @@
+"""Paper Fig. 5 / Table 2 protocol: 10-NN recall per dataset x distance x
+method (PDASC vs IVF-Flat [FLANN stand-in] vs NN-Descent [PyNN stand-in]).
+
+Datasets are the seeded surrogates (DESIGN.md §5); ground truth is exact
+brute force under the same distance (paper §4.3). Sizes are scaled for this
+CPU container (--full restores paper-scale n).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import IVFFlatIndex, NNDescentIndex, exact_knn
+from repro.baselines.ivf_flat import SUPPORTED as IVF_SUPPORTED
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+
+K = 10
+
+# dataset -> (n, gl, radius_quantile, distances)
+_BASE = {
+    "geo_clusters": (4000, 60, 0.5,
+                     ("manhattan", "euclidean", "chebyshev", "cosine",
+                      "haversine")),
+    "sparse_highdim": (4000, 256, 0.45,
+                       ("manhattan", "euclidean", "chebyshev", "cosine")),
+    "dense_embed": (8000, 256, 0.35,
+                    ("manhattan", "euclidean", "chebyshev", "cosine")),
+    "tfidf_like": (6000, 256, 0.35,
+                   ("manhattan", "euclidean", "chebyshev", "cosine")),
+}
+_FULL_N = {"geo_clusters": 8130, "sparse_highdim": 69_000,
+           "dense_embed": 1_000_000, "tfidf_like": 290_000}
+
+
+def _recall(ids, gt):
+    return float(np.mean([
+        len(set(ids[i][ids[i] >= 0].tolist()) & set(gt[i].tolist())) / gt.shape[1]
+        for i in range(len(gt))
+    ]))
+
+
+def run(full: bool = False, n_queries: int = 64, seed: int = 0):
+    import jax
+
+    rows = []
+    for ds, (n, gl, rq, distances) in _BASE.items():
+        jax.clear_caches()  # long runs exhaust the CPU JIT otherwise
+        n = _FULL_N[ds] if full else n
+        data = make_dataset(ds, n=n, seed=seed)
+        n_train = n - n_queries
+        train, test = data[:n_train], data[n_train:]
+        for distance in distances:
+            _, gt = exact_knn(test, train, distance=distance, k=K)
+            gt = np.asarray(gt)
+
+            # --- PDASC (the paper's method, k-medoids) -----------------------
+            t0 = time.perf_counter()
+            idx = PDASCIndex.build(train, gl=gl, distance=distance,
+                                   radius_quantile=rq)
+            t_build = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res = idx.search(test, k=K, mode="dense")
+            t_search = time.perf_counter() - t0
+            rows.append(dict(
+                dataset=ds, distance=distance, method="pdasc",
+                recall=_recall(np.asarray(res.ids), gt),
+                build_s=round(t_build, 2),
+                search_us_per_q=round(t_search / len(test) * 1e6, 1),
+                candidates=int(np.asarray(res.n_candidates).mean()),
+            ))
+
+            # --- IVF-Flat (FLANN stand-in; limited distance support) ---------
+            if distance in IVF_SUPPORTED:
+                t0 = time.perf_counter()
+                ivf = IVFFlatIndex.build(train, n_cells=max(16, n_train // 256),
+                                         distance=distance)
+                t_build = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                _, ids = ivf.search(test, k=K, n_probe=8)
+                t_search = time.perf_counter() - t0
+                rows.append(dict(
+                    dataset=ds, distance=distance, method="ivf_flat",
+                    recall=_recall(ids, gt), build_s=round(t_build, 2),
+                    search_us_per_q=round(t_search / len(test) * 1e6, 1),
+                    candidates=-1,
+                ))
+            else:
+                rows.append(dict(dataset=ds, distance=distance,
+                                 method="ivf_flat", recall=float("nan"),
+                                 build_s=float("nan"),
+                                 search_us_per_q=float("nan"), candidates=-1))
+
+            # --- NN-Descent (PyNN stand-in) ----------------------------------
+            t0 = time.perf_counter()
+            nnd = NNDescentIndex.build(train[:4000], n_neighbors=15,
+                                       distance=distance, iters=5)
+            t_build = time.perf_counter() - t0
+            _, gt_nnd = exact_knn(test, train[:4000], distance=distance, k=K)
+            t0 = time.perf_counter()
+            _, ids = nnd.search(test, k=K, n_seeds=24, max_steps=40)
+            t_search = time.perf_counter() - t0
+            rows.append(dict(
+                dataset=ds, distance=distance, method="nndescent",
+                recall=_recall(ids, np.asarray(gt_nnd)),
+                build_s=round(t_build, 2),
+                search_us_per_q=round(t_search / len(test) * 1e6, 1),
+                candidates=-1,
+            ))
+            print(f"[recall] {ds:16s} {distance:10s} "
+                  + " ".join(f"{r['method']}={r['recall']:.3f}"
+                             for r in rows[-3:]), flush=True)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    import json
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--out", default="experiments/recall.json")
+    args = p.parse_args(argv)
+    rows = run(full=args.full)
+    import os
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

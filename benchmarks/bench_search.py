@@ -1,0 +1,106 @@
+"""Search performance: dense vs beam NSA (pruning/recall trade-off), radius
+sensitivity (paper §5 future-work: per-level dynamic radii), kernel
+micro-bench (CPU wall time; the TPU story is the §Roofline dry-run)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import exact_knn
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+from repro.kernels import ops
+from repro.kernels.ref import knn_ref, pairwise_ref
+
+
+def _recall(ids, gt):
+    return float(np.mean([
+        len(set(ids[i][ids[i] >= 0].tolist()) & set(gt[i].tolist())) / gt.shape[1]
+        for i in range(len(gt))
+    ]))
+
+
+def run(seed: int = 0):
+    rows = []
+    data = make_dataset("dense_embed", n=8000, seed=seed)
+    train, test = data[:7800], data[7800:7928]
+    _, gt = exact_knn(test, train, distance="euclidean", k=10)
+    gt = np.asarray(gt)
+    idx = PDASCIndex.build(train, gl=256, distance="euclidean",
+                           radius_quantile=0.35)
+
+    def timed_search(**kw):
+        res = idx.search(test, k=10, **kw)  # compile
+        jax.block_until_ready(res.dists)
+        t0 = time.perf_counter()
+        res = idx.search(test, k=10, **kw)
+        jax.block_until_ready(res.dists)
+        dt = time.perf_counter() - t0
+        return res, dt / len(test) * 1e6
+
+    res, us = timed_search(mode="dense")
+    rows.append(dict(bench="nsa", mode="dense", beam=-1,
+                     recall=_recall(np.asarray(res.ids), gt),
+                     us_per_q=round(us, 1),
+                     candidates=int(np.asarray(res.n_candidates).mean())))
+    for beam in (4, 16, 48, 128):
+        res, us = timed_search(mode="beam", beam=beam)
+        rows.append(dict(bench="nsa", mode="beam", beam=beam,
+                         recall=_recall(np.asarray(res.ids), gt),
+                         us_per_q=round(us, 1),
+                         candidates=int(np.asarray(res.n_candidates).mean())))
+        print(f"[search] beam={beam}: {rows[-1]}", flush=True)
+
+    # radius sensitivity + per-level dynamic radii (paper future work)
+    for q in (0.1, 0.3, 0.5):
+        idx_q = PDASCIndex.build(train, gl=256, distance="euclidean",
+                                 radius_quantile=q)
+        res = idx_q.search(test, k=10, mode="dense")
+        rows.append(dict(bench="radius", quantile=q,
+                         recall=_recall(np.asarray(res.ids), gt),
+                         candidates=int(np.asarray(res.n_candidates).mean())))
+    radii = idx.per_level_radii()
+    from repro.core import nsa as nsa_lib
+    from repro.core import distances as dl
+
+    res = nsa_lib.search_dense(idx.data, jnp.asarray(test),
+                               dist=dl.get("euclidean"), k=10, r=tuple(radii))
+    rows.append(dict(bench="radius", quantile="per-level",
+                     recall=_recall(np.asarray(res.ids), gt),
+                     candidates=int(np.asarray(res.n_candidates).mean())))
+    print(f"[search] per-level radii: {rows[-1]}", flush=True)
+
+    # kernel micro-bench: fused flash-knn vs materialise+topk (CPU wall)
+    Q = jnp.asarray(test)
+    DB = jnp.asarray(train)
+    for name, fn in [
+        ("knn_ref_materialise", lambda: knn_ref(Q, DB, 10, "l2")),
+        ("knn_fused_interpret", lambda: ops.knn(Q, DB, "l2", k=10,
+                                                force_pallas=True)),
+    ]:
+        out = fn()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / len(test) * 1e6
+        rows.append(dict(bench="kernel", name=name, us_per_q=round(us, 1)))
+    return rows
+
+
+def main(argv=None):
+    import json
+    import os
+
+    rows = run()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/search.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

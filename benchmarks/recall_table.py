@@ -1,0 +1,40 @@
+"""Render the §Reproduction recall table (markdown) from
+experiments/bench_results.json — the paper's Fig. 5 as a table."""
+
+from __future__ import annotations
+
+import json
+
+
+def render(path="experiments/bench_results.json") -> str:
+    rows = json.load(open(path))["recall"]
+    datasets, distances = [], []
+    for r in rows:
+        if r["dataset"] not in datasets:
+            datasets.append(r["dataset"])
+        if r["distance"] not in distances:
+            distances.append(r["distance"])
+    by = {(r["dataset"], r["distance"], r["method"]): r for r in rows}
+    out = ["| dataset | distance | PDASC | IVF-Flat (FLANN~) | NN-Descent (PyNN~) | PDASC candidates |",
+           "|---|---|---|---|---|---|"]
+    for ds in datasets:
+        for d in distances:
+            p = by.get((ds, d, "pdasc"))
+            if p is None:
+                continue
+            i = by.get((ds, d, "ivf_flat"))
+            n = by.get((ds, d, "nndescent"))
+
+            def fmt(r):
+                if r is None or r["recall"] != r["recall"]:  # NaN
+                    return "unsupported"
+                return f"{r['recall']:.3f}"
+
+            out.append(
+                f"| {ds} | {d} | **{p['recall']:.3f}** | {fmt(i)} | {fmt(n)} "
+                f"| {p['candidates']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render())

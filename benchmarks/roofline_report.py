@@ -1,0 +1,91 @@
+"""Aggregate the dry-run JSONs into the §Roofline table.
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+emits a markdown table: per (arch x shape x mesh) the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO ratio and the per-device memory.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dirname: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(rows, mesh: str = "single") -> str:
+    out = [
+        "| arch | shape | kind | compute | memory | collective | bottleneck "
+        "| MODEL/HLO | mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | FAILED: "
+                       f"{r.get('error', '?')[:40]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        mem = r.get("memory_analysis", {})
+        peak = mem.get("temp_size_in_bytes", 0) + mem.get(
+            "argument_size_in_bytes", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {_fmt_s(rf['compute_s'])} | {_fmt_s(rf['memory_s'])} "
+            f"| {_fmt_s(rf['collective_s'])} "
+            f"| {rf['bottleneck'].replace('_s', '')} "
+            f"| {ratio:.2f} " if ratio else
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {_fmt_s(rf['compute_s'])} | {_fmt_s(rf['memory_s'])} "
+            f"| {_fmt_s(rf['collective_s'])} "
+            f"| {rf['bottleneck'].replace('_s', '')} | - "
+        )
+        out[-1] += f"| {peak / 2**30:.2f}GiB |"
+    return "\n".join(out)
+
+
+def summarise(rows):
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    by_b = {}
+    for r in ok:
+        by_b.setdefault(r["roofline"]["bottleneck"], []).append(
+            (r["arch"], r["shape"], r["mesh"]))
+    return dict(total=len(rows), ok=len(ok), failed=len(fail),
+                bottleneck_counts={k: len(v) for k, v in by_b.items()})
+
+
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--mesh", default="single")
+    args = p.parse_args(argv)
+    rows = load(args.dir)
+    print(table(rows, args.mesh))
+    print()
+    print(json.dumps(summarise(rows), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only recall,build]
+
+Emits ``name,value,derived`` CSV lines per row + writes JSON artifacts under
+experiments/. The roofline table itself comes from the (separately run)
+dry-run: ``python -m repro.launch.dryrun --all`` then
+``python -m benchmarks.roofline_report``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None,
+                   help="comma list: recall,build,search,retrieval")
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs("experiments", exist_ok=True)
+
+    t_start = time.time()
+    results = {}
+
+    def want(name):
+        return only is None or name in only
+
+    if want("build"):
+        from benchmarks import bench_build
+
+        results["build"] = bench_build.run()
+    if want("search"):
+        from benchmarks import bench_search
+
+        results["search"] = bench_search.run()
+    if want("retrieval"):
+        from benchmarks import bench_retrieval
+
+        results["retrieval"] = bench_retrieval.run()
+    if want("recall"):
+        from benchmarks import bench_recall
+
+        results["recall"] = bench_recall.run(full=args.full)
+
+    print("\n==== CSV ====")
+    for bench, rows in results.items():
+        for r in rows:
+            key = ",".join(str(r.get(c)) for c in ("dataset", "distance",
+                                                   "method", "mode", "beam",
+                                                   "gl", "name", "quantile")
+                           if r.get(c) is not None)
+            val = r.get("recall", r.get("us_per_q", r.get("build_s", "")))
+            derived = {k: v for k, v in r.items()
+                       if k not in ("dataset", "distance", "method", "bench")}
+            print(f"{bench}:{key},{val},{json.dumps(derived)}")
+
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nall benchmarks done in {time.time() - t_start:.0f}s "
+          f"-> experiments/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

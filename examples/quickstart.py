@@ -1,0 +1,61 @@
+"""PDASC quickstart: build a multilevel index, search with arbitrary
+distances, measure recall against exact ground truth.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.baselines import exact_knn
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+
+
+def recall(ids, gt):
+    k = gt.shape[1]
+    return np.mean([
+        len(set(ids[i][ids[i] >= 0].tolist()) & set(gt[i].tolist())) / k
+        for i in range(len(gt))
+    ])
+
+
+def main():
+    # --- a dense-embedding dataset (GLOVE surrogate) -------------------------
+    data = make_dataset("dense_embed", n=6000, seed=0)
+    train, test = data[:5900], data[5900:5950]
+
+    for distance in ("euclidean", "manhattan", "chebyshev", "cosine"):
+        idx = PDASCIndex.build(train, gl=256, distance=distance,
+                               radius_quantile=0.35)
+        res = idx.search(test, k=10)  # beam mode (TPU-pruned) by default
+        _, gt = exact_knn(test, train, distance=distance, k=10)
+        print(f"{distance:10s} recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f} "
+              f"(mean candidates scanned: {int(np.asarray(res.n_candidates).mean())} "
+              f"of {len(train)})")
+
+    # --- the same API on geospatial data with the Haversine metric ----------
+    geo = make_dataset("geo_clusters", n=3000, seed=1)
+    g_train, g_test = geo[:2900], geo[2900:2950]
+    idx = PDASCIndex.build(g_train, gl=60, distance="haversine",
+                           radius_quantile=0.5)
+    print("\nindex structure (Municipalities surrogate):")
+    print(idx.describe())
+    res = idx.search(g_test, k=10, mode="dense")
+    _, gt = exact_knn(g_test, g_train, distance="haversine", k=10)
+    print(f"haversine  recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
+
+    # --- non-metric dissimilarity (paper future work: Jaccard) --------------
+    # (weighted Jaccard on the MNIST-like surrogate: overlapping supports —
+    # on near-disjoint tf-idf vectors the prototype frontier saturates at
+    # d=1.0 and prunes structurally, a known Jaccard-on-sparse caveat)
+    docs = np.abs(make_dataset("sparse_highdim", n=3000, seed=2))
+    d_train, d_test = docs[:2900], docs[2900:2950]
+    idx = PDASCIndex.build(d_train, gl=128, distance="jaccard",
+                           radius_quantile=0.6)
+    res = idx.search(d_test, k=10, mode="dense")
+    _, gt = exact_knn(d_test, d_train, distance="jaccard", k=10)
+    print(f"jaccard    recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""The `retrieval_cand` scenario end-to-end: train a Wide&Deep CTR model,
+then retrieve top candidates for a user — exact distributed-style scoring
+vs PDASC-pruned retrieval over the candidate embeddings.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.index import PDASCIndex
+from repro.data import recsys_batch
+from repro.models import recsys
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def main():
+    cfg = get_arch("wide-deep").smoke_fn()
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3, total_steps=80, warmup_steps=0,
+                       schedule="constant", weight_decay=0.0)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp, bb: recsys.loss_fn(pp, bb, cfg), has_aux=True)(p, b)
+        p, o, _ = adamw_update(g, o, p, ocfg)
+        return p, o, loss
+
+    print("training wide-deep (smoke config) on planted CTR data ...")
+    for s in range(80):
+        batch = jax.tree.map(jnp.asarray, recsys_batch(s, 256, cfg))
+        params, opt, loss = step(params, opt, batch)
+        if s % 20 == 0:
+            print(f"  step {s:3d} loss {float(loss):.4f}")
+
+    # candidate corpus: item embeddings projected into the retrieval space
+    rng = np.random.default_rng(1)
+    n_cand = 50_000
+    cand = jnp.asarray(rng.normal(size=(n_cand, cfg.retrieval_dim)),
+                       jnp.float32)
+    user_batch = jax.tree.map(jnp.asarray, recsys_batch(999, 4, cfg))
+
+    # exact top-100 (dot product)
+    t0 = time.perf_counter()
+    top, ids = recsys.retrieval_step(params, user_batch, cand, cfg, k=100)
+    jax.block_until_ready(top)
+    t_exact = time.perf_counter() - t0
+    print(f"\nexact retrieval over {n_cand} candidates: "
+          f"{t_exact * 1e3:.1f}ms for 4 users")
+
+    # PDASC-pruned retrieval: index candidates once, search per user vector
+    print("building PDASC index over candidates (dot dissimilarity) ...")
+    idx = PDASCIndex.build(np.asarray(cand), gl=512, distance="cosine",
+                           radius_quantile=0.25)
+    u = recsys.user_vector(params, user_batch, cfg)
+    t0 = time.perf_counter()
+    res = idx.search(np.asarray(u), k=100, mode="dense")
+    jax.block_until_ready(res.dists)
+    t_pdasc = time.perf_counter() - t0
+    overlap = np.mean([
+        len(set(np.asarray(res.ids[i]).tolist())
+            & set(np.asarray(ids[i]).tolist())) / 100
+        for i in range(4)
+    ])
+    print(f"PDASC retrieval: {t_pdasc * 1e3:.1f}ms, "
+          f"candidates scanned {int(np.asarray(res.n_candidates).mean())}"
+          f"/{n_cand}, top-100 overlap with exact-dot: {overlap:.2f}")
+    print("(cosine index vs dot scores — overlap is the angular/metric gap; "
+          "see benchmarks/bench_retrieval.py for the full comparison)")
+
+
+if __name__ == "__main__":
+    main()

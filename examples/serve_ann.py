@@ -1,0 +1,25 @@
+"""End-to-end serving driver (the paper's deployment scenario): a PDASC
+index served behind the batching engine with live request traffic.
+
+    PYTHONPATH=src python examples/serve_ann.py
+
+Thin wrapper over ``repro.launch.serve`` with a cosine text-embedding
+workload — reports p50/p99 latency, batch occupancy and recall.
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [
+        "serve", "--dataset", "tfidf_like", "--n", "12000", "--gl", "256",
+        "--distance", "cosine", "--queries", "256", "--batch", "32",
+        "--max-wait-ms", "4",
+    ]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Comparison baselines for the paper's recall protocol (§4.4).
+
+  exact.py      — brute-force ground truth (any distance)
+  ivf_flat.py   — k-means inverted-file index (FLANN stand-in: tree/partition
+                  family, Euclidean-rooted clustering)
+  nndescent.py  — NN-Descent k-NN graph search (PyNNDescent stand-in:
+                  graph family, arbitrary distances)
+"""
+
+from repro.baselines.exact import exact_knn
+from repro.baselines.ivf_flat import IVFFlatIndex
+from repro.baselines.nndescent import NNDescentIndex
+
+__all__ = ["exact_knn", "IVFFlatIndex", "NNDescentIndex"]

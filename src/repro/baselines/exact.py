@@ -1,0 +1,32 @@
+"""Exact brute-force k-NN — the ground truth every recall is measured
+against (paper §4.3: KD-tree where the distance allows, else brute force;
+on TPU brute force with the fused distance+top-k kernel IS the fast path,
+so it is the only exact method needed)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import distances as dist_lib
+from repro.kernels import ops as kops
+
+
+def exact_knn(queries, database, *, distance="euclidean", k: int = 10,
+              chunk: int = 2048):
+    """(dists [q, k] ascending, ids [q, k]) under any registered distance."""
+    Q = jnp.asarray(queries, jnp.float32)
+    DB = jnp.asarray(database, jnp.float32)
+    form = kops.resolve_form(distance)
+    if form is not None:
+        return kops.knn(Q, DB, distance, k=k)
+    # registry fallback for non-kernel distances (haversine, jaccard, ...)
+    import jax
+
+    dist = dist_lib.get(distance)
+    outs_d, outs_i = [], []
+    for i in range(0, Q.shape[0], chunk):
+        D = dist_lib.pairwise_chunked(dist, Q[i:i + chunk], DB)
+        neg, idx = jax.lax.top_k(-D, k)
+        outs_d.append(-neg)
+        outs_i.append(idx.astype(jnp.int32))
+    return jnp.concatenate(outs_d), jnp.concatenate(outs_i)

@@ -1,0 +1,72 @@
+"""IVF-Flat: k-means inverted-file index (the FLANN stand-in).
+
+The classic partition baseline: k-means coarse quantiser (Euclidean-rooted,
+like FLANN's trees), search probes the ``n_probe`` nearest cells and scans
+them exactly. Like FLANN it *supports* only centroid-meaningful metrics —
+running it with cosine/chebyshev mirrors FLANN's gaps in the paper's Fig. 5
+(we evaluate it anyway where the distance permits a mean).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core.kmeans import kmeans
+
+SUPPORTED = ("euclidean", "manhattan")  # FLANN-like coverage
+
+
+@dataclasses.dataclass
+class IVFFlatIndex:
+    centroids: jax.Array  # [C, d]
+    lists: np.ndarray  # [n] point -> cell
+    order: np.ndarray  # points sorted by cell
+    offsets: np.ndarray  # [C+1]
+    data: jax.Array  # [n, d] (reordered)
+    ids: np.ndarray  # [n] original rows (reordered)
+    distance: str
+
+    @classmethod
+    def build(cls, data, *, n_cells: int = 64, distance: str = "euclidean",
+              iters: int = 25, key=None) -> "IVFFlatIndex":
+        X = jnp.asarray(data, jnp.float32)
+        res = kmeans(X, n_cells, key=key or jax.random.PRNGKey(0),
+                     iters=iters)
+        labels = np.asarray(res.labels)
+        order = np.argsort(labels, kind="stable")
+        counts = np.bincount(labels, minlength=n_cells)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        return cls(
+            centroids=res.centroids, lists=labels, order=order,
+            offsets=offsets.astype(np.int64),
+            data=jnp.asarray(np.asarray(X)[order]),
+            ids=order, distance=distance,
+        )
+
+    def search(self, queries, *, k: int = 10, n_probe: int = 8):
+        dist = dist_lib.get(self.distance)
+        Q = jnp.asarray(queries, jnp.float32)
+        Dc = dist_lib.get("euclidean").pairwise(Q, self.centroids)
+        probe = np.asarray(jax.lax.top_k(-Dc, min(n_probe,
+                                                  self.centroids.shape[0]))[1])
+        out_d = np.full((Q.shape[0], k), np.inf, np.float32)
+        out_i = np.full((Q.shape[0], k), -1, np.int64)
+        data_np = np.asarray(self.data)
+        for qi in range(Q.shape[0]):
+            rows = np.concatenate([
+                np.arange(self.offsets[c], self.offsets[c + 1])
+                for c in probe[qi]
+            ]) if len(probe[qi]) else np.array([], np.int64)
+            if rows.size == 0:
+                continue
+            d = np.asarray(dist.pairwise(Q[qi:qi + 1],
+                                         jnp.asarray(data_np[rows])))[0]
+            sel = np.argsort(d, kind="stable")[:k]
+            out_d[qi, :len(sel)] = d[sel]
+            out_i[qi, :len(sel)] = self.ids[rows[sel]]
+        return out_d, out_i

@@ -1,0 +1,110 @@
+"""NN-Descent: graph-based ANN (the PyNNDescent stand-in).
+
+Builds an approximate k-NN graph by iterative neighbour-of-neighbour
+refinement (Dong et al., 2011), then answers queries by greedy best-first
+graph walk from random seeds. Like PyNNDescent it accepts arbitrary
+distances (only pairwise evaluations are used) but has no distributed story
+— exactly the comparison point the paper draws in §4.4.
+
+Host-side numpy driver with jnp distance batches: graph construction is
+pointer-chasing (not an accelerator workload); distance blocks go through
+the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+
+
+def _pair_dists(dist, A, B):
+    return np.asarray(dist.pairwise(jnp.asarray(A), jnp.asarray(B)))
+
+
+@dataclasses.dataclass
+class NNDescentIndex:
+    data: np.ndarray
+    graph: np.ndarray  # [n, g] neighbour ids
+    distance: str
+
+    @classmethod
+    def build(cls, data, *, n_neighbors: int = 15, distance: str = "euclidean",
+              iters: int = 6, sample: int = 8, seed: int = 0):
+        X = np.asarray(data, np.float32)
+        n = len(X)
+        g = min(n_neighbors, n - 1)
+        dist = dist_lib.get(distance)
+        rng = np.random.default_rng(seed)
+        # random init
+        graph = np.stack([
+            rng.choice(np.delete(np.arange(n), i), g, replace=False)
+            if n <= 10000 else
+            (lambda c: np.where(c == i, (i + 1) % n, c))(rng.integers(0, n, g))
+            for i in range(n)
+        ])
+        gd = np.stack([
+            _pair_dists(dist, X[i:i + 1], X[graph[i]])[0] for i in range(n)
+        ]) if n <= 2048 else None
+        if gd is None:
+            gd = np.empty((n, g), np.float32)
+            for s in range(0, n, 1024):
+                e = min(s + 1024, n)
+                block = X[graph[s:e].reshape(-1)].reshape(e - s, g, -1)
+                for j in range(s, e):
+                    gd[j] = _pair_dists(dist, X[j:j + 1], block[j - s])[0]
+
+        for _ in range(iters):
+            changed = 0
+            # candidate pool: sampled neighbours-of-neighbours
+            cand = graph[graph[:, rng.integers(0, g, sample)].reshape(n, -1)]
+            cand = cand.reshape(n, -1)
+            for s in range(0, n, 512):
+                e = min(s + 512, n)
+                for i in range(s, e):
+                    cs = np.unique(cand[i])
+                    cs = cs[(cs != i)]
+                    if cs.size == 0:
+                        continue
+                    d = _pair_dists(dist, X[i:i + 1], X[cs])[0]
+                    allc = np.concatenate([graph[i], cs])
+                    alld = np.concatenate([gd[i], d])
+                    _, keep = np.unique(allc, return_index=True)
+                    allc, alld = allc[keep], alld[keep]
+                    sel = np.argsort(alld, kind="stable")[:g]
+                    new = allc[sel]
+                    changed += int((new != graph[i]).any())
+                    graph[i], gd[i] = new, alld[sel]
+            if changed == 0:
+                break
+        return cls(data=X, graph=graph, distance=distance)
+
+    def search(self, queries, *, k: int = 10, n_seeds: int = 10,
+               max_steps: int = 30, seed: int = 0):
+        Q = np.asarray(queries, np.float32)
+        dist = dist_lib.get(self.distance)
+        rng = np.random.default_rng(seed)
+        n = len(self.data)
+        out_d = np.full((len(Q), k), np.inf, np.float32)
+        out_i = np.full((len(Q), k), -1, np.int64)
+        for qi in range(len(Q)):
+            visited = set()
+            frontier = list(rng.integers(0, n, n_seeds))
+            best: list[tuple[float, int]] = []
+            for _ in range(max_steps):
+                fresh = [i for i in frontier if i not in visited]
+                if not fresh:
+                    break
+                visited.update(fresh)
+                d = _pair_dists(dist, Q[qi:qi + 1],
+                                self.data[np.asarray(fresh)])[0]
+                best.extend(zip(d.tolist(), fresh))
+                best = sorted(set(best))[:k]
+                # expand from the current best unexpanded nodes
+                frontier = list(self.graph[[i for _, i in best]].reshape(-1))
+            for j, (d_, i_) in enumerate(best[:k]):
+                out_d[qi, j], out_i[qi, j] = d_, i_
+        return out_d, out_i

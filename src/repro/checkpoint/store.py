@@ -1,0 +1,178 @@
+"""Checkpoint store: atomic, async, elastic.
+
+Format: one directory per step —
+
+    <dir>/step_000123/
+        manifest.json   # tree structure, shapes, dtypes, format version
+        arrays.npz      # flat {path -> ndarray}, full logical arrays
+    <dir>/latest        # text file naming the newest complete step
+
+Properties:
+
+* **atomic** — written into ``step_X.tmp-<pid>`` then ``os.replace``d; the
+  ``latest`` pointer is updated only after the directory rename, so a crash
+  mid-write never corrupts a restorable checkpoint.
+* **async**  — ``CheckpointManager.save_async`` snapshots to host memory
+  (device->host copy) synchronously, then serialises on a writer thread;
+  the training step resumes immediately.
+* **elastic** — arrays are stored as *full logical* values; ``load`` places
+  them against whatever sharding the *restoring* mesh requests. Restoring a
+  512-chip checkpoint onto 256 chips (or 8) is the same code path —
+  re-sharding happens in ``jax.device_put``. (At true scale this would be a
+  per-shard format + resharding service; single-process here, same API.)
+* **self-pruning** — keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_FORMAT = 2
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    """Blocking atomic save of a pytree of (device or host) arrays."""
+    os.makedirs(directory, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    treedef = jax.tree.structure(tree)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = dict(
+        version=_FORMAT,
+        step=step,
+        treedef=str(treedef),
+        keys={k: dict(shape=list(v.shape), dtype=str(v.dtype))
+              for k, v in flat.items()},
+        written_at=time.time(),
+    )
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # latest pointer (atomic via temp + replace)
+    lp = os.path.join(directory, "latest")
+    with open(lp + ".tmp", "w") as f:
+        f.write(f"step_{step:09d}")
+    os.replace(lp + ".tmp", lp)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and "tmp-" not in d
+    )
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    lp = os.path.join(directory, "latest")
+    if not os.path.exists(lp):
+        return None
+    with open(lp) as f:
+        name = f.read().strip()
+    path = os.path.join(directory, name)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def load_checkpoint(directory: str, template, *, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into ``template``'s tree structure; optionally re-shard.
+
+    ``shardings``: pytree of Shardings (same structure) — the elastic path:
+    the stored full arrays are placed against the *current* mesh, whatever
+    its size.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    z = np.load(os.path.join(path, "arrays.npz"))
+    flat_template = _flatten(template)
+    missing = set(flat_template) - set(z.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    flat = {k: z[k] for k in flat_template}
+    leaves = [flat[k] for k in flat_template]  # template order
+    tree = jax.tree.unflatten(jax.tree.structure(template), leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step
+
+
+class CheckpointManager:
+    """Async wrapper: snapshot synchronously, serialise on a worker thread."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree):
+        self.wait()  # one in-flight save at a time
+        host = jax.tree.map(lambda a: np.asarray(a), tree)  # snapshot now
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host, keep=self.keep)
+                with self._lock:
+                    self.last_saved = step
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def restore_or_none(self, template, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return load_checkpoint(self.directory, template, step=step,
+                               shardings=shardings)

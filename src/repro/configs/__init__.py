@@ -1,0 +1,23 @@
+"""Architecture configs (one module per assigned arch + the paper's own).
+
+Resolve with ``repro.configs.get_arch("<id>")``; list with ``arch_ids()``;
+enumerate the dry-run matrix with ``all_cells()``.
+"""
+
+from repro.configs.base import (
+    ArchDef,
+    ShapeSpec,
+    all_cells,
+    arch_ids,
+    get_arch,
+    register_arch,
+)
+
+__all__ = [
+    "ArchDef",
+    "ShapeSpec",
+    "all_cells",
+    "arch_ids",
+    "get_arch",
+    "register_arch",
+]

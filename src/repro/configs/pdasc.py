@@ -1,0 +1,46 @@
+"""pdasc [paper] — the paper's own architecture: the distributed multilevel
+ANN index itself, as dry-run cells.
+
+  build_1m   — sharded MSA: every device builds its sub-index over its slice
+               of a 2^20 x 100 database (GLOVE-scale, the paper's largest).
+  search_1m  — sharded NSA: 4096 queries fan out, per-device dense search,
+               butterfly top-k merge (k=10, the paper's 10-NN protocol).
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchDef, ShapeSpec, register_arch
+
+
+@dataclasses.dataclass(frozen=True)
+class PDASCArchConfig:
+    name: str = "pdasc"
+    n: int = 1 << 20  # database size (padded power of two: shards evenly)
+    d: int = 100  # GLOVE dimensionality
+    gl: int = 1024  # group length (paper Table 2 uses 1000; padded to 2^10)
+    distance: str = "euclidean"
+    method: str = "pam"
+    k: int = 10  # neighbours (paper protocol: 10-NN)
+    n_queries: int = 4096
+    radius: float = 13.0  # paper Table 2, GLOVE euclidean
+
+
+def config() -> PDASCArchConfig:
+    return PDASCArchConfig()
+
+
+def smoke_config() -> PDASCArchConfig:
+    return PDASCArchConfig(name="pdasc-smoke", n=512, d=8, gl=32,
+                           n_queries=16, radius=2.0)
+
+
+SHAPES = {
+    "build_1m": ShapeSpec("build_1m", "build", dict(n=1 << 20, d=100)),
+    "search_1m": ShapeSpec("search_1m", "search",
+                           dict(n=1 << 20, d=100, n_queries=4096, k=10)),
+}
+
+register_arch(ArchDef(
+    id="pdasc", family="pdasc", config_fn=config, smoke_fn=smoke_config,
+    shapes=SHAPES, source="the paper",
+))

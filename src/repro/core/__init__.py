@@ -1,0 +1,28 @@
+"""PDASC core — the paper's contribution as a composable JAX module.
+
+Public surface:
+  distances   — arbitrary-dissimilarity registry (paper §3.2)
+  kmedoids    — vectorised PAM / FasterPAM-style clustering (paper §3.3.1)
+  kmeans      — Euclidean baseline clusterer (paper §3.3)
+  msa         — Multilevel Structure Algorithm (paper Algorithm 1)
+  nsa         — Neighbours Search Algorithm (paper Algorithm 2)
+  index       — PDASCIndex user-facing API
+  radius      — CDF radius estimation + per-level dynamic radii
+  distributed — sharded build / search / global top-k merge
+"""
+
+from repro.core import distances
+from repro.core.index import PDASCIndex
+from repro.core.msa import PDASCIndexData, PDASCLevel, build_index
+from repro.core.nsa import SearchResult, search_beam, search_dense
+
+__all__ = [
+    "distances",
+    "PDASCIndex",
+    "PDASCIndexData",
+    "PDASCLevel",
+    "build_index",
+    "SearchResult",
+    "search_beam",
+    "search_dense",
+]

@@ -1,0 +1,296 @@
+"""Distributed PDASC: sharded build, sharded search, global top-k merge.
+
+The paper's deployment model (§3.1): the dataset is randomly partitioned
+across computational nodes; each node clusters its own groups; a query fans
+out to the nodes and the per-node results are combined. On a TPU mesh this
+maps to (DESIGN.md §3.4):
+
+* **build**  — ``shard_map`` over the database axes: every device runs MSA on
+  its local shard and owns an independent sub-index (exactly the paper's
+  "groups distributed across nodes" — a PDASC index *is* a forest of
+  per-partition trees; stacking sub-indexes adds one more implicit level).
+* **search** — queries are replicated across the database axes (each device
+  answers against its shard), then the per-device top-k are merged globally.
+
+Top-k merge operators (the collective hot path):
+
+``topk_merge_allgather``
+    one ``all_gather`` of ``[B, k]`` pairs -> every device selects from
+    ``P*k`` candidates. Bytes received per device: ``(P-1) * B * k * 8``.
+
+``topk_merge_butterfly``
+    recursive-halving butterfly: ``log2(P)`` ``ppermute`` rounds, each
+    exchanging exactly ``B * k`` pairs with the round's partner and merging.
+    Bytes received per device: ``log2(P) * B * k * 8`` — an ``(P-1)/log2(P)``x
+    reduction (e.g. 51x at P=256). This is the beyond-paper collective
+    optimisation benchmarked in EXPERIMENTS.md §Perf.
+
+Hierarchical meshes merge axis-by-axis (fast intra-pod axis first, then the
+slow ``pod`` axis), so inter-pod traffic is a single butterfly at ``B * k``
+pairs per hop.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import distances as dist_lib
+from repro.core import msa, nsa
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+try:  # jax >= 0.6 top-level API
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+
+
+# ---------------------------------------------------------------------------
+# Global top-k merge collectives
+# ---------------------------------------------------------------------------
+
+
+def topk_merge_allgather(dists: Array, ids: Array, axis_name: str, k: int):
+    """Naive merge: all_gather every shard's [B, k] then select."""
+    gd = jax.lax.all_gather(dists, axis_name, axis=0)  # [P, B, k]
+    gi = jax.lax.all_gather(ids, axis_name, axis=0)
+    Pn = gd.shape[0]
+    gd = jnp.moveaxis(gd, 0, -2).reshape(*dists.shape[:-1], Pn * k)
+    gi = jnp.moveaxis(gi, 0, -2).reshape(*ids.shape[:-1], Pn * k)
+    neg, idx = jax.lax.top_k(-gd, k)
+    return -neg, jnp.take_along_axis(gi, idx, axis=-1)
+
+
+def topk_merge_butterfly(dists: Array, ids: Array, axis_name: str, k: int):
+    """Butterfly (recursive-doubling) merge: log2(P) ppermute rounds.
+
+    After round t every device holds the top-k over its 2^(t+1)-device
+    sub-cube; after log2(P) rounds all devices hold the global top-k
+    (replicated). Requires a power-of-two axis size.
+    """
+    Pn = jax.lax.axis_size(axis_name)
+    if Pn & (Pn - 1):
+        raise ValueError(f"butterfly merge needs power-of-two axis, got {Pn}")
+    rounds = int(math.log2(Pn))
+    for t in range(rounds):
+        perm = [(i, i ^ (1 << t)) for i in range(Pn)]
+        od = jax.lax.ppermute(dists, axis_name, perm)
+        oi = jax.lax.ppermute(ids, axis_name, perm)
+        cd = jnp.concatenate([dists, od], axis=-1)
+        ci = jnp.concatenate([ids, oi], axis=-1)
+        neg, idx = jax.lax.top_k(-cd, k)
+        dists = -neg
+        ids = jnp.take_along_axis(ci, idx, axis=-1)
+    return dists, ids
+
+
+def topk_merge(dists, ids, axis_names: Sequence[str], k: int, *, method="butterfly"):
+    """Merge across several mesh axes, fastest axis first."""
+    fn = topk_merge_butterfly if method == "butterfly" else topk_merge_allgather
+    for ax in axis_names:
+        dists, ids = fn(dists, ids, ax, k)
+    return dists, ids
+
+
+# ---------------------------------------------------------------------------
+# Sharded MSA build
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _shard_index(axes: Sequence[str]):
+    """Linear shard index across (possibly several) mesh axes."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def build_sharded(
+    data: Array,
+    mesh: Mesh,
+    *,
+    db_axes: Sequence[str] = ("data",),
+    gl: int,
+    n_prototypes: Optional[int] = None,
+    distance="euclidean",
+    method: str = "pam",
+    max_swaps: int = 64,
+    key: Optional[Array] = None,
+    row_chunk: int = 512,
+):
+    """Build one PDASC sub-index per device shard.
+
+    ``data``: [n, d] with ``n`` divisible by the product of ``db_axes`` sizes.
+    Returns a stacked ``PDASCIndexData`` whose every leaf has a leading
+    per-shard axis of size P (sharded over ``db_axes``).
+    """
+    Pn = _axes_size(mesh, db_axes)
+    n, d = data.shape
+    if n % Pn:
+        raise ValueError(f"n={n} not divisible by shard count {Pn}")
+    per = n // Pn
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec_in = P(tuple(db_axes), None, None)
+
+    def _build_local(local, k_local):  # local: [1, per, d]
+        index, _ = msa.build_index_arrays(
+            local[0],
+            gl=gl,
+            n_prototypes=n_prototypes,
+            distance=distance,
+            method=method,
+            max_swaps=max_swaps,
+            key=k_local,
+            row_chunk=row_chunk,
+        )
+        return jax.tree.map(lambda a: a[None], index)
+
+    def body(local):
+        shard = _shard_index(db_axes)
+        return _build_local(local, jax.random.fold_in(key, shard))
+
+    # out_specs: same tree as the body's output, every leaf sharded over the
+    # database axes (evaluated without the axis_index, which needs the mesh).
+    shape_tree = jax.eval_shape(
+        functools.partial(_build_local, k_local=key),
+        jax.ShapeDtypeStruct((1, per, d), jnp.float32),
+    )
+    out_spec = jax.tree.map(lambda _: P(tuple(db_axes)), shape_tree)
+    fn = shard_map(body, mesh, in_specs=(spec_in,), out_specs=out_spec)
+    return fn(data.reshape(Pn, per, d).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Sharded NSA search
+# ---------------------------------------------------------------------------
+
+
+def search_sharded(
+    sharded_index: msa.PDASCIndexData,
+    Q: Array,
+    mesh: Mesh,
+    *,
+    db_axes: Sequence[str] = ("data",),
+    dist,
+    k: int = 10,
+    r,
+    mode: str = "dense",
+    beam: int = 32,
+    max_children: Optional[tuple] = None,
+    merge: str = "butterfly",
+    leaf_radius_filter: bool = False,
+    with_stats: bool = True,
+) -> nsa.SearchResult:
+    """Distributed NSA: per-shard search + global top-k merge.
+
+    Queries are replicated over ``db_axes`` (every shard answers against its
+    own sub-index); returned ids are *global* dataset rows (shard-offset
+    applied). Output is replicated.
+    """
+    dist = dist_lib.get(dist)
+
+    # Per-shard leaf slot count -> global row offset per shard.
+    n_leaf_local = sharded_index.leaf_ids.shape[1]
+
+    def body(index_stacked, Qr):
+        index = jax.tree.map(lambda a: a[0], index_stacked)
+        shard = _shard_index(db_axes)
+        if mode == "dense":
+            res = nsa.search_dense(
+                index, Qr, dist=dist, k=k, r=r,
+                leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
+            )
+        else:
+            res = nsa.search_beam(
+                index, Qr, dist=dist, k=k, r=r, beam=beam,
+                max_children=max_children, leaf_radius_filter=leaf_radius_filter,
+            )
+        # leaf_ids are local rows of this shard's slice; lift to global rows.
+        # NOTE: the shard's local shuffle permutes only within the shard, so
+        # global_row = shard * per_shard_n + local_row.
+        per_shard_n = jnp.int32(n_leaf_local)
+        gids = jnp.where(res.ids >= 0, res.ids + shard * per_shard_n, -1)
+        d_m, i_m = topk_merge(res.dists, gids, tuple(db_axes), k, method=merge)
+        nc = jax.lax.psum(res.n_candidates, tuple(db_axes))
+        return nsa.SearchResult(dists=d_m, ids=i_m, n_candidates=nc)
+
+    in_specs = (
+        jax.tree.map(lambda _: P(tuple(db_axes)), sharded_index),
+        P(),  # queries replicated
+    )
+    out_specs = nsa.SearchResult(dists=P(), ids=P(), n_candidates=P())
+    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
+    # keep the caller's dtype: bf16 queries + bf16 index points -> bf16
+    # distance math (the §Perf H3 memory-halving path)
+    return fn(sharded_index, jnp.asarray(Q))
+
+
+# ---------------------------------------------------------------------------
+# Distributed exact k-NN (ground truth / retrieval_cand scoring)
+# ---------------------------------------------------------------------------
+
+
+def exact_knn_sharded(
+    DB: Array,
+    Q: Array,
+    mesh: Mesh,
+    *,
+    db_axes: Sequence[str] = ("data",),
+    distance="l2",
+    k: int = 10,
+    merge: str = "butterfly",
+):
+    """Brute-force distributed k-NN: shard the database, replicate queries,
+    per-shard fused distance+top-k, global merge. The exact baseline every
+    recall number is measured against, and the ``retrieval_cand`` scorer."""
+    form = distance if distance in kref.FORMS else None
+    dist = None if form else dist_lib.get(distance)
+    Pn = _axes_size(mesh, db_axes)
+    n, d = DB.shape
+    if n % Pn:
+        raise ValueError(f"n={n} not divisible by {Pn}")
+    per = n // Pn
+
+    def body(db_local, Qr):
+        db = db_local[0]
+        shard = _shard_index(db_axes)
+        if form is not None:
+            D = kref.pairwise_ref(Qr, db, form)
+        else:
+            D = dist.pairwise(Qr, db)
+        neg, idx = jax.lax.top_k(-D, k)
+        gids = idx.astype(jnp.int32) + shard * jnp.int32(per)
+        return topk_merge(-neg, gids, tuple(db_axes), k, method=merge)
+
+    fn = shard_map(
+        body,
+        mesh,
+        in_specs=(P(tuple(db_axes), None, None), P()),
+        out_specs=(P(), P()),
+    )
+    return fn(DB.reshape(Pn, per, d), jnp.asarray(Q, jnp.float32))

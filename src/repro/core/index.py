@@ -1,0 +1,211 @@
+"""PDASCIndex — the user-facing index API.
+
+Wraps MSA build, NSA search (dense / beam), radius estimation and
+save / load. This is the object the examples, benchmarks and the serving
+engine hold.
+
+    idx = PDASCIndex.build(data, gl=1000, distance="cosine")
+    res = idx.search(queries, k=10, r=idx.default_radius)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core import msa, nsa, radius as radius_lib
+
+Array = jax.Array
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class PDASCIndex:
+    data: msa.PDASCIndexData
+    stats: msa.BuildStats
+    distance: dist_lib.Distance
+    gl: int
+    n_prototypes: int
+    max_children: tuple[int, ...]
+    default_radius: float
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        dataset,
+        *,
+        gl: int,
+        n_prototypes: Optional[int] = None,
+        distance="euclidean",
+        method: str = "pam",
+        max_swaps: int = 64,
+        key: Optional[Array] = None,
+        radius_quantile: float = 0.05,
+        row_chunk: int = 512,
+        shuffle: bool = True,
+    ) -> "PDASCIndex":
+        dist = dist_lib.get(distance)
+        k_protos = n_prototypes or gl // 2
+        data, stats = msa.build_index(
+            dataset,
+            gl=gl,
+            n_prototypes=k_protos,
+            distance=dist,
+            method=method,
+            max_swaps=max_swaps,
+            key=key,
+            row_chunk=row_chunk,
+            shuffle=shuffle,
+        )
+        default_r = radius_lib.estimate_radius(
+            jnp.asarray(dataset, jnp.float32), dist, quantile=radius_quantile
+        )
+        return cls(
+            data=data,
+            stats=stats,
+            distance=dist,
+            gl=gl,
+            n_prototypes=k_protos,
+            max_children=msa.max_children(data),
+            default_radius=default_r,
+        )
+
+    # -- search ---------------------------------------------------------------
+
+    def search(
+        self,
+        queries,
+        *,
+        k: int = 10,
+        r: Optional[float] = None,
+        mode: str = "beam",
+        beam: int | tuple = 32,
+        leaf_radius_filter: bool = False,
+    ) -> nsa.SearchResult:
+        """k-ANN search. ``mode``: "beam" (pruned) or "dense" (faithful)."""
+        Q = jnp.asarray(queries, jnp.float32)
+        r = float(r) if r is not None else self.default_radius
+        if mode == "dense":
+            return nsa.search_dense(
+                self.data,
+                Q,
+                dist=self.distance,
+                k=k,
+                r=r,
+                leaf_radius_filter=leaf_radius_filter,
+            )
+        if mode == "beam":
+            return nsa.search_beam(
+                self.data,
+                Q,
+                dist=self.distance,
+                k=k,
+                r=r,
+                beam=beam,
+                max_children=self.max_children,
+                leaf_radius_filter=leaf_radius_filter,
+            )
+        raise ValueError(f"unknown search mode {mode!r}")
+
+    def per_level_radii(self, *, quantile: float = 0.5) -> tuple[float, ...]:
+        return radius_lib.per_level_radii(
+            self.data, self.distance,
+            base_radius=self.default_radius, quantile=quantile,
+        )
+
+    # -- stats ----------------------------------------------------------------
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.data.levels)
+
+    @property
+    def n_points(self) -> int:
+        return int(np.asarray(self.data.levels[0].valid).sum())
+
+    def describe(self) -> str:
+        lines = [
+            f"PDASCIndex(distance={self.distance.name}, gl={self.gl}, "
+            f"nPrototypes={self.n_prototypes}, levels={self.n_levels})"
+        ]
+        for l, (size, td) in enumerate(
+            zip(self.stats.level_sizes, self.stats.level_td)
+        ):
+            slots = self.data.levels[l].points.shape[0]
+            lines.append(f"  level {l}: {size} valid / {slots} slots, TD={td:.4g}")
+        return "\n".join(lines)
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Atomic save: ``<path>.npz`` (arrays) + ``<path>.json`` (metadata)."""
+        arrays = {"leaf_ids": np.asarray(self.data.leaf_ids)}
+        for l, lv in enumerate(self.data.levels):
+            for field in lv._fields:
+                arrays[f"level{l}_{field}"] = np.asarray(getattr(lv, field))
+        meta = dict(
+            version=_FORMAT_VERSION,
+            distance=self.distance.name,
+            gl=self.gl,
+            n_prototypes=self.n_prototypes,
+            n_levels=self.n_levels,
+            max_children=list(self.max_children),
+            default_radius=self.default_radius,
+            level_sizes=list(self.stats.level_sizes),
+            level_td=list(self.stats.level_td),
+        )
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(d, exist_ok=True)
+        with tempfile.NamedTemporaryFile(dir=d, suffix=".npz", delete=False) as f:
+            np.savez_compressed(f, **arrays)
+            tmp = f.name
+        os.replace(tmp, path + ".npz")
+        with tempfile.NamedTemporaryFile(
+            "w", dir=d, suffix=".json", delete=False
+        ) as f:
+            json.dump(meta, f)
+            tmp = f.name
+        os.replace(tmp, path + ".json")
+
+    @classmethod
+    def load(cls, path: str) -> "PDASCIndex":
+        with open(path + ".json") as f:
+            meta = json.load(f)
+        if meta["version"] != _FORMAT_VERSION:
+            raise ValueError(f"unsupported index version {meta['version']}")
+        z = np.load(path + ".npz")
+        levels = []
+        for l in range(meta["n_levels"]):
+            levels.append(
+                msa.PDASCLevel(
+                    **{f: jnp.asarray(z[f"level{l}_{f}"]) for f in msa.PDASCLevel._fields}
+                )
+            )
+        data = msa.PDASCIndexData(
+            levels=tuple(levels), leaf_ids=jnp.asarray(z["leaf_ids"])
+        )
+        stats = msa.BuildStats(
+            level_sizes=tuple(meta["level_sizes"]),
+            level_td=tuple(meta["level_td"]),
+            n_levels=meta["n_levels"],
+        )
+        return cls(
+            data=data,
+            stats=stats,
+            distance=dist_lib.get(meta["distance"]),
+            gl=meta["gl"],
+            n_prototypes=meta["n_prototypes"],
+            max_children=tuple(meta["max_children"]),
+            default_radius=meta["default_radius"],
+        )

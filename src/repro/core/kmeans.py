@@ -1,0 +1,116 @@
+"""Masked, vmappable k-means (Lloyd) — the Euclidean-only baseline clusterer.
+
+The paper's §3.3 argues k-means is intrinsically tied to squared-Euclidean
+minimisation and therefore unsuitable for arbitrary-distance indexing; we ship
+it (a) as the clusterer for the IVF-Flat comparison baseline and (b) so the
+recall benchmarks can demonstrate that claim empirically (k-means-built PDASC
+index vs k-medoids-built under non-Euclidean distances).
+
+Centroids are means, not data points — after clustering, callers that need
+*prototypes that are data points* (MSA does) snap each centroid to the nearest
+valid in-group point.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import BIG
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    centroids: Array  # f32[k, d]
+    labels: Array  # int32[g]  (-1 for invalid points)
+    inertia: Array  # f32[]
+    snapped: Array  # int32[k] index of nearest valid point per centroid (-1 unused)
+
+
+def _plus_plus_init(X: Array, k: int, valid: Array, key: Array) -> Array:
+    """k-means++ seeding restricted to valid points."""
+    g = X.shape[0]
+
+    def body(i, carry):
+        centroids, d2, key = carry
+        key, sub = jax.random.split(key)
+        probs = jnp.where(valid, d2, 0.0)
+        total = jnp.sum(probs)
+        # Degenerate (all zero) -> uniform over valid.
+        probs = jnp.where(total > 0, probs / jnp.maximum(total, 1e-30),
+                          valid / jnp.maximum(jnp.sum(valid), 1))
+        idx = jax.random.choice(sub, g, p=probs)
+        c = X[idx]
+        centroids = centroids.at[i].set(c)
+        nd2 = jnp.sum((X - c[None, :]) ** 2, axis=-1)
+        return centroids, jnp.minimum(d2, nd2), key
+
+    key, sub = jax.random.split(key)
+    first = jax.random.choice(sub, g, p=valid / jnp.maximum(jnp.sum(valid), 1))
+    c0 = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[first])
+    d2_0 = jnp.sum((X - X[first][None, :]) ** 2, axis=-1)
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (c0, d2_0, key))
+    return centroids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(
+    X: Array,
+    k: int,
+    valid: Array | None = None,
+    *,
+    key: Array | None = None,
+    iters: int = 25,
+) -> KMeansResult:
+    """Lloyd's algorithm on one (padded) group."""
+    g, d = X.shape
+    if valid is None:
+        valid = jnp.ones((g,), bool)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    X = X.astype(jnp.float32)
+    vf = valid.astype(jnp.float32)
+
+    centroids = _plus_plus_init(X, k, valid, key)
+
+    def body(_, centroids):
+        d2 = (
+            jnp.sum(X * X, axis=1)[:, None]
+            + jnp.sum(centroids * centroids, axis=1)[None, :]
+            - 2.0 * X @ centroids.T
+        )
+        labels = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32) * vf[:, None]
+        counts = jnp.sum(onehot, axis=0)  # [k]
+        sums = onehot.T @ X  # [k, d]
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # Empty clusters keep their previous centroid.
+        return jnp.where(counts[:, None] > 0, new, centroids)
+
+    centroids = jax.lax.fori_loop(0, iters, body, centroids)
+
+    d2 = (
+        jnp.sum(X * X, axis=1)[:, None]
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+        - 2.0 * X @ centroids.T
+    )
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.where(valid, jnp.min(d2, axis=1), 0.0))
+    labels = jnp.where(valid, labels, -1)
+
+    # Snap each centroid to its nearest valid data point (prototype-as-point).
+    d2p = jnp.where(valid[:, None], d2, BIG)  # [g, k]
+    snapped = jnp.argmin(d2p, axis=0).astype(jnp.int32)
+    return KMeansResult(centroids=centroids, labels=labels, inertia=inertia,
+                        snapped=snapped)
+
+
+def kmeans_grouped(Xg: Array, k: int, valid: Array, *, key: Array, iters: int = 25):
+    """vmap of :func:`kmeans` over a leading groups axis."""
+    keys = jax.random.split(key, Xg.shape[0])
+    fn = functools.partial(kmeans, k=k, iters=iters)
+    return jax.vmap(lambda x, v, kk: fn(x, v, key=kk))(Xg, valid, keys)

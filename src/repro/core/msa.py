@@ -1,0 +1,377 @@
+"""MSA — Multilevel Structure Algorithm (paper Algorithm 1), in JAX.
+
+Bottom-up index construction:
+
+  1. Randomly permute the dataset and split it into groups of ``gl`` points
+     (one group == one worker shard in the paper's distributed deployment).
+  2. Cluster every group into ``nPrototypes = gl // 2`` medoids (2:1 ratio,
+     paper §3.1) with an arbitrary-distance clusterer (k-medoids by default).
+  3. The medoids become the next level's points; regroup and repeat until a
+     single group remains. Its medoids form the top level.
+
+Groups holding ``<= nPrototypes`` valid points promote *all* their points
+(the paper's outlier-preservation rule) — this falls out of the masked
+k-medoids (`build` fills only ``n_valid`` slots).
+
+TPU adaptation (DESIGN.md §3): every level is a *static-shape* array with a
+validity mask; groups are padded, never ragged. After clustering, each level
+is reordered **sibling-contiguous** (points sorted by their cluster slot within
+each group) so that the children of any prototype occupy one contiguous slice
+``[child_start, child_start + child_count)`` of the level below — this is what
+lets the beam searcher gather candidate blocks with static shapes instead of
+chasing ragged lists.
+
+The per-level work is one jitted function; the host only loops over the
+(statically known) level count. Under pjit with the groups axis sharded, each
+device clusters its own groups — MSA's distributed build.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core import kmedoids as km
+from repro.core import kmeans as kmeans_lib
+
+Array = jax.Array
+
+
+class PDASCLevel(NamedTuple):
+    """One level of the multilevel index (leaf = level 0).
+
+    All arrays are in the level's *final* (sibling-contiguous) layout.
+    """
+
+    points: Array  # f32[n_l, d]
+    valid: Array  # bool[n_l]
+    parent: Array  # int32[n_l] — slot in level l+1 (-1 at the top level)
+    child_start: Array  # int32[n_l] — slice start into level l-1 (-1 at leaf)
+    child_count: Array  # int32[n_l]
+
+
+class PDASCIndexData(NamedTuple):
+    """The full index: levels[0] is the leaf (data) level, levels[-1] the top."""
+
+    levels: tuple[PDASCLevel, ...]
+    leaf_ids: Array  # int32[n_0] — original dataset row of each leaf slot
+
+
+class BuildStats(NamedTuple):
+    level_sizes: tuple[int, ...]  # valid item count per level
+    level_td: tuple[float, ...]  # summed clustering TD per level
+    n_levels: int
+
+
+def _pad_to(x: Array, n: int, fill=0):
+    pad = n - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _group_pairwise(dist: dist_lib.Distance, grp_pts: Array, grp_valid: Array,
+                    row_chunk: int) -> Array:
+    """Masked per-group distance matrix [G, g, g] with bounded peak memory."""
+
+    def one(pts, vld):
+        D = dist_lib.pairwise_chunked(dist, pts, pts, chunk=row_chunk)
+        return dist_lib.mask_invalid(D, vld, vld)
+
+    return jax.vmap(one)(grp_pts, grp_valid)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dist", "gl", "k", "method", "max_swaps", "row_chunk"),
+)
+def _build_level(
+    points: Array,  # [n, d] current level items, initial layout
+    valid: Array,  # [n]
+    carry_a: Array,  # [n] int32 — leaf: original ids; upper: child_start
+    carry_b: Array,  # [n] int32 — leaf: unused(-1);   upper: child_count
+    key: Array,
+    *,
+    dist: dist_lib.Distance,
+    gl: int,
+    k: int,
+    method: str,
+    max_swaps: int,
+    row_chunk: int,
+):
+    """Cluster one level. Returns the level's final-layout arrays, the
+    remap (initial->final) for fixing the lower level's parents, and the next
+    level's items in initial layout."""
+    n, d = points.shape
+    G = -(-n // gl)
+    n_pad = G * gl
+
+    pts = _pad_to(points, n_pad)
+    vld = _pad_to(valid, n_pad, fill=False)
+    ca = _pad_to(carry_a, n_pad, fill=-1)
+    cb = _pad_to(carry_b, n_pad, fill=0)
+
+    gpts = pts.reshape(G, gl, d)
+    gvld = vld.reshape(G, gl)
+
+    if method == "kmeans":
+        keys = jax.random.split(key, G)
+        res = jax.vmap(lambda x, v, kk: kmeans_lib.kmeans(x, k, v, key=kk))(
+            gpts, gvld, keys
+        )
+        medoids = jnp.where(
+            jnp.arange(k)[None, :]
+            < jnp.sum(gvld, axis=1, dtype=jnp.int32)[:, None].clip(max=k),
+            res.snapped,
+            -1,
+        )
+        # Re-derive labels against the snapped medoids so labels index medoid
+        # slots (k-means labels index centroids, which we replaced).
+        def relabel(pts_g, vld_g, med_g):
+            D = dist.pairwise(pts_g, pts_g)
+            D = dist_lib.mask_invalid(D, vld_g, vld_g)
+            cols = jnp.where(
+                med_g[None, :] >= 0,
+                jnp.take(D, jnp.clip(med_g, 0, gl - 1), axis=1),
+                dist_lib.BIG,
+            )
+            lbl = jnp.argmin(cols, axis=1).astype(jnp.int32)
+            return jnp.where(vld_g, lbl, -1)
+
+        labels = jax.vmap(relabel)(gpts, gvld, medoids)
+        td = jnp.zeros((G,), jnp.float32)
+    else:
+        Dg = _group_pairwise(dist, gpts, gvld, row_chunk)
+        res = km.kmedoids_grouped(Dg, k, gvld, method=method, max_swaps=max_swaps)
+        medoids, labels, td = res.medoids, res.labels, res.td
+
+    # --- sibling-contiguous reorder within each group -----------------------
+    sort_key = jnp.where(labels >= 0, labels, k)  # invalid slots last
+    order = jnp.argsort(sort_key, axis=1, stable=True)  # [G, gl]
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+
+    labels_f = take(labels)
+    gpts_f = jnp.take_along_axis(gpts, order[:, :, None], axis=1)
+    gvld_f = take(gvld)
+    ca_f = take(ca.reshape(G, gl))
+    cb_f = take(cb.reshape(G, gl))
+
+    # initial->final remap: item at (g, j) moved to (g, pos) where
+    # order[g, pos] = j.
+    inv = jnp.argsort(order, axis=1)  # [G, gl]; inv[g, j] = new pos of j
+    base = (jnp.arange(G) * gl)[:, None]
+    remap = (base + inv).reshape(-1)  # [n_pad] initial slot -> final slot
+
+    # parent slot (into next level's initial layout) of each final-layout item
+    parent = jnp.where(
+        labels_f >= 0, base * 0 + (jnp.arange(G) * k)[:, None] + labels_f, -1
+    ).astype(jnp.int32)
+
+    # --- children bookkeeping for the next level's items --------------------
+    onehot = jax.nn.one_hot(jnp.where(labels_f >= 0, labels_f, k), k + 1,
+                            dtype=jnp.int32)
+    counts = jnp.sum(onehot, axis=1)[:, :k]  # [G, k] valid children per slot
+    starts = (
+        jnp.cumsum(counts, axis=1) - counts + (jnp.arange(G) * gl)[:, None]
+    ).astype(jnp.int32)
+
+    # --- next level items: the medoid points (initial layout) ---------------
+    med_safe = jnp.clip(medoids, 0, gl - 1)
+    # medoids index the *initial* within-group layout; map through inv.
+    med_final = jnp.take_along_axis(inv, med_safe, axis=1)
+    next_pts = jnp.take_along_axis(gpts_f, med_final[:, :, None], axis=1)
+    next_valid = medoids >= 0
+
+    level_arrays = dict(
+        points=gpts_f.reshape(n_pad, d),
+        valid=gvld_f.reshape(n_pad),
+        parent=parent.reshape(n_pad),
+        carry_a=ca_f.reshape(n_pad),
+        carry_b=cb_f.reshape(n_pad),
+    )
+    next_arrays = dict(
+        points=next_pts.reshape(G * k, d),
+        valid=next_valid.reshape(G * k),
+        child_start=starts.reshape(G * k),
+        child_count=counts.reshape(G * k).astype(jnp.int32),
+    )
+    return level_arrays, next_arrays, remap, jnp.sum(td)
+
+
+def n_levels_for(n: int, gl: int, k: Optional[int] = None) -> int:
+    """Number of clustered levels MSA will produce for ``n`` points."""
+    k = k or gl // 2
+    levels = 0
+    while True:
+        G = -(-n // gl)
+        levels += 1
+        n = G * k
+        if G == 1:
+            return levels
+
+
+def build_index_arrays(
+    data,
+    *,
+    gl: int,
+    n_prototypes: Optional[int] = None,
+    distance="euclidean",
+    method: str = "pam",
+    max_swaps: int = 64,
+    key: Optional[Array] = None,
+    row_chunk: int = 512,
+    shuffle: bool = True,
+) -> tuple[PDASCIndexData, tuple[Array, ...]]:
+    """Traceable MSA build: returns the index pytree + per-level TD scalars.
+
+    Contains no host-side array reads, so it can run inside ``jit`` /
+    ``shard_map`` (the distributed per-shard build). The level loop trips a
+    statically known number of times (a function of ``n``/``gl`` only).
+    """
+    dist = dist_lib.get(distance)
+    k = n_prototypes or gl // 2
+    if k < 1 or k > gl:
+        raise ValueError(f"need 1 <= n_prototypes <= gl, got {k} vs gl={gl}")
+    if dist.needs_dim is not None and data.shape[1] != dist.needs_dim:
+        raise ValueError(
+            f"distance {dist.name!r} needs d={dist.needs_dim}, got {data.shape[1]}"
+        )
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n, d = data.shape
+
+    data = jnp.asarray(data, jnp.float32)
+    if shuffle:
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n)
+    else:
+        perm = jnp.arange(n)
+    points = jnp.take(data, perm, axis=0)
+    valid = jnp.ones((n,), bool)
+    carry_a = perm.astype(jnp.int32)  # leaf: original row ids
+    carry_b = jnp.full((n,), -1, jnp.int32)
+
+    raw_levels: list[dict] = []  # final-layout arrays per level (leaf first)
+    level_td: list[Array] = []
+    next_cs = next_cc = None  # child_start/count travelling with items
+
+    while True:
+        G = -(-points.shape[0] // gl)
+        key, sub = jax.random.split(key)
+        level_arrays, next_arrays, remap, td = _build_level(
+            points,
+            valid,
+            carry_a,
+            carry_b,
+            sub,
+            dist=dist,
+            gl=gl,
+            k=k,
+            method=method,
+            max_swaps=max_swaps,
+            row_chunk=row_chunk,
+        )
+        # Fix the lower level's parent pointers through this level's reorder.
+        if raw_levels:
+            prev = raw_levels[-1]
+            p = prev["parent"]
+            prev["parent"] = jnp.where(p >= 0, remap[jnp.clip(p, 0, remap.shape[0] - 1)], -1)
+        if next_cs is None:  # leaf level: ids in carry_a, no children
+            level_arrays["child_start"] = jnp.full_like(level_arrays["carry_a"], -1)
+            level_arrays["child_count"] = jnp.zeros_like(level_arrays["carry_a"])
+            level_arrays["leaf_ids"] = level_arrays["carry_a"]
+        else:
+            level_arrays["child_start"] = level_arrays["carry_a"]
+            level_arrays["child_count"] = level_arrays["carry_b"]
+        raw_levels.append(level_arrays)
+        level_td.append(td)
+
+        points = next_arrays["points"]
+        valid = next_arrays["valid"]
+        carry_a = next_arrays["child_start"]
+        carry_b = next_arrays["child_count"]
+        next_cs, next_cc = carry_a, carry_b
+        if G == 1:
+            break
+
+    # Top level: the medoids of the final single group; never clustered.
+    top = dict(
+        points=points,
+        valid=valid,
+        parent=jnp.full((points.shape[0],), -1, jnp.int32),
+        child_start=next_cs,
+        child_count=next_cc,
+    )
+    raw_levels.append(top)
+
+    levels = []
+    for lv in raw_levels:
+        levels.append(
+            PDASCLevel(
+                points=lv["points"],
+                valid=lv["valid"],
+                parent=lv["parent"].astype(jnp.int32),
+                child_start=lv["child_start"].astype(jnp.int32),
+                child_count=lv["child_count"].astype(jnp.int32),
+            )
+        )
+    index = PDASCIndexData(levels=tuple(levels), leaf_ids=raw_levels[0]["leaf_ids"])
+    return index, tuple(level_td) + (jnp.float32(0.0),)
+
+
+def build_index(
+    data,
+    *,
+    gl: int,
+    n_prototypes: Optional[int] = None,
+    distance="euclidean",
+    method: str = "pam",
+    max_swaps: int = 64,
+    key: Optional[Array] = None,
+    row_chunk: int = 512,
+    shuffle: bool = True,
+) -> tuple[PDASCIndexData, BuildStats]:
+    """Build the PDASC multilevel index (MSA, Algorithm 1).
+
+    Args:
+      data: [n, d] dataset.
+      gl: group length (points per partition at each level).
+      n_prototypes: medoids per group; defaults to ``gl // 2`` (paper's 2:1).
+      distance: registered distance name or a ``Distance``.
+      method: "pam" | "alternate" | "build" | "kmeans".
+      row_chunk: row chunking for non-Gram pairwise matrices.
+    """
+    index, level_td = build_index_arrays(
+        data,
+        gl=gl,
+        n_prototypes=n_prototypes,
+        distance=distance,
+        method=method,
+        max_swaps=max_swaps,
+        key=key,
+        row_chunk=row_chunk,
+        shuffle=shuffle,
+    )
+    stats = BuildStats(
+        level_sizes=tuple(int(jnp.sum(lv.valid)) for lv in index.levels),
+        level_td=tuple(float(t) for t in level_td),
+        n_levels=len(index.levels),
+    )
+    return index, stats
+
+
+def max_children(index: PDASCIndexData) -> tuple[int, ...]:
+    """Per-level max cluster size (static gather width for beam search).
+
+    Entry ``l`` bounds the children (at level l-1) of any level-l prototype;
+    entry 0 is 0 (leaves have no children).
+    """
+    out = [0]
+    for lv in index.levels[1:]:
+        out.append(int(jnp.max(lv.child_count)))
+    return tuple(out)

@@ -1,0 +1,88 @@
+"""Search-radius estimation for NSA.
+
+The paper selects ``r`` per (dataset, distance) "based on measures that
+provide insight into the distribution of the dataset, such as the Cumulative
+Distribution Function or the maximum distance between elements" (§3.1), and
+lists *dynamic per-level adjustment* as future work (§5). Both are
+implemented here:
+
+* :func:`estimate_radius` — the CDF approach: sample pairwise distances, take
+  a quantile. Higher quantile => less restrictive => higher recall, more
+  candidates.
+* :func:`per_level_radii`  — the future-work item: prototypes at higher
+  levels summarise wider regions, so the radius that keeps the *expected
+  candidate frontier* constant grows with level. We scale the base radius by
+  the quantile of *prototype* distances at each level, estimated from the
+  built index itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as dist_lib
+from repro.core.msa import PDASCIndexData
+
+Array = jax.Array
+
+
+def sample_pairwise(
+    data: Array,
+    dist,
+    *,
+    n_pairs: int = 4096,
+    key: Optional[Array] = None,
+) -> Array:
+    """Distances of ``n_pairs`` random (i, j) pairs — a CDF sample."""
+    dist = dist_lib.get(dist)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = data.shape[0]
+    ka, kb = jax.random.split(key)
+    i = jax.random.randint(ka, (n_pairs,), 0, n)
+    j = jax.random.randint(kb, (n_pairs,), 0, n)
+    return dist.point(jnp.take(data, i, axis=0), jnp.take(data, j, axis=0))
+
+
+def estimate_radius(
+    data: Array,
+    dist,
+    *,
+    quantile: float = 0.05,
+    n_pairs: int = 4096,
+    key: Optional[Array] = None,
+) -> float:
+    """CDF-quantile radius (paper §3.1). ``quantile=0.05`` keeps roughly the
+    closest 5% of pairwise distances inside the search frontier."""
+    d = sample_pairwise(data, dist, n_pairs=n_pairs, key=key)
+    return float(jnp.quantile(d, quantile))
+
+
+def per_level_radii(
+    index: PDASCIndexData,
+    dist,
+    *,
+    base_radius: float,
+    quantile: float = 0.5,
+    key: Optional[Array] = None,
+) -> tuple[float, ...]:
+    """Dynamic per-level radii (paper future work).
+
+    Level l's radius is ``base_radius + q_l`` where ``q_l`` is the
+    ``quantile`` of each level-l prototype's distance to its parent prototype
+    — i.e. how far a true neighbour can drift from the representative that
+    summarises it. The leaf entry equals ``base_radius``.
+    """
+    dist = dist_lib.get(dist)
+    radii = [float(base_radius)]
+    for l in range(1, len(index.levels)):
+        lv = index.levels[l - 1]
+        up = index.levels[l]
+        parent = jnp.clip(lv.parent, 0, up.points.shape[0] - 1)
+        d = dist.point(lv.points, jnp.take(up.points, parent, axis=0))
+        d = jnp.where(lv.valid & (lv.parent >= 0), d, jnp.nan)
+        q = jnp.nanquantile(d, quantile)
+        radii.append(float(base_radius + q))
+    return tuple(radii)

@@ -1,0 +1,147 @@
+"""Literal (numpy, recursive) port of the paper's Algorithm 2 — NSA.
+
+This is the *faithfulness oracle*: a direct transcription of the paper's
+pseudocode — ragged candidate lists, Python recursion, per-level radius
+filtering, unfiltered leaf expansion — operating on the same built index as
+the JAX searchers. ``tests/test_msa_nsa.py`` asserts that
+``repro.core.nsa.search_dense`` returns identical neighbour sets.
+
+Intentionally slow and simple; never used in the hot path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core.msa import PDASCIndexData
+
+
+def _dist_np(dist: dist_lib.Distance, q: np.ndarray, pts: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    return np.asarray(dist.point(jnp.asarray(q)[None, :], jnp.asarray(pts)))
+
+
+def nsa_reference(
+    index: PDASCIndexData,
+    q,
+    *,
+    dist,
+    k: int = 10,
+    r: float,
+    leaf_radius_filter: bool = False,
+):
+    """Paper Algorithm 2 (NSA + ExploreCandidates), literally.
+
+    Returns (dists[k], ids[k]) ascending, padded with (inf, -1).
+    """
+    dist = dist_lib.get(dist)
+    q = np.asarray(q, np.float32)
+    levels = [
+        dict(
+            points=np.asarray(lv.points),
+            valid=np.asarray(lv.valid),
+            child_start=np.asarray(lv.child_start),
+            child_count=np.asarray(lv.child_count),
+        )
+        for lv in index.levels
+    ]
+    leaf_ids = np.asarray(index.leaf_ids)
+    L = len(levels) - 1
+
+    # --- top level: prototypes within the search radius ---------------------
+    top = levels[L]
+    d_top = _dist_np(dist, q, top["points"])
+    id_candidates = [
+        int(i) for i in np.nonzero(top["valid"] & (d_top < r))[0]
+    ]
+
+    # --- ExploreCandidates: recursive descent --------------------------------
+    def explore(id_candidates, level):
+        """Returns leaf slot indices mapped by the selected prototypes."""
+        out = []
+        for pid in id_candidates:
+            start = int(levels[level]["child_start"][pid])
+            count = int(levels[level]["child_count"][pid])
+            children = list(range(start, start + count))
+            if level - 1 == 0:
+                # "At the lowest level, return only the specific points mapped
+                # by idCandidates" — no radius re-check on leaf data points.
+                if leaf_radius_filter:
+                    pts = levels[0]["points"][children]
+                    dd = _dist_np(dist, q, pts)
+                    children = [c for c, d_ in zip(children, dd) if d_ < r]
+                out.extend(children)
+            else:
+                pts = levels[level - 1]["points"][children]
+                dd = _dist_np(dist, q, pts)
+                filtered = [c for c, d_ in zip(children, dd) if d_ < r]
+                if filtered:
+                    out.extend(explore(filtered, level - 1))
+        return out
+
+    if L == 0:
+        candidates = [int(i) for i in np.nonzero(top["valid"])[0]]
+    else:
+        candidates = explore(id_candidates, L)
+
+    # --- rank candidates, return k nearest -----------------------------------
+    candidates = sorted(set(candidates))
+    if not candidates:
+        return np.full((k,), np.inf, np.float32), np.full((k,), -1, np.int64)
+    pts = levels[0]["points"][candidates]
+    dd = _dist_np(dist, q, pts)
+    order = np.argsort(dd, kind="stable")[:k]
+    dists = dd[order]
+    ids = leaf_ids[np.asarray(candidates)[order]]
+    if len(order) < k:
+        pad = k - len(order)
+        dists = np.concatenate([dists, np.full((pad,), np.inf, np.float32)])
+        ids = np.concatenate([ids, np.full((pad,), -1, ids.dtype)])
+    return dists, ids
+
+
+def check_index_invariants(index: PDASCIndexData) -> list[str]:
+    """Structural invariants of an MSA index; returns a list of violations."""
+    errs = []
+    levels = index.levels
+    for l, lv in enumerate(levels):
+        valid = np.asarray(lv.valid)
+        parent = np.asarray(lv.parent)
+        if l < len(levels) - 1:
+            n_up = levels[l + 1].points.shape[0]
+            up_valid = np.asarray(levels[l + 1].valid)
+            bad = valid & ((parent < 0) | (parent >= n_up))
+            if bad.any():
+                errs.append(f"level {l}: {bad.sum()} valid items without parent")
+            elif not up_valid[parent[valid]].all():
+                errs.append(f"level {l}: some parents are invalid slots")
+        if l > 0:
+            cs = np.asarray(lv.child_start)
+            cc = np.asarray(lv.child_count)
+            n_dn = levels[l - 1].points.shape[0]
+            dn_valid = np.asarray(levels[l - 1].valid)
+            dn_parent = np.asarray(levels[l - 1].parent)
+            seen = np.zeros(n_dn, np.int64)
+            for p in np.nonzero(valid)[0]:
+                sl = slice(int(cs[p]), int(cs[p]) + int(cc[p]))
+                if cs[p] < 0 or cs[p] + cc[p] > n_dn:
+                    errs.append(f"level {l}: slot {p} child range out of bounds")
+                    continue
+                seen[sl] += 1
+                if not dn_valid[sl].all():
+                    errs.append(f"level {l}: slot {p} has invalid children")
+                if not (dn_parent[sl] == p).all():
+                    errs.append(f"level {l}: slot {p} children disagree on parent")
+            missing = dn_valid & (seen == 0)
+            dup = seen > 1
+            if missing.any():
+                errs.append(f"level {l-1}: {missing.sum()} valid items unclaimed")
+            if dup.any():
+                errs.append(f"level {l-1}: {dup.sum()} items claimed twice")
+    # Leaf ids form a permutation of the dataset rows.
+    ids = np.asarray(index.leaf_ids)[np.asarray(levels[0].valid)]
+    if len(np.unique(ids)) != len(ids):
+        errs.append("leaf ids are not unique")
+    return errs

@@ -1,0 +1,29 @@
+"""Data substrate: synthetic dataset generators + stateless sharded batching.
+
+  synthetic.py — seeded surrogates for the paper's four datasets (offline
+                 container; DESIGN.md §5) + LM / recsys / graph generators
+  pipeline.py  — stateless step->batch pipeline (restart-reproducible) with
+                 host prefetch and per-shard slicing
+"""
+
+from repro.data.synthetic import (
+    dense_embed,
+    geo_clusters,
+    lm_tokens,
+    make_dataset,
+    recsys_batch,
+    sparse_highdim,
+    tfidf_like,
+)
+from repro.data.pipeline import BatchPipeline
+
+__all__ = [
+    "BatchPipeline",
+    "dense_embed",
+    "geo_clusters",
+    "lm_tokens",
+    "make_dataset",
+    "recsys_batch",
+    "sparse_highdim",
+    "tfidf_like",
+]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for PDASC's compute hot-spots.
+
+  pairwise.py — tiled [m,d]x[n,d]->[m,n] distance matrices (MXU / VPU paths)
+  topk.py     — fused distance + streaming top-k ("flash k-NN")
+  ops.py      — jit'd dispatch wrappers (TPU pallas / CPU interpret / ref)
+  ref.py      — pure-jnp oracles defining each kernel's contract
+"""
+
+from repro.kernels.ops import knn, pairwise_distance, resolve_form
+
+__all__ = ["knn", "pairwise_distance", "resolve_form"]

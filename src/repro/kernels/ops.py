@@ -1,0 +1,95 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+Public ops:
+
+  pairwise_distance(X, Y, distance)  -> [m, n]
+  knn(Q, DB, distance, k)            -> (dists[q, k], ids[q, k])
+
+``distance`` may be a kernel form (``ref.FORMS``), a registry name
+(``repro.core.distances``), or a ``Distance`` object. Dispatch:
+
+* TPU backend            -> compiled Pallas kernel.
+* CPU/GPU + small input  -> pure-jnp reference (fast enough, no interpreter).
+* CPU + ``force_pallas`` -> Pallas ``interpret=True`` (used by tests to
+  execute the kernel body on this container).
+* form not kernelised (haversine, jaccard, fractional, generic minkowski)
+  -> reference / registry fallback. PDASC stays fully functional for *any*
+  distance; the kernels accelerate the common forms.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pairwise as _pw
+from repro.kernels import topk as _tk
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+
+def resolve_form(distance) -> Optional[str]:
+    """Best-effort map of a distance spec to a kernel form (None = no kernel)."""
+    if isinstance(distance, str):
+        if distance in _ref.FORMS:
+            return distance
+        return _ref.FORM_OF.get(distance)
+    name = getattr(distance, "name", None)
+    return _ref.FORM_OF.get(name) if name else None
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_distance(
+    X: Array,
+    Y: Array,
+    distance="l2",
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bd: int = 256,
+    force_pallas: bool = False,
+) -> Array:
+    """[m, d] x [n, d] -> [m, n] distances via the best available path."""
+    form = resolve_form(distance)
+    if form is None:
+        from repro.core import distances as dist_lib  # registry fallback
+
+        return dist_lib.get(distance).pairwise(X, Y)
+    m, n = X.shape[0], Y.shape[0]
+    if _on_tpu() or force_pallas:
+        out = _pw.pairwise_pallas(
+            X, Y, form=form, bm=bm, bn=bn, bd=bd, interpret=not _on_tpu()
+        )
+        return out[:m, :n]
+    return _ref.pairwise_ref(X, Y, form)
+
+
+def knn(
+    Q: Array,
+    DB: Array,
+    distance="l2",
+    *,
+    k: int = 10,
+    bq: int = 128,
+    bn: int = 512,
+    force_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Fused brute-force k-NN (ascending dists, int32 ids)."""
+    form = resolve_form(distance)
+    if form is None:
+        from repro.core import distances as dist_lib
+
+        D = dist_lib.pairwise_chunked(distance, Q, DB)
+        neg, ids = jax.lax.top_k(-D, k)
+        return -neg, ids.astype(jnp.int32)
+    if _on_tpu() or force_pallas:
+        return _tk.knn_pallas(
+            Q, DB, form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu()
+        )
+    return _ref.knn_ref(Q, DB, k, form)

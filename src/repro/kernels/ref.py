@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its contract defined *here*; the Pallas
+implementations are validated against these functions over shape / dtype /
+distance sweeps (``tests/test_kernels.py``). These are also the CPU / small-
+problem fallbacks dispatched by ``ops.py``.
+
+Forms
+-----
+The kernels support the distance *forms* below (a superset of what the paper
+benchmarks). ``repro.core.distances`` registry names map onto forms via
+``FORM_OF``.
+
+  sqeuclidean  ||x-y||^2            (gram / MXU)
+  l2           ||x-y||              (gram / MXU)
+  cosine       1 - x.y/(|x||y|)     (gram / MXU)
+  dot          -x.y                 (gram / MXU)
+  l1           sum|x-y|             (broadcast / VPU)
+  chebyshev    max|x-y|             (broadcast / VPU)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+GRAM_FORMS = ("sqeuclidean", "l2", "cosine", "dot")
+VPU_FORMS = ("l1", "chebyshev")
+FORMS = GRAM_FORMS + VPU_FORMS
+
+# registry distance name -> kernel form
+FORM_OF = {
+    "euclidean": "l2",
+    "manhattan": "l1",
+    "chebyshev": "chebyshev",
+    "cosine": "cosine",
+    "dot": "dot",
+}
+
+_EPS = 1e-12
+BIG = 1e30
+
+
+def pairwise_ref(X: Array, Y: Array, form: str) -> Array:
+    """[m, d] x [n, d] -> [m, n] distance matrix (float32 accumulate)."""
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    if form in ("sqeuclidean", "l2"):
+        xx = jnp.sum(X * X, axis=-1)
+        yy = jnp.sum(Y * Y, axis=-1)
+        d2 = jnp.maximum(xx[:, None] + yy[None, :] - 2.0 * (X @ Y.T), 0.0)
+        return d2 if form == "sqeuclidean" else jnp.sqrt(d2)
+    if form == "cosine":
+        xn = jnp.sqrt(jnp.maximum(jnp.sum(X * X, axis=-1), _EPS))
+        yn = jnp.sqrt(jnp.maximum(jnp.sum(Y * Y, axis=-1), _EPS))
+        cos = (X @ Y.T) / (xn[:, None] * yn[None, :])
+        return 1.0 - jnp.clip(cos, -1.0, 1.0)
+    if form == "dot":
+        return -(X @ Y.T)
+    if form == "l1":
+        return jnp.sum(jnp.abs(X[:, None, :] - Y[None, :, :]), axis=-1)
+    if form == "chebyshev":
+        return jnp.max(jnp.abs(X[:, None, :] - Y[None, :, :]), axis=-1)
+    raise ValueError(f"unknown form {form!r}")
+
+
+def knn_ref(Q: Array, DB: Array, k: int, form: str) -> tuple[Array, Array]:
+    """Brute-force k-NN: [q, d] queries over [n, d] database.
+
+    Returns (dists[q, k] ascending, ids[q, k]).
+    """
+    D = pairwise_ref(Q, DB, form)
+    neg, ids = jax.lax.top_k(-D, k)
+    return -neg, ids.astype(jnp.int32)

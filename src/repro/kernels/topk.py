@@ -1,0 +1,138 @@
+"""Fused distance + streaming top-k Pallas kernel ("flash k-NN").
+
+NSA's leaf ranking and the brute-force baseline both do ``distances -> top_k``.
+Materialising the full ``[q, n]`` matrix in HBM first makes the op memory-bound
+(bytes ~ 4qn); this kernel streams database blocks through VMEM, keeping only a
+running ``[bq, k]`` top-k state per query tile — the same trick flash-attention
+uses for the softmax, applied to k-selection:
+
+  grid = (q/bq, n/bn)        # db axis sequential ("arbitrary")
+  state: o_dists[bq, k], o_ids[bq, k] live in the *output* refs, revisited
+  per step:   d = dist(q_tile, db_tile)          # MXU (gram) or VPU form
+              merge top-k of concat([state, d])  # one lax.top_k per tile
+
+HBM traffic drops from ``4qn`` bytes (write + read the matrix, then select) to
+``~(q + n) d`` input bytes + ``8qk`` output bytes — for the recsys
+``retrieval_cand`` cell (1 query x 1M candidates) that's the difference
+between memory-bound and compute-bound (see EXPERIMENTS.md §Perf).
+
+The merge uses ``jax.lax.top_k`` over ``[bq, k + bn]``; ids travel with the
+distances. Padded database rows are masked to ``BIG`` via their global column
+index, so callers may pad freely.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import BIG, FORMS, GRAM_FORMS
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def _tile_distance(form: str, q: Array, db: Array) -> Array:
+    """[bq, d] x [bn, d] -> [bq, bn] distance tile (full-d blocks)."""
+    q = q.astype(jnp.float32)
+    db = db.astype(jnp.float32)
+    if form in GRAM_FORMS:
+        g = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
+        if form == "dot":
+            return -g
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        dd = jnp.sum(db * db, axis=1, keepdims=True)
+        if form in ("sqeuclidean", "l2"):
+            d2 = jnp.maximum(qq + dd.T - 2.0 * g, 0.0)
+            return d2 if form == "sqeuclidean" else jnp.sqrt(d2)
+        norm = jnp.sqrt(jnp.maximum(qq, _EPS)) * jnp.sqrt(jnp.maximum(dd.T, _EPS))
+        return 1.0 - jnp.clip(g / norm, -1.0, 1.0)
+    diff = jnp.abs(q[:, None, :] - db[None, :, :])
+    if form == "l1":
+        return jnp.sum(diff, axis=-1)
+    if form == "chebyshev":
+        return jnp.max(diff, axis=-1)
+    raise ValueError(form)
+
+
+def _knn_kernel(q_ref, db_ref, od_ref, oi_ref, *, form, k, bn, n_valid):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full_like(od_ref, BIG)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    d = _tile_distance(form, q_ref[...], db_ref[...])  # [bq, bn]
+    bq = d.shape[0]
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    d = jnp.where(col < n_valid, d, BIG)
+
+    all_d = jnp.concatenate([od_ref[...], d], axis=1)  # [bq, k + bn]
+    all_i = jnp.concatenate([oi_ref[...], col], axis=1)
+    neg, idx = jax.lax.top_k(-all_d, k)
+    od_ref[...] = -neg
+    oi_ref[...] = jnp.take_along_axis(all_i, idx, axis=1)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("form", "k", "bq", "bn", "interpret")
+)
+def knn_pallas(
+    Q: Array,
+    DB: Array,
+    *,
+    form: str,
+    k: int,
+    bq: int = 128,
+    bn: int = 512,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused brute-force k-NN: returns (dists[q, k] ascending, ids[q, k]).
+
+    Blocks carry full ``d`` (no d-chunking) — ANN feature dims are small
+    (<= a few K), so ``[bq, d] + [bn, d]`` comfortably fits VMEM.
+    """
+    if form not in FORMS:
+        raise ValueError(f"unsupported form {form!r}")
+    nq, d = Q.shape
+    n, d2 = DB.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch {d} vs {d2}")
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+
+    qp, np_ = _ceil_to(nq, bq), _ceil_to(n, bn)
+    Qp = jnp.pad(Q, ((0, qp - nq), (0, 0)))
+    DBp = jnp.pad(DB, ((0, np_ - n), (0, 0)))
+    grid = (qp // bq, np_ // bn)
+
+    kernel = functools.partial(
+        _knn_kernel, form=form, k=k, bn=bn, n_valid=n
+    )
+    dists, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((qp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Qp, DBp)
+    return dists[:nq], ids[:nq]

@@ -1,0 +1,88 @@
+"""Serving driver: PDASC ANN search behind the batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset dense_embed \
+        --n 20000 --gl 256 --distance cosine --queries 512 --batch 64
+
+Builds (or loads) a PDASC index, wraps the distributed NSA search in
+``repro.serving.BatchingEngine`` (fixed compiled batch, max-wait batching),
+fires synthetic query traffic at it, and reports latency percentiles +
+recall against exact ground truth.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+from repro.kernels.ops import knn
+from repro.serving import BatchingEngine
+
+
+def _parse():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="dense_embed")
+    p.add_argument("--n", type=int, default=20000)
+    p.add_argument("--gl", type=int, default=256)
+    p.add_argument("--distance", default="euclidean")
+    p.add_argument("--k", type=int, default=10)
+    p.add_argument("--queries", type=int, default=256)
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--max-wait-ms", type=float, default=4.0)
+    p.add_argument("--radius-quantile", type=float, default=0.5)
+    p.add_argument("--seed", type=int, default=0)
+    return p.parse_args()
+
+
+def main():
+    args = _parse()
+    data = make_dataset(args.dataset, n=args.n, seed=args.seed)
+    n_train = int(args.n * 0.95)
+    train, test = data[:n_train], data[n_train:]
+    print(f"[serve] building PDASC index on {train.shape} "
+          f"({args.distance}, gl={args.gl})", flush=True)
+    t0 = time.time()
+    idx = PDASCIndex.build(train, gl=args.gl, distance=args.distance,
+                           radius_quantile=args.radius_quantile)
+    print(f"[serve] built in {time.time()-t0:.1f}s\n{idx.describe()}")
+
+    def handler(batch, n_valid):
+        res = idx.search(jnp.asarray(batch), k=args.k)
+        return res.dists, res.ids
+
+    engine = BatchingEngine(handler, batch_size=args.batch,
+                            max_wait_ms=args.max_wait_ms,
+                            pad_payload=np.zeros(train.shape[1], np.float32))
+    # warmup compile
+    engine.submit(test[0]).wait(timeout=120)
+
+    rng = np.random.default_rng(args.seed)
+    q_rows = rng.integers(0, len(test), args.queries)
+    lat, results = [], []
+    for i in q_rows:
+        t0 = time.time()
+        req = engine.submit(test[i])
+        _, ids = req.wait(timeout=60)
+        lat.append(time.time() - t0)
+        results.append(ids)
+    engine.close()
+
+    # recall vs exact
+    _, gt = knn(jnp.asarray(test[q_rows]), jnp.asarray(train),
+                args.distance, k=args.k)
+    gt = np.asarray(gt)
+    rec = np.mean([
+        len(set(r[r >= 0]) & set(g)) / args.k for r, g in zip(results, gt)
+    ])
+    lat = np.array(lat) * 1e3
+    print(f"[serve] {args.queries} queries: recall@{args.k}={rec:.3f} "
+          f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms "
+          f"mean_batch_occupancy={engine.mean_occupancy:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo for the assigned architectures.
+
+  transformer.py — dense + MoE decoder LMs (GQA, RoPE, SwiGLU, RMSNorm),
+                   scanned layers, expert-parallel MoE, KV-cache decode
+  gnn.py         — EGNN (E(n)-equivariant message passing via segment_sum)
+  graph_sampler.py — CSR neighbour sampler + PDASC-backed kNN graph builder
+  recsys.py      — EmbeddingBag + Wide&Deep / xDeepFM / DIN / AutoInt
+"""

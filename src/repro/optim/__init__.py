@@ -1,0 +1,29 @@
+"""Optimisation substrate (no optax in this environment — built from scratch).
+
+  adamw.py       — AdamW + LR schedules + global-norm clipping
+  accumulate.py  — microbatch gradient accumulation (scan)
+  compression.py — gradient compression for slow links: top-k sparsification
+                   with error feedback, PowerSGD low-rank
+"""
+
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.accumulate import accumulate_gradients
+
+__all__ = [
+    "AdamWConfig",
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "accumulate_gradients",
+]

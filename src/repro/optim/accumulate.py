@@ -1,0 +1,49 @@
+"""Microbatch gradient accumulation.
+
+Splits a global batch into ``n_micro`` slices along axis 0 and scans a
+value_and_grad over them, summing gradients in fp32. Memory: one microbatch
+of activations at a time; the optimizer sees the mean gradient, so training
+semantics are identical to the unaccumulated step (linearity of grad).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_gradients(loss_fn, params, batch, n_micro: int):
+    """Returns (loss, aux_of_last_micro, grads) with grads averaged.
+
+    loss_fn(params, microbatch) -> (loss, aux). Every array in ``batch`` must
+    have a leading axis divisible by ``n_micro``.
+    """
+    if n_micro <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, aux, grads
+
+    def split(x):
+        return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(carry, mb):
+        loss_sum, g_sum = carry
+        (loss, aux), g = gfn(params, mb)
+        g_sum = jax.tree.map(
+            lambda a, b: a + b.astype(jnp.float32), g_sum, g
+        )
+        return (loss_sum + loss, g_sum), aux
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, g_sum), auxes = jax.lax.scan(
+        step, (jnp.float32(0.0), g0), micro
+    )
+    grads = jax.tree.map(
+        lambda g, p: (g / n_micro).astype(p.dtype), g_sum, params
+    )
+    aux = jax.tree.map(lambda a: a[-1], auxes)
+    return loss_sum / n_micro, aux, grads

@@ -1,0 +1,131 @@
+"""AdamW (decoupled weight decay) + schedules + clipping, pure JAX.
+
+Moments live in fp32 regardless of the parameter compute dtype; the update
+runs in fp32 and is cast back to the parameter dtype (mixed-precision
+master-weight pattern). The optimizer state is a pytree matching the param
+tree, so any GSPMD sharding on the params carries straight over to the
+moments (pass the same specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0  # 0 disables
+    schedule: str = "cosine"  # "cosine" | "linear" | "constant"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Array  # int32[]
+    mu: Any  # pytree like params (fp32)
+    nu: Any  # pytree like params (fp32)
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.int32(0), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def opt_state_shapes(param_shapes) -> OptState:
+    """ShapeDtypeStruct mirror (dry-run: no allocation)."""
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_shapes
+    )
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z,
+                    nu=jax.tree.map(lambda s: s, z))
+
+
+def opt_state_specs(param_specs) -> OptState:
+    from jax.sharding import PartitionSpec as P
+
+    return OptState(step=P(), mu=param_specs,
+                    nu=jax.tree.map(lambda s: s, param_specs))
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(math.pi * prog)
+        )
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * prog
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, decay)
+
+
+def adamw_update(
+    grads, state: OptState, params, cfg: AdamWConfig,
+    *, skip_decay: Optional[Callable[[str], bool]] = None,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }

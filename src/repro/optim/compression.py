@@ -1,0 +1,87 @@
+"""Gradient compression for slow (inter-pod) links.
+
+Two schemes, both with error feedback so compression error is re-injected
+next step (convergence-preserving):
+
+* :func:`topk_compress` / :func:`topk_decompress` — per-tensor magnitude
+  top-k sparsification. Compression ratio ``k / n``; wire format is
+  (values[k], indices[k]).
+* :class:`PowerSGD` — rank-r low-rank approximation of 2D gradients
+  (G ~= P Q^T) with a warm-started Q and one orthogonalisation per step.
+  Wire bytes drop from ``m*n`` to ``r*(m+n)``.
+
+Usage pattern (see ``repro.train.dp_step``): gradients are psum'd over the
+fast intra-pod axes at full precision, compressed, summed over the ``pod``
+axis, then decompressed + error-fed-back. The collective saving is measured
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class TopKState(NamedTuple):
+    error: Array  # residual feedback buffer, same shape as the tensor
+
+
+def topk_init(x: Array) -> TopKState:
+    return TopKState(error=jnp.zeros(x.shape, jnp.float32))
+
+
+def topk_compress(g: Array, state: TopKState, k: int):
+    """Returns ((values[k], idx[k]), new_state). Error feedback included."""
+    flat = g.astype(jnp.float32).reshape(-1) + state.error.reshape(-1)
+    mag = jnp.abs(flat)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = flat[idx]
+    kept = jnp.zeros_like(flat).at[idx].set(vals)
+    err = (flat - kept).reshape(g.shape)
+    return (vals, idx.astype(jnp.int32)), TopKState(error=err)
+
+
+def topk_decompress(vals: Array, idx: Array, shape) -> Array:
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[idx].add(vals).reshape(shape)
+
+
+class PowerSGDState(NamedTuple):
+    q: Array  # [n, r] warm-started right factor
+    error: Array  # [m, n] feedback
+
+
+def powersgd_init(shape, rank: int, key=None) -> PowerSGDState:
+    m, n = shape
+    key = key if key is not None else jax.random.PRNGKey(17)
+    q = jax.random.normal(key, (n, rank), jnp.float32)
+    return PowerSGDState(q=q, error=jnp.zeros((m, n), jnp.float32))
+
+
+def _orthonormalise(m: Array) -> Array:
+    q, _ = jnp.linalg.qr(m)
+    return q
+
+
+def powersgd_compress(g: Array, state: PowerSGDState):
+    """One PowerSGD round. Returns ((P [m,r], Q [n,r]), new_state).
+
+    The caller all-reduces P (and optionally Q) over the slow axis; the
+    reconstruction is ``P @ Q^T``.
+    """
+    gf = g.astype(jnp.float32) + state.error
+    p = gf @ state.q  # [m, r]
+    p = _orthonormalise(p)
+    q = gf.T @ p  # [n, r]
+    recon = p @ q.T
+    return (p, q), PowerSGDState(q=q, error=gf - recon)
+
+
+def powersgd_decompress(p: Array, q: Array) -> Array:
+    return p @ q.T

@@ -1,0 +1,111 @@
+"""Batched request engine.
+
+Requests are queued and served in fixed-size batches (padded to the
+compiled batch size so every call hits the same executable — no recompiles
+on the serving path). A worker thread drains the queue with a max-wait
+deadline: a batch departs when full OR when the oldest request has waited
+``max_wait_ms`` (p99-friendly batching).
+
+Used by ``launch/serve.py`` for two endpoints:
+  * PDASC k-NN queries  (handler = distributed NSA search)
+  * recsys CTR scoring  (handler = recsys serve step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    payload: Any  # one query row (pytree of arrays, leading dim absent)
+    id: int = 0
+    enqueued_at: float = 0.0
+    _event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Any = None
+
+    def wait(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.id} timed out")
+        return self.result
+
+
+class BatchingEngine:
+    """handler(batch_pytree [B, ...], n_valid) -> batch results [B, ...]."""
+
+    def __init__(
+        self,
+        handler: Callable[[Any, int], Any],
+        *,
+        batch_size: int,
+        max_wait_ms: float = 5.0,
+        pad_payload: Optional[Any] = None,
+    ):
+        self.handler = handler
+        self.batch_size = batch_size
+        self.max_wait = max_wait_ms / 1e3
+        self.pad_payload = pad_payload
+        self._q: queue.Queue = queue.Queue()
+        self._ids = itertools.count()
+        self._stop = threading.Event()
+        self.stats = dict(batches=0, requests=0, occupancy_sum=0.0)
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def submit(self, payload) -> Request:
+        req = Request(payload=payload, id=next(self._ids),
+                      enqueued_at=time.time())
+        self._q.put(req)
+        return req
+
+    def _take_batch(self) -> list[Request]:
+        try:
+            first = self._q.get(timeout=0.05)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = first.enqueued_at + self.max_wait
+        while len(batch) < self.batch_size:
+            remaining = deadline - time.time()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _worker(self):
+        while not self._stop.is_set():
+            batch = self._take_batch()
+            if not batch:
+                continue
+            n = len(batch)
+            pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
+            rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
+            import jax
+
+            stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+            results = self.handler(stacked, n)
+            for i, r in enumerate(batch):
+                r.result = jax.tree.map(lambda a: np.asarray(a)[i], results)
+                r._event.set()
+            self.stats["batches"] += 1
+            self.stats["requests"] += n
+            self.stats["occupancy_sum"] += n / self.batch_size
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    @property
+    def mean_occupancy(self) -> float:
+        b = self.stats["batches"]
+        return self.stats["occupancy_sum"] / b if b else 0.0

@@ -1,0 +1,5 @@
+"""Training substrate: fault-tolerant loop + explicit-DP compressed step."""
+
+from repro.train.loop import TrainLoopConfig, train_loop
+
+__all__ = ["TrainLoopConfig", "train_loop"]

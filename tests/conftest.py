@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_devices(script: str, n_devices: int = 8, timeout: int = 480) -> str:
+    """Run a python snippet in a subprocess with N fake devices.
+
+    Multi-device tests must not pollute this process (jax locks the device
+    count on first init and the main suite runs single-device).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+    )
+    return proc.stdout

@@ -1,0 +1,161 @@
+"""Deliverable (f): per-arch smoke tests — a REDUCED config of the same
+family runs one forward/train step on CPU; output shapes + no NaNs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_cells, arch_ids, get_arch
+from repro.models import gnn, recsys, transformer as tfm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+LM_ARCHS = [a for a in arch_ids() if get_arch(a).family == "lm"]
+RECSYS_ARCHS = [a for a in arch_ids() if get_arch(a).family == "recsys"]
+
+_OCFG = AdamWConfig(lr=1e-3, total_steps=10)
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.isfinite(x.astype(jnp.float32)).all())
+               for x in jax.tree.leaves(tree))
+
+
+def test_registry_has_all_assigned_archs():
+    expected = {
+        "deepseek-moe-16b", "qwen3-moe-235b-a22b", "minitron-8b",
+        "stablelm-1.6b", "granite-3-2b", "egnn", "wide-deep", "xdeepfm",
+        "din", "autoint", "pdasc",
+    }
+    assert expected == set(arch_ids())
+    # 10 assigned archs x 4 shapes + 2 pdasc cells
+    assert len(all_cells()) == 42
+
+
+def test_full_configs_match_assignment():
+    """Exact numbers from the assignment table."""
+    c = get_arch("deepseek-moe-16b").config_fn()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (28, 2048, 16, 16, 102400)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == (64, 6, 2)
+    c = get_arch("qwen3-moe-235b-a22b").config_fn()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (94, 4096, 64, 4, 151936)
+    assert (c.moe.n_experts, c.moe.top_k) == (128, 8)
+    c = get_arch("minitron-8b").config_fn()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (32, 4096, 16384, 256000)
+    c = get_arch("stablelm-1.6b").config_fn()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (24, 2048, 5632, 100352)
+    c = get_arch("granite-3-2b").config_fn()
+    assert (c.n_layers, c.d_ff, c.vocab) == (40, 8192, 49155)
+    assert c.vocab_padded % 256 == 0
+    c = get_arch("egnn").config_fn()
+    assert (c.n_layers, c.d_hidden) == (4, 64)
+    c = get_arch("wide-deep").config_fn()
+    assert (c.n_sparse, c.embed_dim, c.mlp) == (40, 32, (1024, 512, 256))
+    c = get_arch("xdeepfm").config_fn()
+    assert (c.n_sparse, c.embed_dim, c.cin_layers) == (39, 10, (200, 200, 200))
+    c = get_arch("din").config_fn()
+    assert (c.embed_dim, c.seq_len, c.attn_mlp, c.mlp) == \
+        (18, 100, (80, 40), (200, 80))
+    c = get_arch("autoint").config_fn()
+    assert (c.n_sparse, c.embed_dim, c.n_attn_layers, c.n_attn_heads,
+            c.d_attn) == (39, 16, 3, 2, 32)
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).smoke_fn()
+    sh = tfm.ShardingConfig()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p, b: tfm.loss_fn(p, b, cfg, sh), has_aux=True)(params, batch)
+    params2, opt2, m = adamw_update(grads, opt, params, _OCFG)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    assert _finite(params2) and _finite(grads)
+    assert jax.tree.structure(params2) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_decode_step(arch_id):
+    cfg = get_arch(arch_id).smoke_fn()
+    sh = tfm.ShardingConfig()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 16
+    cache = {k: jnp.zeros(v.shape, v.dtype)
+             for k, v in tfm.cache_shapes(cfg, B, S).items()}
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 1), 0, cfg.vocab)
+    logits, cache = tfm.decode_step(params, cache, toks, jnp.int32(0), cfg, sh)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits[:, :cfg.vocab]).all())
+
+
+def test_egnn_smoke_all_shapes():
+    from repro.configs import egnn as egnn_mod
+
+    rng = np.random.default_rng(0)
+    base = get_arch("egnn").smoke_fn()
+    # flat-graph regime
+    cfg = base
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    N, E = 40, 120
+    batch = dict(
+        feats=jnp.asarray(rng.normal(size=(N, cfg.d_feat)), jnp.float32),
+        coords=jnp.asarray(rng.normal(size=(N, 3)), jnp.float32),
+        edges=jnp.asarray(rng.integers(0, N, (2, E)), jnp.int32),
+        edge_mask=jnp.ones((E,), bool),
+        labels=jnp.asarray(rng.integers(0, cfg.n_classes, N), jnp.int32),
+        label_mask=jnp.ones((N,), bool),
+    )
+    loss, _ = gnn.loss_fn(p, batch, cfg)
+    assert np.isfinite(float(loss))
+    # molecule regime
+    mcfg = dataclasses.replace(base, task="graph_reg")
+    mp = gnn.init_params(mcfg, jax.random.PRNGKey(1))
+    mb = dict(
+        feats=jnp.asarray(rng.normal(size=(4, 10, mcfg.d_feat)), jnp.float32),
+        coords=jnp.asarray(rng.normal(size=(4, 10, 3)), jnp.float32),
+        edges=jnp.asarray(rng.integers(0, 10, (4, 2, 16)), jnp.int32),
+        targets=jnp.asarray(rng.normal(size=(4,)), jnp.float32),
+    )
+    ml, _ = gnn.loss_fn(mp, mb, mcfg)
+    assert np.isfinite(float(ml))
+    # per-shape specialisation binds dims
+    full = egnn_mod.specialise(get_arch("egnn").config_fn(), "full_graph_sm")
+    assert full.d_feat == 1433 and full.n_classes == 7
+    mol = egnn_mod.specialise(get_arch("egnn").config_fn(), "molecule")
+    assert mol.task == "graph_reg"
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_smoke_train_and_serve(arch_id):
+    from repro.data import recsys_batch
+
+    cfg = get_arch(arch_id).smoke_fn()
+    p = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(p)
+    batch = jax.tree.map(jnp.asarray, recsys_batch(0, 16, cfg, seed=0))
+    (loss, _), grads = jax.value_and_grad(
+        lambda pp, b: recsys.loss_fn(pp, b, cfg), has_aux=True)(p, batch)
+    p2, _, _ = adamw_update(grads, opt, p, _OCFG)
+    assert np.isfinite(float(loss)) and _finite(p2)
+    logits, penult = recsys.forward(p, batch, cfg)
+    assert logits.shape == (16,)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pdasc_smoke_build_search():
+    from repro.core.index import PDASCIndex
+
+    cfg = get_arch("pdasc").smoke_fn()
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(cfg.n, cfg.d)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=cfg.gl, distance=cfg.distance)
+    res = idx.search(data[:cfg.n_queries], k=cfg.k)
+    assert res.ids.shape == (cfg.n_queries, cfg.k)
+    assert bool(jnp.isfinite(res.dists[res.ids >= 0]).all())

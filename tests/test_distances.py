@@ -1,0 +1,119 @@
+"""Property tests for the distance registry (hypothesis)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances as dl
+
+VECS = hnp.arrays(
+    np.float32, st.tuples(st.integers(1, 6), st.integers(2, 8)),
+    elements=st.floats(-10, 10, width=32),
+)
+
+ALL_NAMES = [n for n in dl.names() if n != "haversine"]
+
+
+@hypothesis.given(X=VECS)
+@hypothesis.settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_point_pairwise_consistent(name, X):
+    """pairwise(X, X)[i, j] == point(X[i], X[j])."""
+    if name == "jaccard":
+        X = np.abs(X)
+    dist = dl.get(name)
+    Xj = jnp.asarray(X)
+    D = np.asarray(dist.pairwise(Xj, Xj))
+    # The Gram-form pairwise (xx + yy - 2xy) carries an f32 cancellation
+    # residual of ~eps * |x|^2; after sqrt that is ~|x| * sqrt(eps) — the
+    # tolerance must scale with the input magnitude.
+    scale = float(np.abs(X).max()) + 1.0
+    for i in range(X.shape[0]):
+        for j in range(X.shape[0]):
+            p = float(dist.point(Xj[i], Xj[j]))
+            assert abs(D[i, j] - p) < 1e-3 * scale + 1e-3 * abs(p)
+
+
+@hypothesis.given(X=VECS)
+@hypothesis.settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_symmetry_nonnegativity(name, X):
+    if name == "jaccard":
+        X = np.abs(X)
+    dist = dl.get(name)
+    D = np.asarray(dist.pairwise(jnp.asarray(X), jnp.asarray(X)))
+    if name != "dot":  # dot dissimilarity may be negative by design
+        assert (D > -1e-5).all(), "non-negative"
+    np.testing.assert_allclose(D, D.T, atol=1e-4)
+
+
+@hypothesis.given(X=VECS)
+@hypothesis.settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("name", ["euclidean", "manhattan", "chebyshev"])
+def test_triangle_inequality_metrics(name, X):
+    dist = dl.get(name)
+    D = np.asarray(dist.pairwise(jnp.asarray(X), jnp.asarray(X)))
+    n = D.shape[0]
+    for i in range(n):
+        for j in range(n):
+            for k_ in range(n):
+                assert D[i, j] <= D[i, k_] + D[k_, j] + 1e-3
+
+
+def test_identity_of_indiscernibles():
+    X = np.random.default_rng(0).normal(size=(5, 4)).astype(np.float32)
+    for name in ["euclidean", "manhattan", "chebyshev", "cosine"]:
+        D = np.asarray(dl.get(name).pairwise(jnp.asarray(X), jnp.asarray(X)))
+        np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-5)
+
+
+def test_fractional_not_metric():
+    """p=0.5 must violate the triangle inequality somewhere (paper §3.2)."""
+    X = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [1.0, 1.0]], jnp.float32)
+    D = np.asarray(dl.get("fractional05").pairwise(X, X))
+    assert D[0, 2] > D[0, 1] + D[1, 2]
+
+
+def test_haversine_known_values():
+    dist = dl.get("haversine")
+    x = jnp.asarray([[0.0, 0.0]])
+    y = jnp.asarray([[0.0, np.pi / 2]])  # quarter circle on the equator
+    np.testing.assert_allclose(float(dist.pairwise(x, y)[0, 0]), np.pi / 2,
+                               rtol=1e-5)
+    # antipodal
+    y2 = jnp.asarray([[0.0, np.pi]])
+    np.testing.assert_allclose(float(dist.pairwise(x, y2)[0, 0]), np.pi,
+                               rtol=1e-5)
+
+
+def test_cosine_bounds_and_scale_invariance():
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    D1 = np.asarray(dl.get("cosine").pairwise(X, X))
+    D2 = np.asarray(dl.get("cosine").pairwise(X * 7.5, X))
+    assert (D1 >= -1e-6).all() and (D1 <= 2 + 1e-6).all()
+    np.testing.assert_allclose(D1, D2, atol=1e-5)
+
+
+def test_minkowski_factory_and_registry_errors():
+    d3 = dl.minkowski(3.0)
+    X = jnp.asarray(np.random.default_rng(2).normal(size=(4, 3)), jnp.float32)
+    D = np.asarray(d3.pairwise(X, X))
+    assert D.shape == (4, 4) and d3.is_metric
+    assert not dl.minkowski(0.5).is_metric
+    with pytest.raises(KeyError):
+        dl.get("nope")
+
+
+def test_pairwise_chunked_matches():
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(300, 6)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(50, 6)), jnp.float32)
+    for name in ["manhattan", "chebyshev"]:
+        full = dl.get(name).pairwise(X, Y)
+        chunked = dl.pairwise_chunked(name, X, Y, chunk=128)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,108 @@
+"""Dry-run machinery on a small 16-device mesh (subprocess): every family
+lowers + compiles; collective parsing and probe extrapolation behave."""
+
+import pytest
+
+from conftest import run_in_devices
+
+
+def test_cells_lower_and_compile_small_mesh():
+    out = run_in_devices("""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+import jax
+from repro.launch import mesh as mesh_lib
+
+def small_mesh(*, multi_pod=False):
+    shape = (2, 2, 4) if multi_pod else (4, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return mesh_lib.make_mesh(shape, axes)
+
+mesh_lib.make_production_mesh = small_mesh
+from repro.launch import dryrun
+
+cells = [
+    ("granite-3-2b", "train_4k", "single"),
+    ("deepseek-moe-16b", "decode_32k", "multi"),
+    ("egnn", "minibatch_lg", "single"),
+    ("din", "serve_p99", "multi"),
+    ("autoint", "train_batch", "single"),
+    ("pdasc", "search_1m", "single"),
+]
+for arch, shape, mk in cells:
+    res = dryrun.run_cell(arch, shape, mk)
+    assert res["ok"]
+    assert res["cost_analysis"].get("flops", 0) > 0, (arch, shape)
+    assert res["roofline"]["step_time_lower_bound_s"] > 0
+    print("CELL_OK", arch, shape, mk, res["roofline"]["bottleneck"])
+print("ALL_CELLS_OK")
+""", n_devices=16, timeout=570)
+    assert "ALL_CELLS_OK" in out
+
+
+def test_probe_extrapolation_monotone():
+    out = run_in_devices("""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+import jax
+from repro.launch import mesh as mesh_lib
+
+def small_mesh(*, multi_pod=False):
+    return mesh_lib.make_mesh((4, 4), ("data", "model"))
+
+mesh_lib.make_production_mesh = small_mesh
+from repro.launch import dryrun
+
+res = dryrun.run_cell("stablelm-1.6b", "train_4k", "single")
+p = res["probe"]
+assert p is not None and p["n_layers"] == 24
+# two layers cost more than one; corrected >= probe2
+assert p["probe2"]["flops"] > p["probe1"]["flops"]
+assert p["corrected"]["flops"] >= p["probe2"]["flops"]
+# corrected must exceed the raw scan-counted number
+assert p["corrected"]["flops"] > res["cost_analysis"]["flops"]
+# and land within 3x of the analytic 8*N*D (remat) estimate
+model = res["meta"]["model_flops"]
+ratio = model / (p["corrected"]["flops"] * res["n_chips"])
+assert 0.2 < ratio < 3.0, ratio
+print("PROBE_OK", ratio)
+""", n_devices=16, timeout=570)
+    assert "PROBE_OK" in out
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,512]{1,0} all-gather(bf16[64,128]{1,0} %y), replica_groups=[4,4]<=[16], dimensions={1}
+  %a2a = (f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} %z), replica_groups={{0,1}}
+  %done = f32[128,256]{1,0} all-reduce-done(f32[128,256]{1,0} %ar)
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %w), source_target_pairs={{0,1}}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["out_bytes"] == 128 * 256 * 4
+    # ring factor 2*(g-1)/g with g=4
+    assert abs(out["all-reduce"]["traffic_bytes"]
+               - 128 * 256 * 4 * 1.5) < 1e-6
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["out_bytes"] == 64 * 512 * 2
+    assert out["all-to-all"]["count"] == 1
+    assert out["collective-permute"]["count"] == 1
+    assert out["total_traffic_bytes"] > 0
+
+
+def test_production_mesh_shapes():
+    out = run_in_devices("""
+import os
+import jax
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.axis_names == ("data", "model") and m1.devices.shape == (16, 16)
+m2 = make_production_mesh(multi_pod=True)
+assert m2.axis_names == ("pod", "data", "model")
+assert m2.devices.shape == (2, 16, 16)
+print("MESH_OK")
+""", n_devices=512, timeout=240)
+    assert "MESH_OK" in out

@@ -1,0 +1,113 @@
+"""k-medoids: optimality on small instances, masking, FasterPAM semantics."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances as dl
+from repro.core import kmedoids as km
+from repro.core.kmeans import kmeans
+
+
+def brute_force_td(D, k, valid=None):
+    """Exact optimal total deviation by enumeration."""
+    n = D.shape[0]
+    pts = [i for i in range(n) if valid is None or valid[i]]
+    best = np.inf
+    for med in itertools.combinations(pts, k):
+        td = sum(min(D[o, m] for m in med) for o in pts)
+        best = min(best, td)
+    return best
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("k", [2, 3])
+def test_pam_near_optimal_small(seed, k):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(10, 3)).astype(np.float32)
+    D = np.asarray(dl.get("euclidean").pairwise(jnp.asarray(X), jnp.asarray(X)))
+    res = km.kmedoids(jnp.asarray(D), k=k)
+    opt = brute_force_td(D, k)
+    assert float(res.td) <= opt * 1.05 + 1e-5, (float(res.td), opt)
+
+
+def test_swap_improves_over_build():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(60, 4)).astype(np.float32)
+    D = jnp.asarray(dl.get("manhattan").pairwise(jnp.asarray(X), jnp.asarray(X)))
+    b = km.kmedoids(D, k=8, method="build")
+    p = km.kmedoids(D, k=8, method="pam")
+    assert float(p.td) <= float(b.td) + 1e-5
+
+
+def test_labels_are_nearest_medoid():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(40, 4)).astype(np.float32)
+    D = np.asarray(dl.get("euclidean").pairwise(jnp.asarray(X), jnp.asarray(X)))
+    res = km.kmedoids(jnp.asarray(D), k=5)
+    med = np.asarray(res.medoids)
+    lbl = np.asarray(res.labels)
+    for i in range(40):
+        d_to = D[i, med[med >= 0]]
+        assert np.isclose(D[i, med[lbl[i]]], d_to.min(), atol=1e-6)
+
+
+def test_small_group_promotes_all():
+    """Paper §3.1: groups with <= k valid points promote every point."""
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(10, 3)).astype(np.float32)
+    D = jnp.asarray(dl.get("euclidean").pairwise(jnp.asarray(X), jnp.asarray(X)))
+    valid = jnp.asarray([True] * 3 + [False] * 7)
+    res = km.kmedoids(D, k=5, valid=valid)
+    med = np.asarray(res.medoids)
+    assert (med >= 0).sum() == 3
+    assert set(med[med >= 0]) == {0, 1, 2}
+
+
+def test_masked_padding_ignored():
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(30, 3)).astype(np.float32)
+    Xpad = np.concatenate([X, np.full((10, 3), 1e3, np.float32)])
+    dist = dl.get("euclidean")
+    D = jnp.asarray(np.asarray(dist.pairwise(jnp.asarray(Xpad), jnp.asarray(Xpad))))
+    valid = jnp.asarray([True] * 30 + [False] * 10)
+    res = km.kmedoids(D, k=4, valid=valid)
+    med = np.asarray(res.medoids)
+    assert (med[med >= 0] < 30).all(), "padding never selected as medoid"
+    D0 = jnp.asarray(np.asarray(dist.pairwise(jnp.asarray(X), jnp.asarray(X))))
+    res0 = km.kmedoids(D0, k=4)
+    np.testing.assert_allclose(float(res.td), float(res0.td), rtol=1e-5)
+
+
+def test_grouped_vmap_matches_loop():
+    rng = np.random.default_rng(7)
+    Xg = rng.normal(size=(4, 20, 3)).astype(np.float32)
+    dist = dl.get("cosine")
+    Dg = jnp.stack([dist.pairwise(jnp.asarray(x), jnp.asarray(x)) for x in Xg])
+    valid = jnp.ones((4, 20), bool)
+    g = km.kmedoids_grouped(Dg, 5, valid)
+    for i in range(4):
+        s = km.kmedoids(Dg[i], k=5)
+        np.testing.assert_allclose(float(g.td[i]), float(s.td), rtol=1e-5)
+
+
+def test_arbitrary_distance_only_needs_D():
+    """k-medoids must work on any dissimilarity matrix (the paper's core
+    argument for choosing it) — including a non-metric one."""
+    rng = np.random.default_rng(8)
+    D = rng.uniform(0, 1, size=(15, 15)).astype(np.float32)
+    D = (D + D.T) / 2
+    np.fill_diagonal(D, 0.0)
+    res = km.kmedoids(jnp.asarray(D), k=3)
+    assert float(res.td) >= 0 and (np.asarray(res.medoids) >= 0).all()
+
+
+def test_kmeans_snap_prototypes_are_points():
+    rng = np.random.default_rng(9)
+    X = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    res = kmeans(X, 6, key=jax.random.PRNGKey(0))
+    snapped = np.asarray(res.snapped)
+    assert ((snapped >= 0) & (snapped < 50)).all()

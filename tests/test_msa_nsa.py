@@ -1,0 +1,158 @@
+"""MSA index structure + NSA search vs the literal paper-pseudocode port."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances as dl
+from repro.core import msa, nsa, radius as rl
+from repro.core.index import PDASCIndex
+from repro.core.reference_impl import check_index_invariants, nsa_reference
+
+
+def _build(n=240, d=6, gl=32, distance="euclidean", seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    idx, stats = msa.build_index(data, gl=gl, distance=distance,
+                                 key=jax.random.PRNGKey(seed), **kw)
+    return data, idx, stats
+
+
+@pytest.mark.parametrize("distance", ["euclidean", "manhattan", "cosine",
+                                      "chebyshev", "fractional05", "jaccard"])
+def test_invariants_all_distances(distance):
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(150, 5)).astype(np.float32)
+    if distance == "jaccard":
+        data = np.abs(data)
+    idx, stats = msa.build_index(data, gl=20, distance=distance)
+    assert check_index_invariants(idx) == []
+    assert stats.level_sizes[0] == 150
+
+
+def test_level_structure_follows_2to1_ratio():
+    _, idx, stats = _build(n=256, gl=32)
+    # 256 -> 8 groups x 16 protos = 128 -> 4x16=64 -> 2x16=32 -> 1x16=16
+    assert stats.level_sizes == (256, 128, 64, 32, 16)
+
+
+def test_uneven_last_group_promotes_all():
+    """Paper Fig. 2: a short group (< nPrototypes) promotes every point."""
+    _, idx, stats = _build(n=70, gl=32)  # groups: 32, 32, 6
+    # level1 = 16 + 16 + 6 = 38
+    assert stats.level_sizes[1] == 38
+    assert check_index_invariants(idx) == []
+
+
+@pytest.mark.parametrize("distance", ["euclidean", "cosine", "manhattan"])
+@pytest.mark.parametrize("quantile", [0.2, 0.6])
+def test_dense_matches_paper_reference(distance, quantile):
+    data, idx, _ = _build(distance=distance, seed=3)
+    dist = dl.get(distance)
+    r = rl.estimate_radius(jnp.asarray(data), dist, quantile=quantile)
+    Q = data[:8]
+    res = nsa.search_dense(idx, jnp.asarray(Q), dist=dist, k=7, r=float(r))
+    for i in range(len(Q)):
+        rd, rid = nsa_reference(idx, Q[i], dist=dist, k=7, r=float(r))
+        got = set(np.asarray(res.ids[i])[np.asarray(res.ids[i]) >= 0].tolist())
+        want = set(rid[rid >= 0].tolist())
+        assert got == want, (i, got, want)
+
+
+def test_leaf_radius_filter_variant_matches():
+    data, idx, _ = _build(seed=4)
+    dist = dl.get("euclidean")
+    r = float(rl.estimate_radius(jnp.asarray(data), dist, quantile=0.4))
+    Q = data[:5]
+    res = nsa.search_dense(idx, jnp.asarray(Q), dist=dist, k=5, r=r,
+                           leaf_radius_filter=True)
+    for i in range(5):
+        _, rid = nsa_reference(idx, Q[i], dist=dist, k=5, r=r,
+                               leaf_radius_filter=True)
+        got = set(np.asarray(res.ids[i])[np.asarray(res.ids[i]) >= 0].tolist())
+        assert got == set(rid[rid >= 0].tolist())
+
+
+def test_beam_full_width_equals_dense():
+    data, idx, _ = _build(seed=5)
+    dist = dl.get("euclidean")
+    r = float(rl.estimate_radius(jnp.asarray(data), dist, quantile=0.5))
+    mc = msa.max_children(idx)
+    d_ = nsa.search_dense(idx, jnp.asarray(data[:10]), dist=dist, k=5, r=r)
+    b_ = nsa.search_beam(idx, jnp.asarray(data[:10]), dist=dist, k=5, r=r,
+                         beam=10_000, max_children=mc)
+    np.testing.assert_array_equal(np.sort(np.asarray(d_.ids), 1),
+                                  np.sort(np.asarray(b_.ids), 1))
+
+
+def test_beam_recall_increases_with_width():
+    data, idx, _ = _build(n=400, seed=6)
+    dist = dl.get("euclidean")
+    r = float(rl.estimate_radius(jnp.asarray(data), dist, quantile=0.6))
+    mc = msa.max_children(idx)
+    dense = nsa.search_dense(idx, jnp.asarray(data[:20]), dist=dist, k=5, r=r)
+    recalls = []
+    for beam in (1, 4, 32):
+        b = nsa.search_beam(idx, jnp.asarray(data[:20]), dist=dist, k=5, r=r,
+                            beam=beam, max_children=mc)
+        rec = np.mean([
+            len(set(np.asarray(b.ids[i])) & set(np.asarray(dense.ids[i]))) / 5
+            for i in range(20)
+        ])
+        recalls.append(rec)
+    assert recalls[0] <= recalls[1] <= recalls[2] + 1e-9
+    assert recalls[2] > 0.9
+
+
+@hypothesis.given(seed=st.integers(0, 10_000))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_radius_monotonicity(seed):
+    """Larger radius never removes candidates (property over random data)."""
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(120, 4)).astype(np.float32)
+    idx, _ = msa.build_index(data, gl=16, key=jax.random.PRNGKey(seed))
+    dist = dl.get("euclidean")
+    q = jnp.asarray(data[:4])
+    r1 = nsa.search_dense(idx, q, dist=dist, k=5, r=1.0)
+    r2 = nsa.search_dense(idx, q, dist=dist, k=5, r=2.5)
+    assert (np.asarray(r2.n_candidates) >= np.asarray(r1.n_candidates)).all()
+
+
+def test_self_query_recall_with_generous_radius():
+    data, idx, _ = _build(n=300, seed=7)
+    dist = dl.get("euclidean")
+    r = float(rl.estimate_radius(jnp.asarray(data), dist, quantile=0.9))
+    res = nsa.search_dense(idx, jnp.asarray(data[:30]), dist=dist, k=1, r=r)
+    ids = np.asarray(res.ids)[:, 0]
+    assert (ids == np.arange(30)).mean() >= 0.95  # found itself
+
+
+def test_index_api_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(8)
+    data = rng.normal(size=(200, 5)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=25, distance="cosine")
+    res1 = idx.search(data[:6], k=5)
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    idx2 = PDASCIndex.load(path)
+    res2 = idx2.search(data[:6], k=5)
+    np.testing.assert_array_equal(np.asarray(res1.ids), np.asarray(res2.ids))
+    assert idx2.distance.name == "cosine"
+
+
+def test_per_level_radii_increase():
+    data, idx, _ = _build(n=300, seed=9)
+    pidx = PDASCIndex.build(data, gl=32, distance="euclidean")
+    radii = pidx.per_level_radii()
+    assert len(radii) == pidx.n_levels
+    assert all(radii[i] <= radii[i + 1] + 1e-6 for i in range(len(radii) - 1))
+
+
+def test_kmeans_built_index_valid():
+    """k-means clusterer path (paper's §3.3 baseline) still yields a valid
+    index (prototypes snapped to data points)."""
+    data, idx, _ = _build(n=200, gl=25, method="kmeans")
+    assert check_index_invariants(idx) == []

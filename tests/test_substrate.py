@@ -1,0 +1,277 @@
+"""Substrate: optimizer, accumulation, compression, checkpoint, train loop,
+data pipeline, serving engine."""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.data import BatchPipeline, lm_tokens, make_dataset
+from repro.optim import (AdamWConfig, accumulate_gradients, adamw_init,
+                         adamw_update, clip_by_global_norm, cosine_schedule,
+                         global_norm)
+from repro.optim import compression as comp
+from repro.serving import BatchingEngine
+from repro.train import TrainLoopConfig, train_loop
+
+
+# --------------------------- optimizer -------------------------------------
+
+
+def test_adamw_matches_manual_reference():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      grad_clip=0.0, schedule="constant", warmup_steps=0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    st = adamw_init(p)
+    p2, st2, _ = adamw_update(g, st, p, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat, vhat = m / 0.1, v / 0.01
+    want = np.array([1.0, -2.0]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_weight_decay_decoupled():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=0.0,
+                      schedule="constant", warmup_steps=0)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    p2, _, _ = adamw_update(g, adamw_init(p), p, cfg)
+    np.testing.assert_allclose(np.asarray(p2["w"]), [2.0 - 0.1 * 0.5 * 2.0],
+                               rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(cosine_schedule(cfg, jnp.int32(10))) - 1.0) < 1e-5
+    assert abs(float(cosine_schedule(cfg, jnp.int32(100))) - 0.1) < 1e-3
+
+
+def test_grad_accumulation_matches_full_batch():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {}
+
+    p = {"w": W}
+    batch = {"x": X, "y": Y}
+    _, _, g_full = accumulate_gradients(loss_fn, p, batch, 1)
+    _, _, g_acc = accumulate_gradients(loss_fn, p, batch, 4)
+    np.testing.assert_allclose(np.asarray(g_full["w"]), np.asarray(g_acc["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- compression -----------------------------------
+
+
+def test_topk_compression_error_feedback():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    state = comp.topk_init(g)
+    (vals, idx), state2 = comp.topk_compress(g, state, k=16)
+    recon = comp.topk_decompress(vals, idx, g.shape)
+    # error buffer holds exactly the residual
+    np.testing.assert_allclose(np.asarray(recon + state2.error),
+                               np.asarray(g), rtol=1e-5, atol=1e-6)
+    # next round re-injects the residual
+    (v2, i2), state3 = comp.topk_compress(jnp.zeros_like(g), state2, k=256)
+    recon2 = comp.topk_decompress(v2, i2, g.shape)
+    np.testing.assert_allclose(np.asarray(recon + recon2), np.asarray(g),
+                               atol=1e-5)
+
+
+def test_powersgd_rank_and_convergence():
+    rng = np.random.default_rng(2)
+    lowrank = rng.normal(size=(20, 3)) @ rng.normal(size=(3, 15))
+    g = jnp.asarray(lowrank, jnp.float32)
+    state = comp.powersgd_init(g.shape, rank=3)
+    for _ in range(3):  # warm-started Q converges on a fixed matrix
+        (p_, q_), state = comp.powersgd_compress(g, state)
+    err = np.linalg.norm(np.asarray(comp.powersgd_decompress(p_, q_) - g))
+    assert err < 1e-2 * np.linalg.norm(lowrank)
+
+
+# --------------------------- checkpoint ------------------------------------
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.integers(0, 9, 5), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree(0)
+    save_checkpoint(str(tmp_path), 7, t)
+    assert latest_step(str(tmp_path)) == 7
+    restored, step = load_checkpoint(str(tmp_path), t)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]),
+                                  np.asarray(t["nested"]["b"]))
+
+
+def test_checkpoint_prune_keeps_newest(tmp_path):
+    t = _tree(1)
+    for s in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), s, t, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_checkpoint_async_manager(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(2)
+    mgr.save_async(3, t)
+    mgr.wait()
+    assert mgr.last_saved == 3
+    restored, step = mgr.restore_or_none(t)
+    assert step == 3
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A crashed (simulated) write must not become ``latest``."""
+    t = _tree(3)
+    save_checkpoint(str(tmp_path), 1, t)
+    # simulate a partial write
+    os.makedirs(tmp_path / "step_000000002.tmp-999", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 1
+    restored, step = load_checkpoint(str(tmp_path), t)
+    assert step == 1
+
+
+# --------------------------- train loop ------------------------------------
+
+
+def _quad_setup():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss_fn(p, b):
+        return jnp.sum((p["w"] - target) ** 2) * b["scale"], {}
+
+    ocfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                       schedule="constant", warmup_steps=0, total_steps=100)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt, m = adamw_update(g, opt, params, ocfg)
+        return params, opt, {"loss": loss, **m}
+
+    make_batch = lambda s: {"scale": jnp.float32(1.0)}
+    return step, make_batch
+
+
+def test_train_loop_restart_is_exact(tmp_path):
+    """Interrupted-then-resumed run ends with the same params as an
+    uninterrupted one (stateless data + checkpoint/restart)."""
+    step, make_batch = _quad_setup()
+
+    def fresh():
+        p = {"w": jnp.zeros(3)}
+        return p, adamw_init(p)
+
+    # uninterrupted 20 steps
+    p, o = fresh()
+    p_ref, o_ref, _ = train_loop(step, p, o, make_batch,
+                                 TrainLoopConfig(total_steps=20))
+    # interrupted at 10 (ckpt every 5), then resumed
+    ck = str(tmp_path / "ck")
+    p, o = fresh()
+    p1, o1, _ = train_loop(step, p, o, make_batch,
+                           TrainLoopConfig(total_steps=10, ckpt_dir=ck,
+                                           ckpt_every=5))
+    p2, o2, _ = train_loop(step, *fresh(), make_batch,
+                           TrainLoopConfig(total_steps=20, ckpt_dir=ck,
+                                           ckpt_every=5))
+    np.testing.assert_allclose(np.asarray(p_ref["w"]), np.asarray(p2["w"]),
+                               rtol=1e-6)
+
+
+def test_train_loop_nan_sentinel(tmp_path):
+    ocfg = AdamWConfig(lr=0.1, schedule="constant", warmup_steps=0,
+                       grad_clip=0.0, weight_decay=0.0, total_steps=10)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss = jnp.float32(jnp.nan) * batch["x"]
+        return params, opt, {"loss": loss}
+
+    p = {"w": jnp.zeros(2)}
+    with pytest.raises(FloatingPointError):
+        train_loop(step, p, adamw_init(p), lambda s: {"x": jnp.float32(1.0)},
+                   TrainLoopConfig(total_steps=5))
+
+
+# --------------------------- data ------------------------------------------
+
+
+def test_datasets_deterministic():
+    for name in ("geo_clusters", "sparse_highdim", "dense_embed", "tfidf_like"):
+        a = make_dataset(name, n=500, seed=3)
+        b = make_dataset(name, n=500, seed=3)
+        np.testing.assert_array_equal(a, b)
+        assert np.isfinite(a).all()
+
+
+def test_geo_clusters_has_outlier_islands():
+    x = make_dataset("geo_clusters", n=2000, seed=0) * 180 / np.pi
+    lat = x[:, 0]
+    assert (lat < 32).sum() > 20  # Canary cluster far from the mainland
+    assert (lat > 35).sum() > 1500
+
+
+def test_lm_tokens_stateless():
+    a = lm_tokens(5, 4, 16, 100)
+    b = lm_tokens(5, 4, 16, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_tokens(6, 4, 16, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_batch_pipeline_order_and_prefetch():
+    seen = []
+    pipe = BatchPipeline(lambda s: {"step": np.asarray(s)}, prefetch=3)
+    for _ in range(5):
+        s, b = pipe.get()
+        seen.append(int(b["step"]))
+    pipe.close()
+    assert seen == [0, 1, 2, 3, 4]
+
+
+# --------------------------- serving ---------------------------------------
+
+
+def test_batching_engine_results_match_direct():
+    def handler(batch, n_valid):
+        return {"y": batch["x"] * 2.0}
+
+    eng = BatchingEngine(handler, batch_size=4, max_wait_ms=20,
+                         pad_payload={"x": np.zeros(3, np.float32)})
+    reqs = [eng.submit({"x": np.full(3, i, np.float32)}) for i in range(10)]
+    outs = [r.wait(timeout=10) for r in reqs]
+    eng.close()
+    for i, o in enumerate(outs):
+        np.testing.assert_allclose(o["y"], np.full(3, 2.0 * i), rtol=1e-6)
+    assert eng.stats["requests"] == 10
+    assert eng.stats["batches"] >= 3
