@@ -1,9 +1,23 @@
-"""Search performance: dense vs beam NSA (pruning/recall trade-off), radius
-sensitivity (paper §5 future-work: per-level dynamic radii), kernel
-micro-bench (CPU wall time; the TPU story is the §Roofline dry-run)."""
+"""Search performance: dense vs beam NSA (pruning/recall trade-off), the
+batched kernel-layer beam vs the seed per-query vmap beam (seed-vs-new,
+recorded in ``BENCH_search.json``), radius sensitivity (paper §5 future-work:
+per-level dynamic radii), and the kernel micro-bench (CPU wall time; the TPU
+story is the §Roofline dry-run).
+
+    PYTHONPATH=src python -m benchmarks.bench_search [--mode all|dense|beam|radius|kernel]
+        [--out experiments/search.json] [--bench-out BENCH_search.json]
+
+``--mode beam`` runs the seed-vs-new comparison only: for each beam width it
+times ``search_beam_vmap`` (the seed baseline, a vmap of scalar ``dist.point``
+gathers) against the batched ``search_beam`` (one gather + one fused
+``ops.rank_candidates`` per level) and reports the query-throughput speedup.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -16,6 +30,8 @@ from repro.data import make_dataset
 from repro.kernels import ops
 from repro.kernels.ref import knn_ref, pairwise_ref
 
+BEAMS = (4, 16, 32, 64, 128)
+
 
 def _recall(ids, gt):
     return float(np.mean([
@@ -24,38 +40,71 @@ def _recall(ids, gt):
     ]))
 
 
-def run(seed: int = 0):
-    rows = []
-    data = make_dataset("dense_embed", n=8000, seed=seed)
-    train, test = data[:7800], data[7800:7928]
+def _setup(seed: int, n_queries: int = 128, need_index: bool = True):
+    data = make_dataset("dense_embed", n=7800 + n_queries, seed=seed)
+    train, test = data[:7800], data[7800:7800 + n_queries]
+    if not need_index:  # kernel micro-bench needs only the raw arrays
+        return train, test, None, None
     _, gt = exact_knn(test, train, distance="euclidean", k=10)
-    gt = np.asarray(gt)
     idx = PDASCIndex.build(train, gl=256, distance="euclidean",
                            radius_quantile=0.35)
+    return train, test, np.asarray(gt), idx
 
-    def timed_search(**kw):
-        res = idx.search(test, k=10, **kw)  # compile
-        jax.block_until_ready(res.dists)
+
+def _timed(fn, n_queries: int, repeats: int = 3):
+    """us/query over the best of ``repeats`` post-compile runs."""
+    res = fn()  # compile
+    jax.block_until_ready(res)
+    best = float("inf")
+    for _ in range(repeats):
         t0 = time.perf_counter()
-        res = idx.search(test, k=10, **kw)
-        jax.block_until_ready(res.dists)
-        dt = time.perf_counter() - t0
-        return res, dt / len(test) * 1e6
+        res = fn()
+        jax.block_until_ready(res)
+        best = min(best, time.perf_counter() - t0)
+    return res, best / n_queries * 1e6
 
-    res, us = timed_search(mode="dense")
-    rows.append(dict(bench="nsa", mode="dense", beam=-1,
-                     recall=_recall(np.asarray(res.ids), gt),
-                     us_per_q=round(us, 1),
-                     candidates=int(np.asarray(res.n_candidates).mean())))
-    for beam in (4, 16, 48, 128):
-        res, us = timed_search(mode="beam", beam=beam)
-        rows.append(dict(bench="nsa", mode="beam", beam=beam,
-                         recall=_recall(np.asarray(res.ids), gt),
-                         us_per_q=round(us, 1),
-                         candidates=int(np.asarray(res.n_candidates).mean())))
-        print(f"[search] beam={beam}: {rows[-1]}", flush=True)
 
-    # radius sensitivity + per-level dynamic radii (paper future work)
+def run_beam_comparison(idx, test, gt):
+    """Seed vmap beam vs batched kernel-layer beam (the tentpole numbers)."""
+    rows = []
+    Q = jnp.asarray(test)
+    for beam in BEAMS:
+        res_old, us_old = _timed(
+            lambda: idx.search(Q, k=10, mode="beam_vmap", beam=beam), len(test)
+        )
+        res_new, us_new = _timed(
+            lambda: idx.search(Q, k=10, mode="beam", beam=beam), len(test)
+        )
+        row = dict(
+            bench="beam_batched_vs_vmap", beam=beam,
+            us_per_q_vmap=round(us_old, 1), us_per_q_batched=round(us_new, 1),
+            speedup=round(us_old / us_new, 2),
+            recall_vmap=_recall(np.asarray(res_old.ids), gt),
+            recall_batched=_recall(np.asarray(res_new.ids), gt),
+            candidates=int(np.asarray(res_new.n_candidates).mean()),
+        )
+        rows.append(row)
+        print(f"[search] beam={beam}: vmap {row['us_per_q_vmap']}us "
+              f"batched {row['us_per_q_batched']}us "
+              f"speedup {row['speedup']}x", flush=True)
+    return rows
+
+
+def run_dense(idx, test, gt):
+    """Dense (faithful) NSA timing; the beam sweep lives in
+    run_beam_comparison (which also reports the batched recalls)."""
+    res, us = _timed(lambda: idx.search(jnp.asarray(test), k=10, mode="dense"),
+                     len(test))
+    row = dict(bench="nsa", mode="dense", beam=-1,
+               recall=_recall(np.asarray(res.ids), gt),
+               us_per_q=round(us, 1),
+               candidates=int(np.asarray(res.n_candidates).mean()))
+    print(f"[search] dense: {row}", flush=True)
+    return [row]
+
+
+def run_radius(train, test, gt, idx):
+    rows = []
     for q in (0.1, 0.3, 0.5):
         idx_q = PDASCIndex.build(train, gl=256, distance="euclidean",
                                  radius_quantile=q)
@@ -73,8 +122,12 @@ def run(seed: int = 0):
                      recall=_recall(np.asarray(res.ids), gt),
                      candidates=int(np.asarray(res.n_candidates).mean())))
     print(f"[search] per-level radii: {rows[-1]}", flush=True)
+    return rows
 
-    # kernel micro-bench: fused flash-knn vs materialise+topk (CPU wall)
+
+def run_kernel_micro(train, test):
+    """Fused flash-knn vs materialise+topk (CPU wall)."""
+    rows = []
     Q = jnp.asarray(test)
     DB = jnp.asarray(train)
     for name, fn in [
@@ -82,24 +135,71 @@ def run(seed: int = 0):
         ("knn_fused_interpret", lambda: ops.knn(Q, DB, "l2", k=10,
                                                 force_pallas=True)),
     ]:
-        out = fn()
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        us = (time.perf_counter() - t0) / len(test) * 1e6
+        _, us = _timed(fn, len(test), repeats=1)
         rows.append(dict(bench="kernel", name=name, us_per_q=round(us, 1)))
     return rows
 
 
-def main(argv=None):
-    import json
-    import os
+def run(seed: int = 0, modes=("dense", "beam", "radius", "kernel")):
+    # The seed-vs-new comparison runs at serving batch size (512 queries):
+    # the batched path exists to amortise per-level work over the batch.
+    train, test, gt, idx = _setup(
+        seed, n_queries=512 if "beam" in modes else 128,
+        need_index=any(m in modes for m in ("dense", "beam", "radius")),
+    )
+    rows = []
+    if "dense" in modes:
+        rows += run_dense(idx, test, gt)
+    if "beam" in modes:
+        rows += run_beam_comparison(idx, test, gt)
+    if "radius" in modes:
+        rows += run_radius(train, test, gt, idx)
+    if "kernel" in modes:
+        rows += run_kernel_micro(train, test)
+    return rows
 
-    rows = run()
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/search.json", "w") as f:
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--mode", default="all",
+                   choices=["all", "dense", "beam", "radius", "kernel"])
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="experiments/search.json")
+    p.add_argument("--bench-out", default="BENCH_search.json",
+                   help="seed-vs-new beam comparison artifact")
+    args = p.parse_args(argv)
+    modes = (("dense", "beam", "radius", "kernel") if args.mode == "all"
+             else (args.mode,))
+
+    rows = run(seed=args.seed, modes=modes)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
+
+    cmp_rows = [r for r in rows if r.get("bench") == "beam_batched_vs_vmap"]
+    if cmp_rows:
+        # Headline: the default serving beam width (PDASCIndex.search).
+        headline = next((r for r in cmp_rows if r["beam"] == 32), cmp_rows[-1])
+        summary = dict(
+            bench="nsa_beam_seed_vs_kernel_layer",
+            backend=jax.default_backend(),
+            config=dict(dataset="dense_embed", n=7800, n_queries=512,
+                        gl=256, distance="euclidean", k=10),
+            baseline="search_beam_vmap (seed: per-query vmap of "
+                     "dist.point gathers + per-level top_k)",
+            new="search_beam (batched: one candidate gather + one fused "
+                "kernel-layer rank per level)",
+            rows=cmp_rows,
+            headline_beam=headline["beam"],
+            headline_speedup=headline["speedup"],
+            min_speedup=min(r["speedup"] for r in cmp_rows),
+            max_speedup=max(r["speedup"] for r in cmp_rows),
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"[search] wrote {args.bench_out}: speedups "
+              f"{[r['speedup'] for r in cmp_rows]} "
+              f"(headline beam={headline['beam']}: {headline['speedup']}x)")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,9 @@ ANN index itself, as dry-run cells.
 import dataclasses
 
 from repro.configs.base import ArchDef, ShapeSpec, register_arch
+from repro.kernels.ops import KernelConfig
+
+_KD = KernelConfig()  # single source of the block-knob defaults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,6 +26,17 @@ class PDASCArchConfig:
     k: int = 10  # neighbours (paper protocol: 10-NN)
     n_queries: int = 4096
     radius: float = 13.0  # paper Table 2, GLOVE euclidean
+    # Kernel-layer block knobs (DESIGN.md §3.3): pairwise grid tiles
+    # (bm x bn x bd), fused rank/knn query tile (bq), CPU streaming chunk.
+    bm: int = _KD.bm
+    bn: int = _KD.bn
+    bd: int = _KD.bd
+    bq: int = _KD.bq
+    row_chunk: int = _KD.row_chunk
+
+    def kernel_config(self) -> KernelConfig:
+        return KernelConfig(bm=self.bm, bn=self.bn, bd=self.bd, bq=self.bq,
+                            row_chunk=self.row_chunk)
 
 
 def config() -> PDASCArchConfig:
@@ -31,7 +45,7 @@ def config() -> PDASCArchConfig:
 
 def smoke_config() -> PDASCArchConfig:
     return PDASCArchConfig(name="pdasc-smoke", n=512, d=8, gl=32,
-                           n_queries=16, radius=2.0)
+                           n_queries=16, radius=2.0, bm=32, bn=32, bd=32)
 
 
 SHAPES = {

@@ -280,22 +280,25 @@ def minkowski(p: float) -> Distance:
 def pairwise_chunked(
     dist, X: Array, Y: Array, *, chunk: int = 4096
 ) -> Array:
-    """``dist.pairwise`` computed in row chunks of ``X``.
+    """``dist.pairwise`` computed in bounded-memory chunks.
 
-    The broadcast form of l1/chebyshev materialises ``[m, n, d]``; chunking
-    bounds that at ``[chunk, n, d]``. Gram-form distances never materialise
-    the cube and are dispatched directly.
+    The broadcast form of the non-Gram distances materialises ``[m, n, d]``;
+    chunking streams it as ``[chunk, n, d]`` slabs (many rows) or
+    ``[m, chunk, d]`` slabs (few rows against a large ``Y`` — the search-path
+    shape, where a small query batch meets a big level). Gram-form distances
+    never materialise the cube and are dispatched directly.
     """
     dist = get(dist)
-    m = X.shape[0]
-    if dist.gram_form or m <= chunk:
+    m, n = X.shape[0], Y.shape[0]
+    if dist.gram_form or (m <= chunk and n <= chunk):
         return dist.pairwise(X, Y)
-    n_chunks = -(-m // chunk)
-    pad = n_chunks * chunk - m
-    Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    Xc = Xp.reshape(n_chunks, chunk, X.shape[1])
-    out = jax.lax.map(lambda xc: dist.pairwise(xc, Y), Xc)
-    return out.reshape(n_chunks * chunk, Y.shape[0])[:m]
+    from repro.kernels.ref import stream_cols, stream_rows  # lazy: acyclic
+
+    if m > chunk:
+        return stream_rows(
+            lambda xc, Yf: pairwise_chunked(dist, xc, Yf, chunk=chunk), X, Y, chunk
+        )
+    return stream_cols(dist.pairwise, X, Y, chunk)
 
 
 BIG = 1e30  # sentinel for masked / invalid slots; larger than any real distance

@@ -42,6 +42,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distances as dist_lib
 from repro.core import msa, nsa
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 Array = jax.Array
@@ -61,6 +62,15 @@ except ImportError:  # pragma: no cover - older jax
         return _shard_map_old(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
         )
+
+
+def axis_size(axis_name: str) -> int:
+    """Static mesh-axis size from inside shard_map (jax < 0.6 compat:
+    ``lax.axis_size`` does not exist there; ``psum(1, axis)`` is static).
+    Public: the model layer's sharded retrieval uses it too."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +96,7 @@ def topk_merge_butterfly(dists: Array, ids: Array, axis_name: str, k: int):
     sub-cube; after log2(P) rounds all devices hold the global top-k
     (replicated). Requires a power-of-two axis size.
     """
-    Pn = jax.lax.axis_size(axis_name)
+    Pn = axis_size(axis_name)
     if Pn & (Pn - 1):
         raise ValueError(f"butterfly merge needs power-of-two axis, got {Pn}")
     rounds = int(math.log2(Pn))
@@ -126,7 +136,7 @@ def _shard_index(axes: Sequence[str]):
     """Linear shard index across (possibly several) mesh axes."""
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -205,12 +215,14 @@ def search_sharded(
     merge: str = "butterfly",
     leaf_radius_filter: bool = False,
     with_stats: bool = True,
+    kernel: Optional[kops.KernelConfig] = None,
 ) -> nsa.SearchResult:
     """Distributed NSA: per-shard search + global top-k merge.
 
     Queries are replicated over ``db_axes`` (every shard answers against its
     own sub-index); returned ids are *global* dataset rows (shard-offset
-    applied). Output is replicated.
+    applied). Output is replicated. ``kernel`` (block knobs) reaches the
+    kernel layer through the per-shard search.
     """
     dist = dist_lib.get(dist)
 
@@ -224,11 +236,13 @@ def search_sharded(
             res = nsa.search_dense(
                 index, Qr, dist=dist, k=k, r=r,
                 leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
+                kernel=kernel,
             )
         else:
             res = nsa.search_beam(
                 index, Qr, dist=dist, k=k, r=r, beam=beam,
                 max_children=max_children, leaf_radius_filter=leaf_radius_filter,
+                kernel=kernel,
             )
         # leaf_ids are local rows of this shard's slice; lift to global rows.
         # NOTE: the shard's local shuffle permutes only within the shard, so

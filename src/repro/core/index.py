@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import distances as dist_lib
 from repro.core import msa, nsa, radius as radius_lib
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -92,8 +93,11 @@ class PDASCIndex:
         mode: str = "beam",
         beam: int | tuple = 32,
         leaf_radius_filter: bool = False,
+        kernel: Optional[kops.KernelConfig] = None,
     ) -> nsa.SearchResult:
-        """k-ANN search. ``mode``: "beam" (pruned) or "dense" (faithful)."""
+        """k-ANN search. ``mode``: "beam" (batched, pruned), "dense"
+        (faithful) or "beam_vmap" (the seed per-query baseline, kept for
+        benchmarking). ``kernel`` carries the kernel-layer block knobs."""
         Q = jnp.asarray(queries, jnp.float32)
         r = float(r) if r is not None else self.default_radius
         if mode == "dense":
@@ -104,9 +108,22 @@ class PDASCIndex:
                 k=k,
                 r=r,
                 leaf_radius_filter=leaf_radius_filter,
+                kernel=kernel,
             )
         if mode == "beam":
             return nsa.search_beam(
+                self.data,
+                Q,
+                dist=self.distance,
+                k=k,
+                r=r,
+                beam=beam,
+                max_children=self.max_children,
+                leaf_radius_filter=leaf_radius_filter,
+                kernel=kernel,
+            )
+        if mode == "beam_vmap":
+            return nsa.search_beam_vmap(
                 self.data,
                 Q,
                 dist=self.distance,
@@ -187,11 +204,15 @@ class PDASCIndex:
         z = np.load(path + ".npz")
         levels = []
         for l in range(meta["n_levels"]):
-            levels.append(
-                msa.PDASCLevel(
-                    **{f: jnp.asarray(z[f"level{l}_{f}"]) for f in msa.PDASCLevel._fields}
-                )
-            )
+            fields = {
+                f: jnp.asarray(z[f"level{l}_{f}"])
+                for f in msa.PDASCLevel._fields
+                if f"level{l}_{f}" in z
+            }
+            if "sq_norm" not in fields:  # index saved before the norm cache
+                pts = fields["points"]
+                fields["sq_norm"] = jnp.sum(pts * pts, axis=-1)
+            levels.append(msa.PDASCLevel(**fields))
         data = msa.PDASCIndexData(
             levels=tuple(levels), leaf_ids=jnp.asarray(z["leaf_ids"])
         )

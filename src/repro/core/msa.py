@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import distances as dist_lib
 from repro.core import kmedoids as km
 from repro.core import kmeans as kmeans_lib
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -53,6 +54,12 @@ class PDASCLevel(NamedTuple):
     parent: Array  # int32[n_l] — slot in level l+1 (-1 at the top level)
     child_start: Array  # int32[n_l] — slice start into level l-1 (-1 at leaf)
     child_count: Array  # int32[n_l]
+    # Cached ||p||^2 per point (4 bytes/point, a 1/d overhead). The batched
+    # beam search gathers these alongside the points so the Gram-form rank
+    # kernels never re-reduce the [B, W, d] candidate cube for norms; the
+    # arithmetic (sum of p*p over d) matches the pairwise kernels' norm
+    # computation bit-for-bit.
+    sq_norm: Array  # f32[n_l]
 
 
 class PDASCIndexData(NamedTuple):
@@ -78,10 +85,15 @@ def _pad_to(x: Array, n: int, fill=0):
 
 def _group_pairwise(dist: dist_lib.Distance, grp_pts: Array, grp_valid: Array,
                     row_chunk: int) -> Array:
-    """Masked per-group distance matrix [G, g, g] with bounded peak memory."""
+    """Masked per-group distance matrix [G, g, g] with bounded peak memory.
+
+    Dispatched through the kernel layer (vmapped over the group axis; on TPU
+    the Pallas pairwise kernel lifts the vmap into its grid), so the MSA
+    build shares the exact distance arithmetic of the search path.
+    """
 
     def one(pts, vld):
-        D = dist_lib.pairwise_chunked(dist, pts, pts, chunk=row_chunk)
+        D = kops.pairwise_distance(pts, pts, dist, row_chunk=row_chunk)
         return dist_lib.mask_invalid(D, vld, vld)
 
     return jax.vmap(one)(grp_pts, grp_valid)
@@ -311,13 +323,15 @@ def build_index_arrays(
 
     levels = []
     for lv in raw_levels:
+        pts = lv["points"]
         levels.append(
             PDASCLevel(
-                points=lv["points"],
+                points=pts,
                 valid=lv["valid"],
                 parent=lv["parent"].astype(jnp.int32),
                 child_start=lv["child_start"].astype(jnp.int32),
                 child_count=lv["child_count"].astype(jnp.int32),
+                sq_norm=jnp.sum(pts * pts, axis=-1),
             )
         )
     index = PDASCIndexData(levels=tuple(levels), leaf_ids=raw_levels[0]["leaf_ids"])

@@ -1,6 +1,8 @@
 """NSA — Neighbours Search Algorithm (paper Algorithm 2), in JAX.
 
-Two execution modes over the same :class:`~repro.core.msa.PDASCIndexData`:
+Two execution modes over the same :class:`~repro.core.msa.PDASCIndexData`,
+both dispatching every distance evaluation and ranking step through the
+kernel layer (``repro.kernels.ops`` — DESIGN.md §3.3):
 
 ``search_dense``
     Faithful masked translation of Algorithm 2. The per-level candidate set
@@ -16,17 +18,28 @@ Two execution modes over the same :class:`~repro.core.msa.PDASCIndexData`:
     are ranked by distance and the k nearest returned. Semantically identical
     to the paper's recursion (tests check this against a literal Python port),
     but every leaf distance is *computed* then masked — the TPU-idiomatic
-    form, used for validation and small indexes.
+    form, used for validation and small indexes. Per level it costs one
+    ``ops.pairwise_distance`` call (MXU Gram matmul / tiled VPU kernel on
+    TPU; streamed reference on CPU) — never an ``[B, n, d]`` broadcast cube.
 
 ``search_beam``
-    The TPU-native pruned search (DESIGN.md §3): at each level only the
-    ``beam`` nearest in-radius prototypes survive, and only their
-    sibling-contiguous child blocks are gathered — static shapes, real FLOP
-    pruning. ``beam >= level size`` at every level reproduces ``search_dense``
-    results exactly (the top-level candidate set is then complete).
+    The TPU-native pruned search (DESIGN.md §3.2), *batched over the query
+    axis*: per level the whole batch performs one ``[B, W]`` candidate gather
+    and one fused ``ops.rank_candidates`` call (gather -> distance -> top-k
+    streamed through VMEM), which yields the per-query beam directly; only
+    the sibling-contiguous child blocks of the beam survive to the next
+    level — static shapes, real FLOP pruning, no per-query vmap.
+    ``beam >= level size`` at every level reproduces ``search_dense``
+    results exactly (the candidate set is then complete, and the rowwise
+    kernel arithmetic matches the pairwise kernel element-for-element).
 
-Both are jit-friendly and vmapped over a query batch. Results are
-``(dists[k], ids[k])`` sorted ascending; empty slots hold ``BIG`` / -1.
+Both are jit-friendly over a query batch. Results are ``(dists[k], ids[k])``
+sorted ascending; empty slots hold ``BIG`` / -1.
+
+``search_beam_vmap`` preserves the pre-kernel-layer per-query scalar search
+(a ``vmap`` of ``dist.point`` gathers). It exists as the benchmark baseline
+for the batched path (``benchmarks/bench_search.py --mode beam``) and as an
+independent semantic oracle in the tests.
 """
 
 from __future__ import annotations
@@ -40,6 +53,7 @@ import jax.numpy as jnp
 from repro.core import distances as dist_lib
 from repro.core.distances import BIG
 from repro.core.msa import PDASCIndexData
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -60,11 +74,6 @@ def _per_level_radii(r, n_levels: int) -> tuple:
     return tuple([r] * n_levels)
 
 
-def _topk_smallest(d: Array, ids: Array, k: int):
-    neg, idx = jax.lax.top_k(-d, k)
-    return -neg, jnp.take(ids, idx)
-
-
 # ---------------------------------------------------------------------------
 # Dense-masked (faithful) mode
 # ---------------------------------------------------------------------------
@@ -77,20 +86,31 @@ def _search_dense_batch(
     k: int,
     radii: tuple,
     leaf_radius_filter: bool,
-    row_chunk: int = 1024,
+    kernel: kops.KernelConfig,
     with_stats: bool = True,
 ) -> SearchResult:
     """Batched masked NSA: per level one [B, n_l] distance matrix.
 
-    Gram-form distances (l2/cosine/dot) become a single MXU matmul per level
-    — never the [B, n, d] broadcast cube (memory-analysis-verified; the
-    Pallas ``pairwise`` kernel implements the identical tiling on real TPU).
+    Every level is one ``ops.pairwise_distance`` dispatch: Gram-form
+    distances (l2/cosine/dot) become a single MXU matmul per level, the
+    broadcast forms stream ``row_chunk`` column slabs — never the [B, n, d]
+    broadcast cube (the Pallas ``pairwise`` kernel implements the identical
+    tiling on real TPU).
     """
     levels = index.levels
     L = len(levels) - 1
 
     def pw(pts):
-        return dist_lib.pairwise_chunked(dist, Q, pts, chunk=row_chunk)
+        return kops.pairwise_distance(
+            Q,
+            pts,
+            dist,
+            bm=kernel.bm,
+            bn=kernel.bn,
+            bd=kernel.bd,
+            row_chunk=kernel.row_chunk,
+            force_pallas=kernel.force_pallas,
+        )
 
     top = levels[L]
     D = pw(top.points)  # [B, n_L]
@@ -133,7 +153,9 @@ def _search_dense_batch(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dist", "k", "r", "leaf_radius_filter", "with_stats"),
+    static_argnames=(
+        "dist", "k", "r", "leaf_radius_filter", "with_stats", "kernel",
+    ),
 )
 def search_dense(
     index: PDASCIndexData,
@@ -144,18 +166,21 @@ def search_dense(
     r,
     leaf_radius_filter: bool = False,
     with_stats: bool = True,
+    kernel: Optional[kops.KernelConfig] = None,
 ) -> SearchResult:
     """Batched faithful NSA. ``Q``: [B, d] (or [d]).
 
     ``with_stats=False`` skips the candidate-count reduction (one full
-    [B, n] pass) — the serving configuration.
+    [B, n] pass) — the serving configuration. ``kernel`` carries the
+    kernel-layer block knobs (None = defaults).
     """
     radii = _per_level_radii(r, len(index.levels))
     squeeze = Q.ndim == 1
     Qb = Q[None, :] if squeeze else Q
     res = _search_dense_batch(
         index, dist, Qb, k=k, radii=radii,
-        leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
+        leaf_radius_filter=leaf_radius_filter,
+        kernel=kernel or kops.DEFAULT, with_stats=with_stats,
     )
     if squeeze:
         res = jax.tree.map(lambda a: a[0], res)
@@ -163,7 +188,155 @@ def search_dense(
 
 
 # ---------------------------------------------------------------------------
-# Beam-gather (TPU-pruned) mode
+# Batched beam mode (the kernel-layer hot path)
+# ---------------------------------------------------------------------------
+
+
+def _search_beam_batch(
+    index: PDASCIndexData,
+    dist: dist_lib.Distance,
+    Q: Array,  # [B, d]
+    k: int,
+    radii: tuple,
+    beams: tuple,
+    max_children: tuple,
+    leaf_radius_filter: bool,
+    kernel: kops.KernelConfig,
+) -> SearchResult:
+    """Whole-batch beam search: per level one gather + one fused rank.
+
+    The radius filter is applied *after* the beam selection: candidates
+    sort ascending by distance, so every in-radius candidate outranks every
+    out-of-radius one and post-filtering selects the identical beam — but
+    the select itself stays one fused kernel call.
+    """
+    levels = index.levels
+    L = len(levels) - 1
+    B = Q.shape[0]
+
+    def rank(lv, idx, ok, width):
+        return kops.rank_gathered(
+            Q, lv.points, lv.sq_norm, idx, ok, dist, k=width,
+            bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+        )
+
+    # Every top-level prototype is a candidate for every query, so the top
+    # ranking is one cross pairwise_distance call (no per-query gather —
+    # replicating the level B times would cost [B, n_top, d] for what is a
+    # shared candidate set) followed by one top-k.
+    top = levels[L]
+    n_top = top.points.shape[0]
+    D_top = kops.pairwise_distance(
+        Q, top.points, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
+        row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
+    )
+    D_top = jnp.where(top.valid[None, :], D_top, BIG)
+    cand_idx = None  # top-level slots are their own indices
+    cand_ok = None
+
+    for l in range(L, 0, -1):
+        lv = levels[l]
+        if l == L:
+            beam = min(beams[l], n_top)
+            neg, slot = jax.lax.top_k(-D_top, beam)
+            d_sel, sel_idx = -neg, slot.astype(jnp.int32)
+        else:
+            W = cand_idx.shape[1]
+            beam = min(beams[l], W)
+            d_sel, slot = rank(lv, cand_idx, cand_ok, beam)  # [B, beam]
+            sel_idx = jnp.take_along_axis(cand_idx, slot, axis=1)
+        sel_ok = (d_sel < radii[l]) & (d_sel < BIG / 2)
+
+        starts = jnp.take(lv.child_start, sel_idx)  # [B, beam]
+        counts = jnp.take(lv.child_count, sel_idx)
+        mc = max_children[l]
+        grid = starts[:, :, None] + jnp.arange(mc, dtype=jnp.int32)[None, None, :]
+        gvalid = (
+            jnp.arange(mc)[None, None, :] < counts[:, :, None]
+        ) & sel_ok[:, :, None]
+        n_lower = levels[l - 1].points.shape[0]
+        cand_idx = jnp.clip(grid.reshape(B, beam * mc), 0, n_lower - 1)
+        cand_ok = gvalid.reshape(B, beam * mc)
+
+    leaf = levels[0]
+    if L == 0:  # degenerate single-level index: the leaf is the top
+        W = leaf.points.shape[0]
+        ok = jnp.broadcast_to(leaf.valid[None, :], (B, W))
+        k_eff = min(k, W)
+        neg, slot = jax.lax.top_k(-D_top, k_eff)
+        dists, slots = -neg, slot.astype(jnp.int32)
+    else:
+        W = cand_idx.shape[1]
+        ok = cand_ok
+        k_eff = min(k, W)
+        dists, slot = rank(leaf, cand_idx, ok, k_eff)  # fused leaf ranking
+        slots = jnp.take_along_axis(cand_idx, slot, axis=1)
+    if leaf_radius_filter:
+        in_r = dists < radii[0]
+        dists = jnp.where(in_r, dists, BIG)
+    ids = jnp.where(dists < BIG / 2, jnp.take(index.leaf_ids, slots), -1)
+    # Candidates *examined* (the pruning metric). The fused kernel never
+    # materialises the full leaf distance vector, so with leaf_radius_filter
+    # this counts examined rather than in-radius candidates.
+    n_cand = jnp.sum(ok, axis=1, dtype=jnp.int32)
+    if k_eff < k:  # tiny index edge case: fewer candidate slots than k
+        pad = k - k_eff
+        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=BIG)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    return SearchResult(dists=dists, ids=ids, n_candidates=n_cand)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dist", "k", "r", "beam", "max_children", "leaf_radius_filter",
+        "kernel",
+    ),
+)
+def search_beam(
+    index: PDASCIndexData,
+    Q: Array,
+    *,
+    dist: dist_lib.Distance,
+    k: int = 10,
+    r,
+    beam,
+    max_children: tuple,
+    leaf_radius_filter: bool = False,
+    kernel: Optional[kops.KernelConfig] = None,
+) -> SearchResult:
+    """Batched beam NSA — the serving hot path.
+
+    Args:
+      beam: int or per-level tuple — surviving prototypes per level.
+      max_children: static per-level max cluster size
+        (:func:`repro.core.msa.max_children`).
+      kernel: kernel-layer block knobs (None = defaults).
+    """
+    n_levels = len(index.levels)
+    radii = _per_level_radii(r, n_levels)
+    beams = _per_level_radii(beam, n_levels)
+    beams = tuple(int(b) for b in beams)
+    squeeze = Q.ndim == 1
+    Qb = Q[None, :] if squeeze else Q
+    res = _search_beam_batch(
+        index,
+        dist,
+        Qb,
+        k=k,
+        radii=radii,
+        beams=beams,
+        max_children=tuple(max_children),
+        leaf_radius_filter=leaf_radius_filter,
+        kernel=kernel or kops.DEFAULT,
+    )
+    if squeeze:
+        res = jax.tree.map(lambda a: a[0], res)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-query beam (seed baseline; kept for benchmarks and as an oracle)
 # ---------------------------------------------------------------------------
 
 
@@ -187,7 +360,6 @@ def _search_beam_single(
 
     for l in range(L, 0, -1):
         lv = levels[l]
-        n_l = lv.points.shape[0]
         pts = jnp.take(lv.points, cand_idx, axis=0)
         d = dist.point(q[None, :], pts)
         ok = cand_ok & (d < radii[l])
@@ -232,7 +404,7 @@ def _search_beam_single(
     jax.jit,
     static_argnames=("dist", "k", "r", "beam", "max_children", "leaf_radius_filter"),
 )
-def search_beam(
+def search_beam_vmap(
     index: PDASCIndexData,
     Q: Array,
     *,
@@ -243,12 +415,10 @@ def search_beam(
     max_children: tuple,
     leaf_radius_filter: bool = False,
 ) -> SearchResult:
-    """Batched beam NSA.
+    """The seed per-query beam NSA (vmap of scalar ``dist.point`` searches).
 
-    Args:
-      beam: int or per-level tuple — surviving prototypes per level.
-      max_children: static per-level max cluster size
-        (:func:`repro.core.msa.max_children`).
+    Superseded by :func:`search_beam`; retained as the benchmark baseline
+    and as an independent oracle for the batched path's tests.
     """
     n_levels = len(index.levels)
     radii = _per_level_radii(r, n_levels)

@@ -6,6 +6,20 @@
   ref.py      — pure-jnp oracles defining each kernel's contract
 """
 
-from repro.kernels.ops import knn, pairwise_distance, resolve_form
+from repro.kernels.ops import (
+    DEFAULT,
+    KernelConfig,
+    knn,
+    pairwise_distance,
+    rank_candidates,
+    resolve_form,
+)
 
-__all__ = ["knn", "pairwise_distance", "resolve_form"]
+__all__ = [
+    "DEFAULT",
+    "KernelConfig",
+    "knn",
+    "pairwise_distance",
+    "rank_candidates",
+    "resolve_form",
+]

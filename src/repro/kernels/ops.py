@@ -1,9 +1,11 @@
 """jit'd dispatch wrappers over the Pallas kernels.
 
-Public ops:
+Public ops (the single execution substrate for every NSA/MSA distance
+evaluation and ranking step — DESIGN.md §3.3):
 
-  pairwise_distance(X, Y, distance)  -> [m, n]
-  knn(Q, DB, distance, k)            -> (dists[q, k], ids[q, k])
+  pairwise_distance(X, Y, distance)       -> [m, n]
+  knn(Q, DB, distance, k)                 -> (dists[q, k], ids[q, k])
+  rank_candidates(Q, C, ok, distance, k)  -> (dists[b, k], slots[b, k])
 
 ``distance`` may be a kernel form (``ref.FORMS``), a registry name
 (``repro.core.distances``), or a ``Distance`` object. Dispatch:
@@ -15,20 +17,39 @@ Public ops:
 * form not kernelised (haversine, jaccard, fractional, generic minkowski)
   -> reference / registry fallback. PDASC stays fully functional for *any*
   distance; the kernels accelerate the common forms.
+
+``KernelConfig`` bundles the block-size knobs (``bm/bn/bd`` for the pairwise
+grid, ``bq`` for the query tile of the fused rank/knn kernels, ``row_chunk``
+for the CPU streaming fallbacks) so callers can thread one hashable object
+through jit'd search functions.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import pairwise as _pw
-from repro.kernels import topk as _tk
 from repro.kernels import ref as _ref
+from repro.kernels import topk as _tk
 
 Array = jax.Array
+
+
+class KernelConfig(NamedTuple):
+    """Block-size knobs for the kernel layer (hashable; jit-static)."""
+
+    bm: int = 128  # pairwise: query-rows tile
+    bn: int = 128  # pairwise / rank / knn: candidate-cols tile
+    bd: int = 256  # pairwise: feature-dim tile (VPU forms clamp to 64)
+    bq: int = 8  # rank / knn: query tile of the fused top-k kernels
+    row_chunk: int = 1024  # CPU fallback streaming chunk (bounds cube memory)
+    force_pallas: bool = False  # run Pallas interpret=True off-TPU (tests)
+
+
+DEFAULT = KernelConfig()
 
 
 def resolve_form(distance) -> Optional[str]:
@@ -53,20 +74,31 @@ def pairwise_distance(
     bm: int = 128,
     bn: int = 128,
     bd: int = 256,
+    row_chunk: Optional[int] = None,
     force_pallas: bool = False,
 ) -> Array:
-    """[m, d] x [n, d] -> [m, n] distances via the best available path."""
+    """[m, d] x [n, d] -> [m, n] distances via the best available path.
+
+    ``row_chunk`` bounds the peak memory of the non-Gram CPU fallbacks: the
+    broadcast cube is streamed in slabs of at most [row_chunk, row_chunk, d]
+    (both axes chunked) instead of being materialised whole. The Pallas
+    paths tile through VMEM and never build the cube regardless.
+    """
     form = resolve_form(distance)
     if form is None:
         from repro.core import distances as dist_lib  # registry fallback
 
-        return dist_lib.get(distance).pairwise(X, Y)
+        return dist_lib.pairwise_chunked(
+            distance, X, Y, chunk=row_chunk or 4096
+        )
     m, n = X.shape[0], Y.shape[0]
     if _on_tpu() or force_pallas:
         out = _pw.pairwise_pallas(
             X, Y, form=form, bm=bm, bn=bn, bd=bd, interpret=not _on_tpu()
         )
         return out[:m, :n]
+    if form in _ref.VPU_FORMS and row_chunk and (m > row_chunk or n > row_chunk):
+        return _ref.pairwise_ref_chunked(X, Y, form, row_chunk)
     return _ref.pairwise_ref(X, Y, form)
 
 
@@ -93,3 +125,101 @@ def knn(
             Q, DB, form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu()
         )
     return _ref.knn_ref(Q, DB, k, form)
+
+
+def rank_candidates(
+    Q: Array,
+    C: Array,
+    ok: Array,
+    distance="l2",
+    *,
+    k: int,
+    c_sq_norms: Optional[Array] = None,
+    bq: int = 8,
+    bn: int = 256,
+    force_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Fused masked ranking of per-query gathered candidates.
+
+    ``Q``: [b, d]; ``C``: [b, w, d]; ``ok``: [b, w] bool. Returns
+    (dists[b, k] ascending, slots[b, k] indexing the ``w`` axis). Masked /
+    missing slots rank as ``BIG``. This is the batched-beam primitive: one
+    call replaces ``b`` independent scalar gather+top_k searches, and on the
+    Pallas paths the [b, w] distance matrix never leaves VMEM.
+
+    ``c_sq_norms``: optional [b, w] squared candidate norms gathered from an
+    index-side cache (``PDASCLevel.sq_norm``). For the norm-consuming forms
+    this saves a full reduction pass over the [b, w, d] candidate cube.
+    """
+    form = resolve_form(distance)
+    if form is None:
+        from repro.core import distances as dist_lib
+
+        dist = dist_lib.get(distance)
+        D = dist.point(Q[:, None, :], C)  # broadcast over the w axis
+        D = jnp.where(ok, D, dist_lib.BIG)
+        neg, slots = jax.lax.top_k(-D, k)
+        return -neg, slots.astype(jnp.int32)
+    if _on_tpu() or force_pallas:
+        return _tk.rank_pallas(
+            Q, C, ok, c_sq_norms,
+            form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu(),
+        )
+    return _ref.rank_ref(Q, C, ok, k, form, cc=c_sq_norms)
+
+
+def rank_gathered(
+    Q: Array,
+    points: Array,
+    sq_norms: Array,
+    cand_idx: Array,
+    cand_ok: Array,
+    distance="l2",
+    *,
+    k: int,
+    bq: int = 8,
+    bn: int = 256,
+    force_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Rank per-query candidates given as *indices* into a shared point table
+    (the NSA beam-search layout: ``cand_idx[b]`` indexes rows of ``points``).
+
+    Returns (dists[b, k] ascending, slots[b, k] into the candidate axis).
+
+    Dispatch picks the cheapest way to avoid the [b, w, d] gathered cube:
+
+    * TPU / force_pallas — row gather + the fused ``rank_pallas`` kernel
+      (candidate blocks stream through VMEM; the [b, w] distance matrix
+      never reaches HBM).
+    * CPU, Gram form, w a sizeable fraction of the table — one
+      ``pairwise_ref`` cross matrix (a gemm; arithmetic identical to the
+      dense path, which keeps full-width beam bit-compatible with
+      ``search_dense``) followed by a scalar gather of the candidate
+      columns. No [b, w, d] cube, and gemm beats gather-then-reduce by a
+      wide margin on CPU.
+    * CPU, small w or non-Gram form — gather the rows and rank the cube
+      (cache-resident at these sizes; broadcast forms have no gemm).
+    """
+    b, w = cand_idx.shape
+    n = points.shape[0]
+    form = resolve_form(distance)
+    if (
+        form in _ref.GRAM_FORMS
+        and not (_on_tpu() or force_pallas)
+        and n <= 24 * w
+    ):
+        D = _ref.pairwise_ref(Q, points, form)  # [b, n] — one gemm + epilogue
+        d = jnp.take_along_axis(D, cand_idx, axis=1)  # [b, w]
+        d = jnp.where(cand_ok, d, _ref.BIG)
+        neg, slots = jax.lax.top_k(-d, k)
+        return -neg, slots.astype(jnp.int32)
+    C = jnp.take(points, cand_idx, axis=0)  # [b, w, d]
+    cc = (
+        jnp.take(sq_norms, cand_idx)
+        if form in _ref.NORM_FORMS and sq_norms is not None
+        else None
+    )
+    return rank_candidates(
+        Q, C, cand_ok, distance, k=k, c_sq_norms=cc,
+        bq=bq, bn=bn, force_pallas=force_pallas,
+    )

@@ -21,6 +21,8 @@ benchmarks). ``repro.core.distances`` registry names map onto forms via
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -41,6 +43,46 @@ FORM_OF = {
 
 _EPS = 1e-12
 BIG = 1e30
+
+
+def stream_cols(pairwise_fn, X: Array, Y: Array, chunk: int) -> Array:
+    """Column-streamed pairwise: apply ``pairwise_fn(X, y_chunk)`` to
+    [chunk]-row slabs of ``Y`` and concatenate, bounding peak memory at
+    [m, chunk, d] for broadcast-form distances."""
+    m, n = X.shape[0], Y.shape[0]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    Yp = jnp.pad(Y, ((0, pad), (0, 0)))
+    Yc = Yp.reshape(n_chunks, chunk, Y.shape[1])
+    out = jax.lax.map(lambda yc: pairwise_fn(X, yc), Yc)  # [nc, m, chunk]
+    return jnp.moveaxis(out, 0, 1).reshape(m, n_chunks * chunk)[:, :n]
+
+
+def stream_rows(pairwise_fn, X: Array, Y: Array, chunk: int) -> Array:
+    """Row-streamed pairwise: apply ``pairwise_fn(x_chunk, Y)`` to
+    [chunk]-row slabs of ``X`` and stack."""
+    m = X.shape[0]
+    n_chunks = -(-m // chunk)
+    pad = n_chunks * chunk - m
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    Xc = Xp.reshape(n_chunks, chunk, X.shape[1])
+    out = jax.lax.map(lambda xc: pairwise_fn(xc, Y), Xc)  # [nc, chunk, n]
+    return out.reshape(n_chunks * chunk, Y.shape[0])[:m]
+
+
+def pairwise_ref_chunked(X: Array, Y: Array, form: str, chunk: int) -> Array:
+    """Broadcast-form pairwise with both axes streamed: peak memory is one
+    [chunk, chunk, d] slab regardless of ``m`` and ``n``."""
+    m, n = X.shape[0], Y.shape[0]
+    if m <= chunk and n <= chunk:
+        return pairwise_ref(X, Y, form)
+    if m > chunk:
+        return stream_rows(
+            lambda xc, Yf: pairwise_ref_chunked(xc, Yf, form, chunk), X, Y, chunk
+        )
+    return stream_cols(
+        lambda Xf, yc: pairwise_ref(Xf, yc, form), X, Y, chunk
+    )
 
 
 def pairwise_ref(X: Array, Y: Array, form: str) -> Array:
@@ -74,3 +116,61 @@ def knn_ref(Q: Array, DB: Array, k: int, form: str) -> tuple[Array, Array]:
     D = pairwise_ref(Q, DB, form)
     neg, ids = jax.lax.top_k(-D, k)
     return -neg, ids.astype(jnp.int32)
+
+
+NORM_FORMS = ("sqeuclidean", "l2", "cosine")  # forms consuming ||c||^2
+
+
+def rowwise_ref(
+    Q: Array, C: Array, form: str, cc: Optional[Array] = None
+) -> Array:
+    """Per-query candidate distances: [b, d] x [b, w, d] -> [b, w].
+
+    The batched-beam primitive: every query carries its *own* candidate set
+    (a gather of index rows), so the Gram trick becomes a batched matvec
+    instead of one cross matmul. Per-element arithmetic matches
+    :func:`pairwise_ref` exactly (same reduction over ``d``), which is what
+    makes full-width beam search bit-compatible with the dense path.
+
+    ``cc`` optionally supplies precomputed squared candidate norms [b, w]
+    (gathered from an index-side cache); without it the norms are reduced
+    from ``C`` — a full extra pass over the candidate cube.
+    """
+    Q = Q.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    if cc is None and form in NORM_FORMS:
+        cc = jnp.sum(C * C, axis=-1)
+    if form in ("sqeuclidean", "l2"):
+        qq = jnp.sum(Q * Q, axis=-1)
+        g = jnp.einsum("bd,bwd->bw", Q, C, preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qq[:, None] + cc.astype(jnp.float32) - 2.0 * g, 0.0)
+        return d2 if form == "sqeuclidean" else jnp.sqrt(d2)
+    if form == "cosine":
+        qn = jnp.sqrt(jnp.maximum(jnp.sum(Q * Q, axis=-1), _EPS))
+        cn = jnp.sqrt(jnp.maximum(cc.astype(jnp.float32), _EPS))
+        cos = jnp.einsum(
+            "bd,bwd->bw", Q, C, preferred_element_type=jnp.float32
+        ) / (qn[:, None] * cn)
+        return 1.0 - jnp.clip(cos, -1.0, 1.0)
+    if form == "dot":
+        return -jnp.einsum("bd,bwd->bw", Q, C, preferred_element_type=jnp.float32)
+    if form == "l1":
+        return jnp.sum(jnp.abs(Q[:, None, :] - C), axis=-1)
+    if form == "chebyshev":
+        return jnp.max(jnp.abs(Q[:, None, :] - C), axis=-1)
+    raise ValueError(f"unknown form {form!r}")
+
+
+def rank_ref(
+    Q: Array, C: Array, ok: Array, k: int, form: str,
+    cc: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Masked per-query top-k over gathered candidates.
+
+    Returns (dists[b, k] ascending, slots[b, k]) where ``slots`` index the
+    candidate (``w``) axis; masked-out / missing slots yield ``BIG`` / the
+    top_k tie order over ``BIG`` entries.
+    """
+    D = jnp.where(ok, rowwise_ref(Q, C, form, cc), BIG)
+    neg, slots = jax.lax.top_k(-D, k)
+    return -neg, slots.astype(jnp.int32)

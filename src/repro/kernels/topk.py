@@ -29,11 +29,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import BIG, FORMS, GRAM_FORMS
+from repro.kernels.ref import BIG, FORMS, GRAM_FORMS, NORM_FORMS
 
 Array = jax.Array
 
 _EPS = 1e-12
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 def _tile_distance(form: str, q: Array, db: Array) -> Array:
@@ -77,10 +81,6 @@ def _knn_kernel(q_ref, db_ref, od_ref, oi_ref, *, form, k, bn, n_valid):
     neg, idx = jax.lax.top_k(-all_d, k)
     od_ref[...] = -neg
     oi_ref[...] = jnp.take_along_axis(all_i, idx, axis=1)
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 @functools.partial(
@@ -136,3 +136,144 @@ def knn_pallas(
         interpret=interpret,
     )(Qp, DBp)
     return dists[:nq], ids[:nq]
+
+
+# ---------------------------------------------------------------------------
+# Fused gather -> distance -> top-k leaf ranking (batched beam search)
+# ---------------------------------------------------------------------------
+
+
+def _rank_tile_distance(form: str, q: Array, c: Array, cc) -> Array:
+    """[bq, d] x [bq, bn, d] -> [bq, bn] per-query distance tile.
+
+    Every query row sees its *own* candidate rows (the beam-search layout),
+    so there is no shared [bq, d] x [d, bn] matmul form; the reduction over
+    ``d`` runs on the VPU against the VMEM-resident candidate block, mirroring
+    ``pairwise._vpu_kernel``. Norm-consuming forms receive the gathered
+    ``||c||^2`` tile (``cc``) from the index-side cache instead of re-reducing
+    the candidate cube.
+    """
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    if form in GRAM_FORMS:
+        g = jnp.sum(q[:, None, :] * c, axis=-1)  # [bq, bn]
+        if form == "dot":
+            return -g
+        qq = jnp.sum(q * q, axis=-1)[:, None]
+        cc = cc.astype(jnp.float32)
+        if form in ("sqeuclidean", "l2"):
+            d2 = jnp.maximum(qq + cc - 2.0 * g, 0.0)
+            return d2 if form == "sqeuclidean" else jnp.sqrt(d2)
+        norm = jnp.sqrt(jnp.maximum(qq, _EPS)) * jnp.sqrt(jnp.maximum(cc, _EPS))
+        return 1.0 - jnp.clip(g / norm, -1.0, 1.0)
+    diff = jnp.abs(q[:, None, :] - c)
+    if form == "l1":
+        return jnp.sum(diff, axis=-1)
+    if form == "chebyshev":
+        return jnp.max(diff, axis=-1)
+    raise ValueError(form)
+
+
+def _rank_kernel(q_ref, c_ref, ok_ref, *rest, form, k, bn):
+    # rest is (cc_ref, od_ref, oi_ref) for norm-consuming forms (l2 /
+    # sqeuclidean / cosine stream the gathered norm tile) and (od_ref,
+    # oi_ref) otherwise.
+    if form in NORM_FORMS:
+        cc_ref, od_ref, oi_ref = rest
+    else:
+        cc_ref, (od_ref, oi_ref) = None, rest
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full_like(od_ref, BIG)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    cc = cc_ref[...] if cc_ref is not None else None
+    d = _rank_tile_distance(form, q_ref[...], c_ref[...], cc)  # [bq, bn]
+    d = jnp.where(ok_ref[...] != 0, d, BIG)
+    bq = d.shape[0]
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+
+    all_d = jnp.concatenate([od_ref[...], d], axis=1)  # [bq, k + bn]
+    all_i = jnp.concatenate([oi_ref[...], col], axis=1)
+    neg, idx = jax.lax.top_k(-all_d, k)
+    od_ref[...] = -neg
+    oi_ref[...] = jnp.take_along_axis(all_i, idx, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("form", "k", "bq", "bn", "interpret")
+)
+def rank_pallas(
+    Q: Array,
+    C: Array,
+    ok: Array,
+    cc: Array = None,
+    *,
+    form: str,
+    k: int,
+    bq: int = 8,
+    bn: int = 256,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused masked candidate ranking: the NSA leaf/beam hot path.
+
+    ``Q``: [b, d] queries; ``C``: [b, w, d] per-query gathered candidates;
+    ``ok``: [b, w] validity mask; ``cc``: optional gathered squared candidate
+    norms [b, w] (l2 / sqeuclidean / cosine; reduced from ``C`` if absent).
+    Returns (dists[b, k] ascending, slots[b, k] into the ``w`` axis; masked
+    slots rank as ``BIG``).
+
+    The [b, w] distance matrix is never materialised in HBM: candidate
+    blocks of [bq, bn, d] stream through VMEM and only the running [bq, k]
+    top-k state persists, exactly like :func:`knn_pallas` but with a
+    per-query candidate axis.
+    """
+    if form not in FORMS:
+        raise ValueError(f"unsupported form {form!r}")
+    b, d = Q.shape
+    b2, w, d2 = C.shape
+    if b != b2 or d != d2:
+        raise ValueError(f"shape mismatch {Q.shape} vs {C.shape}")
+    if k > w:
+        raise ValueError(f"k={k} > candidate width w={w}")
+
+    bp, wp = _ceil_to(b, bq), _ceil_to(w, bn)
+    Qp = jnp.pad(Q, ((0, bp - b), (0, 0)))
+    Cp = jnp.pad(C, ((0, bp - b), (0, wp - w), (0, 0)))
+    okp = jnp.pad(ok.astype(jnp.int8), ((0, bp - b), (0, wp - w)))
+    grid = (bp // bq, wp // bn)
+
+    in_arrays = [Qp, Cp, okp]
+    in_specs = [
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bq, bn, d), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+    ]
+    if form in NORM_FORMS:
+        if cc is None:
+            cc = jnp.sum(C.astype(jnp.float32) * C, axis=-1)
+        ccp = jnp.pad(cc.astype(jnp.float32), ((0, bp - b), (0, wp - w)))
+        in_arrays.append(ccp)
+        in_specs.append(pl.BlockSpec((bq, bn), lambda i, j: (i, j)))
+
+    kernel = functools.partial(_rank_kernel, form=form, k=k, bn=bn)
+    dists, slots = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*in_arrays)
+    # Honour the slot contract (in [0, w)) even for masked/short rows: the
+    # -1 init and padded columns rank as BIG but must not leak out-of-range
+    # indices to host-side consumers (np.take_along_axis would wrap them).
+    return dists[:b], jnp.clip(slots[:b], 0, w - 1)

@@ -161,20 +161,25 @@ def _memory_dict(compiled) -> dict:
 def _compile_cell(cell, mesh):
     import jax
 
+    from repro.launch.mesh import set_mesh
+
     jitted = jax.jit(
         cell.step,
         in_shardings=cell.in_shardings(mesh),
         out_shardings=cell.out_shardings(mesh),
         donate_argnums=cell.donate,
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(*cell.args)
         compiled = lowered.compile()
     return compiled
 
 
 def _measure(compiled):
-    cost = dict(compiled.cost_analysis() or {})
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax < 0.6 returns [dict]
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     cost = {k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and k in
             ("flops", "bytes accessed", "transcendentals", "optimal_seconds")}

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
-from repro.kernels.ops import knn
+from repro.kernels.ops import KernelConfig, knn
 from repro.serving import BatchingEngine
 
 
@@ -35,6 +35,16 @@ def _parse():
     p.add_argument("--max-wait-ms", type=float, default=4.0)
     p.add_argument("--radius-quantile", type=float, default=0.5)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--mode", default="beam",
+                   choices=["beam", "dense", "beam_vmap"])
+    p.add_argument("--beam", type=int, default=32)
+    # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
+    kd = KernelConfig()
+    p.add_argument("--bm", type=int, default=kd.bm)
+    p.add_argument("--bn", type=int, default=kd.bn)
+    p.add_argument("--bd", type=int, default=kd.bd)
+    p.add_argument("--bq", type=int, default=kd.bq)
+    p.add_argument("--row-chunk", type=int, default=kd.row_chunk)
     return p.parse_args()
 
 
@@ -50,8 +60,12 @@ def main():
                            radius_quantile=args.radius_quantile)
     print(f"[serve] built in {time.time()-t0:.1f}s\n{idx.describe()}")
 
+    kernel = KernelConfig(bm=args.bm, bn=args.bn, bd=args.bd, bq=args.bq,
+                          row_chunk=args.row_chunk)
+
     def handler(batch, n_valid):
-        res = idx.search(jnp.asarray(batch), k=args.k)
+        res = idx.search(jnp.asarray(batch), k=args.k, mode=args.mode,
+                         beam=args.beam, kernel=kernel)
         return res.dists, res.ids
 
     engine = BatchingEngine(handler, batch_size=args.batch,

@@ -456,11 +456,11 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
     n_levels = len(idx_sds.levels)
 
     if variant == "opt-beam":
-        # §Perf H3 (attempt 1, REFUTED on the memory axis — kept for the
-        # record): beam-pruned NSA gathers only the top-`beam` in-radius
-        # prototypes' sibling-contiguous child blocks. FLOPs drop ~3x but
-        # the per-query point gathers materialise [Q, cand, d] cubes that
-        # cost more bytes than the dense [Q, n] matmuls at d=100.
+        # §Perf H3: beam-pruned NSA gathers only the top-`beam` in-radius
+        # prototypes' sibling-contiguous child blocks. Batched through the
+        # fused rank kernel (one gather + one VMEM-streamed rank per level),
+        # so the [Q, cand] distance matrix that attempt 1 materialised in
+        # HBM never leaves VMEM.
         beam, mc = 32, 8
 
         def step(index, queries):
@@ -468,6 +468,7 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
                 index, queries, mesh, db_axes=allA, dist=cfg.distance,
                 k=cfg.k, r=cfg.radius, mode="beam", beam=beam,
                 max_children=(0,) + (mc,) * (n_levels - 1), merge="butterfly",
+                kernel=cfg.kernel_config(),
             )
     elif variant == "opt":
         # §Perf H3 (attempt 2): keep the faithful dense-masked search but

@@ -20,7 +20,11 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+import jax
 import numpy as np
+
+# Sentinel pushed by close() to wake a worker blocked on the request queue.
+_SHUTDOWN = object()
 
 
 @dataclasses.dataclass
@@ -66,9 +70,10 @@ class BatchingEngine:
         return req
 
     def _take_batch(self) -> list[Request]:
-        try:
-            first = self._q.get(timeout=0.05)
-        except queue.Empty:
+        # Block until traffic arrives — an idle worker parks on the queue
+        # instead of spinning a poll loop; close() unblocks it via a sentinel.
+        first = self._q.get()
+        if first is _SHUTDOWN:
             return []
         batch = [first]
         deadline = first.enqueued_at + self.max_wait
@@ -77,21 +82,27 @@ class BatchingEngine:
             if remaining <= 0:
                 break
             try:
-                batch.append(self._q.get(timeout=remaining))
+                item = self._q.get(timeout=remaining)
             except queue.Empty:
                 break
+            if item is _SHUTDOWN:
+                # close() raced the fill: serve what we have; the worker
+                # loop re-checks _stop (already set) and exits after.
+                break
+            batch.append(item)
         return batch
 
     def _worker(self):
-        while not self._stop.is_set():
+        # After close() the worker drains requests already enqueued (they
+        # hold waiting callers) before exiting; _take_batch cannot block
+        # here because a non-empty queue returns promptly.
+        while not self._stop.is_set() or not self._q.empty():
             batch = self._take_batch()
             if not batch:
                 continue
             n = len(batch)
             pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
             rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
-            import jax
-
             stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
             results = self.handler(stacked, n)
             for i, r in enumerate(batch):
@@ -103,6 +114,7 @@ class BatchingEngine:
 
     def close(self):
         self._stop.set()
+        self._q.put(_SHUTDOWN)  # wake the worker if it is parked on get()
         self._thread.join(timeout=2.0)
 
     @property

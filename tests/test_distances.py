@@ -1,8 +1,6 @@
 """Property tests for the distance registry (hypothesis)."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from _hypothesis_compat import hnp, hypothesis, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -67,7 +65,11 @@ def test_identity_of_indiscernibles():
     X = np.random.default_rng(0).normal(size=(5, 4)).astype(np.float32)
     for name in ["euclidean", "manhattan", "chebyshev", "cosine"]:
         D = np.asarray(dl.get(name).pairwise(jnp.asarray(X), jnp.asarray(X)))
-        np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-5)
+        # Gram-form euclidean computes sqrt(xx + yy - 2xy); the f32
+        # cancellation leaves an O(sqrt(eps * ||x||^2)) residual on the
+        # diagonal, so the tolerance cannot be tighter than ~1e-3 there.
+        atol = 2e-3 if dl.get(name).gram_form else 1e-5
+        np.testing.assert_allclose(np.diag(D), 0.0, atol=atol)
 
 
 def test_fractional_not_metric():

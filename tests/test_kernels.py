@@ -1,8 +1,7 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
 (the kernel body executes on CPU; BlockSpecs are the TPU contract)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,8 +3,7 @@ recsys learning + EmbeddingBag equivalences."""
 
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

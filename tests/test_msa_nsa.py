@@ -1,7 +1,6 @@
 """MSA index structure + NSA search vs the literal paper-pseudocode port."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
