@@ -1,51 +1,146 @@
-"""Paper §3.1 (Fig. 2): index construction behaviour — level structure,
-per-level TD, outlier promotion, build time vs gl, k-medoids vs k-means."""
+"""MSA build benchmark: the seed path vs the kernel-layer build substrate.
+
+Seed path (preserved in-tree as the baseline): dense whole-level [G, g, g]
+pairwise (``group_chunk=0``) + vmapped scalar greedy BUILD + the
+one-swap-per-sweep FasterPAM loop (``method="pam_reference"``,
+``swap_tol=0``). New path (the defaults): candidate-pruned batched BUILD +
+eager multi-swap FasterPAM with the ``swap_tol`` convergence cutoff, either
+dense (``group_chunk=0``) or streamed in ``group_chunk`` slabs (the
+memory-bounded mode — peak clustering memory O(group_chunk · gl²)).
+
+    PYTHONPATH=src python -m benchmarks.bench_build [--smoke]
+        [--out experiments/build.json] [--bench-out BENCH_build.json]
+
+``--smoke`` runs a tiny config (2 gl values, small n, correctness assertions
+only — no wall-time assertions) so CI can catch build-path regressions after
+the tier-1 suite; the full run also records the seed-vs-new wall-time table
+into ``BENCH_build.json`` and asserts the gl=256 speedup.
+
+Every seed-vs-new pair asserts identical ``level_sizes`` (same key => same
+shuffle => same grouping) and level-0 TD within 1% of the seed swap loop.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
+import jax
 import numpy as np
 
+from repro.core import msa
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 
+SEED_KW = dict(method="pam_reference", group_chunk=0, swap_tol=0.0)
+NEW_DENSE_KW = dict(method="pam", group_chunk=0)
+NEW_STREAM_KW = dict(method="pam")  # group_chunk default (streamed slabs)
 
-def run(seed: int = 0):
+
+def _timed_build(data, *, gl, repeats, key_warm, key_time, **kw):
+    """Warm (compile) with one key, then time re-builds with another."""
+    _, stats = msa.build_index(data, gl=gl, key=key_warm, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        msa.build_index(data, gl=gl, key=key_time, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), stats
+
+
+def _check_pair(row, seed_stats, new_stats, label):
+    assert seed_stats.level_sizes == new_stats.level_sizes, (
+        label, seed_stats.level_sizes, new_stats.level_sizes)
+    drift = new_stats.level_td[0] / max(seed_stats.level_td[0], 1e-9) - 1.0
+    row[f"td_drift_pct_{label}"] = round(100 * drift, 4)
+    assert abs(drift) < 0.01, (label, drift)
+
+
+def run(smoke: bool = False, seed: int = 0):
+    if smoke:
+        n, gls, repeats = 1200, (32, 64), 1
+        method_n, method_gl = 600, 32
+    else:
+        n, gls, repeats = 6000, (64, 128, 256, 512), 5
+        method_n, method_gl = 3000, 128
+    data = make_dataset("dense_embed", n=n, seed=seed).astype(np.float32)
+    kw_warm, kw_time = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
     rows = []
-    data = make_dataset("dense_embed", n=6000, seed=seed)
-    for gl in (64, 128, 256, 512):
-        t0 = time.perf_counter()
-        idx = PDASCIndex.build(data, gl=gl, distance="euclidean")
-        dt = time.perf_counter() - t0
-        rows.append(dict(
-            bench="build_gl", gl=gl, n_levels=idx.n_levels,
-            level_sizes=list(idx.stats.level_sizes),
-            build_s=round(dt, 2),
-            td0=round(idx.stats.level_td[0], 1),
-        ))
-        print(f"[build] gl={gl}: levels={idx.stats.level_sizes} "
-              f"t={dt:.2f}s", flush=True)
 
-    # clusterer comparison (paper §3.3: k-means is Euclidean-bound)
+    # -- seed vs new across group lengths (pam) ------------------------------
+    for gl in gls:
+        t_seed, st_seed = _timed_build(
+            data, gl=gl, repeats=repeats, key_warm=kw_warm, key_time=kw_time,
+            **SEED_KW)
+        t_new, st_new = _timed_build(
+            data, gl=gl, repeats=repeats, key_warm=kw_warm, key_time=kw_time,
+            **NEW_DENSE_KW)
+        t_str, st_str = _timed_build(
+            data, gl=gl, repeats=repeats, key_warm=kw_warm, key_time=kw_time,
+            **NEW_STREAM_KW)
+        row = dict(
+            bench="build_seed_vs_new", gl=gl, n=n,
+            level_sizes=list(st_seed.level_sizes),
+            seed_s=round(t_seed, 3),
+            new_dense_s=round(t_new, 3),
+            new_streamed_s=round(t_str, 3),
+            speedup_dense=round(t_seed / t_new, 2),
+            speedup_streamed=round(t_seed / t_str, 2),
+            td0_seed=round(st_seed.level_td[0], 1),
+            td0_new=round(st_new.level_td[0], 1),
+        )
+        _check_pair(row, st_seed, st_new, "dense")
+        _check_pair(row, st_seed, st_str, "streamed")
+        row["build_s"] = row["new_dense_s"]  # headline value (run.py CSV)
+        rows.append(row)
+        print(f"[build] gl={gl}: seed {t_seed:.3f}s  dense {t_new:.3f}s "
+              f"({row['speedup_dense']}x)  streamed {t_str:.3f}s "
+              f"({row['speedup_streamed']}x)", flush=True)
+    if not smoke:
+        # Wall-clock bar checked softly here (run() is also called by the
+        # benchmarks.run aggregator on arbitrary machines); main() enforces
+        # it before recording BENCH_build.json.
+        r256 = next(r for r in rows if r.get("bench") == "build_seed_vs_new" and r.get("gl") == 256)
+        if r256["speedup_dense"] < 2.0:
+            print(f"[build] WARNING: gl=256 dense speedup "
+                  f"{r256['speedup_dense']}x below the 2x bar "
+                  f"(noisy/loaded machine?)", flush=True)
+
+    # -- seed vs new per clusterer method ------------------------------------
+    mdata = data[:method_n]
     for method in ("pam", "alternate", "build", "kmeans"):
-        t0 = time.perf_counter()
-        idx = PDASCIndex.build(data[:3000], gl=128, distance="euclidean",
-                               method=method)
-        dt = time.perf_counter() - t0
-        rows.append(dict(bench="build_method", method=method,
-                         build_s=round(dt, 2),
-                         td0=round(idx.stats.level_td[0], 1)))
-        print(f"[build] method={method}: td0={idx.stats.level_td[0]:.1f} "
-              f"t={dt:.2f}s", flush=True)
+        seed_m = "pam_reference" if method == "pam" else method
+        t_seed, st_seed = _timed_build(
+            mdata, gl=method_gl, repeats=repeats, key_warm=kw_warm,
+            key_time=kw_time, method=seed_m, group_chunk=0, swap_tol=0.0)
+        t_new, st_new = _timed_build(
+            mdata, gl=method_gl, repeats=repeats, key_warm=kw_warm,
+            key_time=kw_time, method=method)
+        row = dict(
+            bench="build_method", method=method, gl=method_gl, n=method_n,
+            seed_s=round(t_seed, 3), new_s=round(t_new, 3),
+            speedup=round(t_seed / t_new, 2),
+            td0_seed=round(st_seed.level_td[0], 1),
+            td0_new=round(st_new.level_td[0], 1),
+        )
+        assert st_seed.level_sizes == st_new.level_sizes, (method, st_seed, st_new)
+        if method in ("pam", "alternate", "build"):  # kmeans reports td=0
+            _check_pair(row, st_seed, st_new, method)
+        row["build_s"] = row["new_s"]  # headline value (run.py CSV)
+        rows.append(row)
+        print(f"[build] method={method}: seed {t_seed:.3f}s new {t_new:.3f}s "
+              f"({row['speedup']}x)", flush=True)
 
-    # outlier promotion: islands (geo) keep their own prototypes
+    # -- outlier promotion (paper Fig. 2): islands keep their prototypes -----
+    if smoke:  # covered by tier-1 tests; skip the extra haversine build in CI
+        return rows
     geo = make_dataset("geo_clusters", n=2000, seed=seed)
     idx = PDASCIndex.build(geo, gl=60, distance="haversine")
     top = np.asarray(idx.data.levels[-1].points)
     top = top[np.asarray(idx.data.levels[-1].valid)]
-    lat_deg = top[:, 0] * 180 / np.pi
-    n_island = int((lat_deg < 32).sum())
+    n_island = int((top[:, 0] * 180 / np.pi < 32).sum())
     rows.append(dict(bench="outliers", top_level_protos=len(top),
                      island_protos=n_island))
     print(f"[build] top-level prototypes={len(top)}, island={n_island}")
@@ -54,13 +149,36 @@ def run(seed: int = 0):
 
 
 def main(argv=None):
-    import json
-    import os
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny config, correctness assertions only (CI)")
+    p.add_argument("--out", default="experiments/build.json")
+    p.add_argument("--bench-out", default="BENCH_build.json")
+    args = p.parse_args(argv)
 
-    rows = run()
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/build.json", "w") as f:
+    rows = run(smoke=args.smoke)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
+    if not args.smoke:
+        r256 = next(r for r in rows if r.get("bench") == "build_seed_vs_new" and r.get("gl") == 256)
+        assert r256["speedup_dense"] >= 2.0, (
+            "gl=256 dense speedup below the recorded 2x bar", r256)
+        payload = dict(
+            bench="msa_build_seed_vs_kernel_layer",
+            backend=jax.default_backend(),
+            baseline=("seed: dense whole-level [G,g,g] pairwise + vmapped "
+                      "scalar greedy BUILD + one-swap-per-sweep FasterPAM "
+                      "(method=pam_reference, group_chunk=0, swap_tol=0)"),
+            new=("candidate-pruned batched BUILD + eager multi-swap "
+                 "FasterPAM (swap_tol=1e-3); dense (group_chunk=0) and "
+                 "streamed (group_chunk slabs, peak clustering memory "
+                 "O(group_chunk*gl^2)) layouts"),
+            rows=rows,
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.bench_out}")
 
 
 if __name__ == "__main__":

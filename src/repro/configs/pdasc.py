@@ -26,17 +26,24 @@ class PDASCArchConfig:
     k: int = 10  # neighbours (paper protocol: 10-NN)
     n_queries: int = 4096
     radius: float = 13.0  # paper Table 2, GLOVE euclidean
-    # Kernel-layer block knobs (DESIGN.md §3.3): pairwise grid tiles
-    # (bm x bn x bd), fused rank/knn query tile (bq), CPU streaming chunk.
+    # Kernel-layer block knobs (DESIGN.md §3.3/§3.5): pairwise grid tiles
+    # (bm x bn x bd), fused rank/knn query tile (bq), swap-sweep row tile
+    # (bg), CPU streaming chunk, and the build's group-chunk streaming slab.
     bm: int = _KD.bm
     bn: int = _KD.bn
     bd: int = _KD.bd
     bq: int = _KD.bq
+    bg: int = _KD.bg
     row_chunk: int = _KD.row_chunk
+    group_chunk: int = _KD.group_chunk
+    # Build-algorithm knob (not a block size, so not in KernelConfig): the
+    # eager-swap per-sweep relative improvement cutoff (0 = full convergence).
+    swap_tol: float = 1e-3
 
     def kernel_config(self) -> KernelConfig:
         return KernelConfig(bm=self.bm, bn=self.bn, bd=self.bd, bq=self.bq,
-                            row_chunk=self.row_chunk)
+                            bg=self.bg, row_chunk=self.row_chunk,
+                            group_chunk=self.group_chunk)
 
 
 def config() -> PDASCArchConfig:

@@ -152,12 +152,17 @@ def build_sharded(
     max_swaps: int = 64,
     key: Optional[Array] = None,
     row_chunk: int = 512,
+    group_chunk: int = 8,
+    swap_tol: float = 1e-3,
+    bg: int = 128,
 ):
     """Build one PDASC sub-index per device shard.
 
     ``data``: [n, d] with ``n`` divisible by the product of ``db_axes`` sizes.
     Returns a stacked ``PDASCIndexData`` whose every leaf has a leading
-    per-shard axis of size P (sharded over ``db_axes``).
+    per-shard axis of size P (sharded over ``db_axes``). ``group_chunk``
+    bounds each shard's clustering working set at O(group_chunk · gl²) —
+    the per-node memory budget of the paper's deployment model.
     """
     Pn = _axes_size(mesh, db_axes)
     n, d = data.shape
@@ -177,6 +182,9 @@ def build_sharded(
             max_swaps=max_swaps,
             key=k_local,
             row_chunk=row_chunk,
+            group_chunk=group_chunk,
+            swap_tol=swap_tol,
+            bg=bg,
         )
         return jax.tree.map(lambda a: a[None], index)
 

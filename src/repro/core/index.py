@@ -54,6 +54,9 @@ class PDASCIndex:
         key: Optional[Array] = None,
         radius_quantile: float = 0.05,
         row_chunk: int = 512,
+        group_chunk: int = 8,
+        swap_tol: float = 1e-3,
+        bg: int = 128,
         shuffle: bool = True,
     ) -> "PDASCIndex":
         dist = dist_lib.get(distance)
@@ -67,6 +70,9 @@ class PDASCIndex:
             max_swaps=max_swaps,
             key=key,
             row_chunk=row_chunk,
+            group_chunk=group_chunk,
+            swap_tol=swap_tol,
+            bg=bg,
             shuffle=shuffle,
         )
         default_r = radius_lib.estimate_radius(

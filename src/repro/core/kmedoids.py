@@ -15,10 +15,16 @@ distance-agnostic, exactly like PAM itself.
 
 Algorithms
 ----------
-* ``build``      — vectorised greedy PAM BUILD: k passes, each choosing the
-  point whose addition minimises total deviation (TD). O(k g^2), all matmul/
-  reduction shaped.
-* ``swap``       — FasterPAM-decomposed swap phase. Each sweep evaluates *all*
+* ``build`` / ``build_grouped`` — vectorised greedy PAM BUILD: k passes, each
+  choosing the point whose addition minimises total deviation (TD).
+  O(k g^2), all matmul/reduction shaped. ``build_grouped`` runs every pass as
+  one batched ``[G, g, g]`` contraction shared across the group axis (the MSA
+  level layout) instead of a vmapped scalar loop.
+  ``build_grouped_pruned`` is the lazy-greedy variant seeding the swap phase:
+  BUILD's gain function is submodular (facility location), so stale gains
+  upper-bound current ones and each pass only re-evaluates the top-``C``
+  stale candidates — O(k g C) total instead of O(k g^2).
+* ``swap``       — *eager multi-swap* FasterPAM. Each sweep evaluates all
   (candidate j, medoid i) swap deltas at once:
 
       dTD(i, j) = S[j] + T[i, j]
@@ -27,11 +33,17 @@ Algorithms
                    min(d2[o], D[o,j]) - d1[o]               (removal term)
 
   with ``d1/d2/n1`` the cached nearest / second-nearest medoid distances and
-  nearest-medoid slot (the FasterPAM caches). ``T`` is a one-hot matmul
-  (``[k,g] = onehot(n1)^T @ t``) so a sweep costs O(g^2 + g k) — the same
-  complexity class as FasterPAM, fully vectorised. Best improving swap is
-  applied per sweep inside ``lax.while_loop`` until no swap improves TD (or
-  ``max_swaps`` is hit).
+  nearest-medoid slot (the FasterPAM caches). The ``[k, g]`` delta matrix is
+  computed through the kernel layer (``kernels.ops.swap_deltas`` — streamed
+  Pallas sweep on TPU, jnp oracle on CPU), then *every* medoid slot greedily
+  accepts its best improving candidate, best-delta-first, a candidate column
+  going dark once an earlier slot claims it. Because the deltas were priced
+  against the pre-sweep medoid set, the batch of accepted swaps is kept only
+  if its exactly recomputed TD beats the best single swap (whose delta *is*
+  exact); otherwise the sweep falls back to that single swap — TD is
+  monotonically non-increasing either way, and a sweep retires up to k swaps
+  instead of one, cutting the sweep count by ~k on large groups. The seed
+  one-swap-per-sweep loop is kept as ``swap_reference`` (benchmark baseline).
 * ``alternate``  — Voronoi iteration (assign to nearest medoid, re-pick the
   in-cluster point minimising within-cluster TD). Cheaper per sweep, weaker
   optima; used for very large groups.
@@ -49,6 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distances import BIG
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -83,29 +96,110 @@ def _nearest_caches(D: Array, medoids: Array, valid: Array):
 
 
 def build(D: Array, k: int, valid: Array) -> Array:
-    """Greedy PAM BUILD. Returns int32[k] medoid indices (-1 unused)."""
-    g = D.shape[0]
-    n_valid = jnp.sum(valid.astype(jnp.int32))
-    Dm = jnp.where(valid[:, None] & valid[None, :], D, 0.0)  # invalid rows: no cost
+    """Greedy PAM BUILD for one group: int32[k] medoid indices (-1 unused).
+
+    A batch-of-one view over :func:`build_grouped` (one algorithm, one
+    implementation)."""
+    return build_grouped(D[None], k, valid[None])[0]
+
+
+def build_grouped(Dg: Array, k: int, valid: Array) -> Array:
+    """Greedy PAM BUILD over a whole batch of groups at once.
+
+    ``Dg``: [G, g, g]; ``valid``: [G, g]. Returns int32[G, k] medoid indices
+    (-1 unused). Each of the k passes is one batched [G, g, g] contraction —
+    the group axis rides the batched matmul/reduction instead of a vmapped
+    scalar loop, which is what lets XLA fuse the whole pass.
+    """
+    G, g = Dg.shape[0], Dg.shape[1]
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # [G]
+    both = valid[:, :, None] & valid[:, None, :]
+    Dm = jnp.where(both, Dg, 0.0)  # invalid rows: no cost
 
     def body(i, carry):
         medoids, d_nearest, chosen = carry
         # TD if candidate j became a medoid: sum_o min(d_nearest[o], D[o, j]).
         cand_td = jnp.sum(
-            jnp.minimum(d_nearest[:, None], Dm), axis=0, where=valid[:, None]
-        )
+            jnp.minimum(d_nearest[:, :, None], Dm),
+            axis=1,
+            where=valid[:, :, None],
+        )  # [G, g]
         cand_td = jnp.where(valid & ~chosen, cand_td, jnp.inf)
-        j = jnp.argmin(cand_td)
+        j = jnp.argmin(cand_td, axis=1)  # [G]
         ok = i < n_valid  # only fill as many slots as there are valid points
-        medoids = medoids.at[i].set(jnp.where(ok, j.astype(jnp.int32), -1))
-        d_new = jnp.where(ok, jnp.minimum(d_nearest, Dm[:, j]), d_nearest)
-        chosen = chosen.at[j].set(chosen[j] | ok)
-        return medoids, d_new, chosen
+        medoids = medoids.at[:, i].set(jnp.where(ok, j.astype(jnp.int32), -1))
+        dj = jnp.take_along_axis(Dm, j[:, None, None], axis=2)[:, :, 0]
+        d_nearest = jnp.where(ok[:, None], jnp.minimum(d_nearest, dj), d_nearest)
+        hit = (jnp.arange(g)[None, :] == j[:, None]) & ok[:, None]
+        return medoids, d_nearest, chosen | hit
 
-    medoids0 = jnp.full((k,), -1, dtype=jnp.int32)
-    d0 = jnp.full((g,), BIG, dtype=D.dtype)
-    chosen0 = jnp.zeros((g,), dtype=bool)
+    medoids0 = jnp.full((G, k), -1, dtype=jnp.int32)
+    d0 = jnp.full((G, g), BIG, dtype=Dg.dtype)
+    chosen0 = jnp.zeros((G, g), dtype=bool)
     medoids, _, _ = jax.lax.fori_loop(0, k, body, (medoids0, d0, chosen0))
+    return medoids
+
+
+def build_grouped_pruned(
+    Dg: Array, k: int, valid: Array, *, n_cands: int = 16
+) -> Array:
+    """Candidate-pruned greedy BUILD (init for the swap phase).
+
+    The greedy BUILD objective — TD reduction from adding a medoid — is a
+    facility-location function: monotone submodular in the chosen set. Gains
+    therefore only shrink as medoids are added, so a gain computed in an
+    earlier pass is a valid *upper bound* later (the lazy-greedy argument).
+    Each pass evaluates exact gains only for the ``n_cands`` candidates with
+    the best stale bounds — one [G, g, n_cands] contraction instead of the
+    full [G, g, g] pass — and refreshes their bounds. With ``n_cands >= g``
+    this is exact greedy BUILD; at the default it is near-exact (the true
+    argmax is almost always inside the stale top-16), and the eager swap
+    phase absorbs the rare mis-ordered pick. Used only as swap init
+    (``method="pam"``); ``method="build"`` keeps the exact
+    :func:`build_grouped`.
+    """
+    G, g = Dg.shape[0], Dg.shape[1]
+    C = min(n_cands, g)
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    both = valid[:, :, None] & valid[:, None, :]
+    Dm = jnp.where(both, Dg, 0.0)
+    NEG = jnp.float32(-BIG)
+
+    # Pass 0 exactly: with no medoids the best first pick minimises the
+    # column sum (identical to pass 0 of the exact BUILD).
+    ct0 = jnp.where(valid, jnp.sum(Dm, axis=1), jnp.inf)
+    j0 = jnp.argmin(ct0, axis=1)
+    ok0 = n_valid > 0
+    medoids = jnp.full((G, k), -1, jnp.int32).at[:, 0].set(
+        jnp.where(ok0, j0.astype(jnp.int32), -1)
+    )
+    dn = jnp.take_along_axis(Dm, j0[:, None, None], axis=2)[:, :, 0]
+    dn = jnp.where(valid & ok0[:, None], dn, jnp.where(valid, BIG, 0.0))
+    chosen = (jnp.arange(g)[None, :] == j0[:, None]) & ok0[:, None]
+    # Exact gains once (one full pass): gain_j = sum_o relu(dn_o - D_oj).
+    ub = jnp.sum(jnp.maximum(dn[:, :, None] - Dm, 0.0), axis=1)  # [G, g]
+
+    def body(i, carry):
+        medoids, dn, chosen, ub = carry
+        mask = valid & ~chosen
+        ubm = jnp.where(mask, ub, NEG)
+        _, top = jax.lax.top_k(ubm, C)  # [G, C] best stale bounds
+        cols = jnp.take_along_axis(Dm, top[:, None, :], axis=2)  # [G, g, C]
+        e = jnp.sum(jnp.maximum(dn[:, :, None] - cols, 0.0), axis=1)  # exact
+        e = jnp.where(jnp.take_along_axis(mask, top, axis=1), e, NEG)
+        c = jnp.argmax(e, axis=1)
+        j = jnp.take_along_axis(top, c[:, None], axis=1)[:, 0]
+        ok = i < n_valid
+        medoids = medoids.at[:, i].set(jnp.where(ok, j.astype(jnp.int32), -1))
+        dj = jnp.take_along_axis(Dm, j[:, None, None], axis=2)[:, :, 0]
+        dn = jnp.where(ok[:, None], jnp.minimum(dn, dj), dn)
+        chosen = chosen | ((jnp.arange(g)[None, :] == j[:, None]) & ok[:, None])
+        ub = ub.at[jnp.arange(G)[:, None], top].set(e)  # refresh evaluated
+        return medoids, dn, chosen, ub
+
+    medoids, _, _, _ = jax.lax.fori_loop(
+        1, k, body, (medoids, dn, chosen, ub)
+    )
     return medoids
 
 
@@ -145,7 +239,7 @@ def _swap_once(D: Array, valid: Array, medoids: Array):
     return dTD[i_best, j_best], i_best, j_best
 
 
-def swap(
+def swap_reference(
     D: Array,
     valid: Array,
     medoids: Array,
@@ -153,7 +247,12 @@ def swap(
     max_swaps: int = 64,
     tol: float = 1e-6,
 ) -> tuple[Array, Array]:
-    """FasterPAM-style swap loop. Returns (medoids, n_swaps)."""
+    """Seed FasterPAM swap loop: one swap per sweep (benchmark baseline).
+
+    Returns (medoids, n_swaps). Superseded by the eager multi-swap
+    :func:`swap` on the build hot path; kept for the seed-vs-new
+    ``benchmarks/bench_build.py`` comparison and as a property-test oracle.
+    """
 
     def cond(carry):
         _, n, improving = carry
@@ -168,6 +267,175 @@ def swap(
 
     medoids, n_swaps, _ = jax.lax.while_loop(
         cond, body, (medoids, jnp.int32(0), jnp.bool_(True))
+    )
+    return medoids, n_swaps
+
+
+def _masked_swap_deltas(
+    D: Array, valid: Array, medoids: Array, *, bg: int = 128,
+    force_pallas: bool = False,
+) -> Array:
+    """[k, g] swap deltas with medoid rows/columns masked to +inf.
+
+    The delta matrix itself comes from the kernel layer
+    (``kernels.ops.swap_deltas`` — streamed Pallas sweep on TPU, jnp oracle
+    on CPU); this wrapper derives the FasterPAM caches and applies the
+    candidate/slot validity masks. ``bg`` is the sweep kernel's row tile.
+    """
+    g, k = D.shape[0], medoids.shape[0]
+    d1, n1, d2 = _nearest_caches(D, medoids, valid)
+    dTD = kops.swap_deltas(
+        D, d1, d2, n1, valid, k=k, bg=bg, force_pallas=force_pallas
+    )
+
+    # Candidate j must be a valid non-medoid point; slot i a real medoid.
+    is_medoid = jnp.zeros((g,), bool).at[jnp.clip(medoids, 0, g - 1)].set(
+        medoids >= 0
+    )
+    ok = (valid & ~is_medoid)[None, :] & (medoids >= 0)[:, None]
+    return jnp.where(ok, dTD, jnp.inf)
+
+
+def _eager_accept(dTD: Array, medoids: Array, tol: float):
+    """Greedy conflict-free multi-swap: every slot takes its best improving
+    candidate, best-delta-first; a candidate column goes dark once claimed.
+
+    Returns (medoids, n_accepted). Deltas are priced against the pre-sweep
+    medoid set, so the caller must re-validate the batch's TD (see
+    :func:`sweep_once`).
+
+    Implementation notes: slots are visited in order of their *pre-sweep*
+    best delta via repeated [k]-argmin over a mins vector, not an argsort —
+    XLA partitions ``sort`` with cross-device collectives, which deadlocks
+    inside a ``while_loop`` whose trip count is data-dependent per shard
+    (the distributed build); argmin is a plain reduce. Each iteration
+    touches only the selected slot's [g] row (claimed candidates masked to
+    +inf), and the pass stops as soon as the best remaining pre-sweep delta
+    is non-improving — ``best0[i]`` lower-bounds slot i's masked row min, so
+    no later slot could accept. A pass therefore costs O(a(k + g)) for a
+    accepted swaps, not O(k^2 g).
+    """
+    k, g = dTD.shape
+    best0 = jnp.min(dTD, axis=1)  # [k] pre-sweep per-slot bests
+
+    def cond(carry):
+        _, _, done, _, s = carry
+        more = jnp.min(jnp.where(done, jnp.inf, best0)) < -tol
+        return more & (s < k)
+
+    def body(carry):
+        medoids, taken, done, n_acc, s = carry
+        i = jnp.argmin(jnp.where(done, jnp.inf, best0))
+        row = jnp.where(taken, jnp.inf, dTD[i])  # earlier accepts masked out
+        j = jnp.argmin(row)
+        do = row[j] < -tol
+        medoids = medoids.at[i].set(
+            jnp.where(do, j.astype(jnp.int32), medoids[i])
+        )
+        taken = taken.at[j].set(taken[j] | do)
+        done = done.at[i].set(True)  # each slot swaps at most once per sweep
+        return medoids, taken, done, n_acc + do.astype(jnp.int32), s + 1
+
+    medoids, _, _, n_acc, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (
+            medoids,
+            jnp.zeros((g,), bool),
+            jnp.zeros((k,), bool),
+            jnp.int32(0),
+            jnp.int32(0),
+        ),
+    )
+    return medoids, n_acc
+
+
+def sweep_once(
+    D: Array,
+    valid: Array,
+    medoids: Array,
+    td: Array,
+    *,
+    tol: float = 1e-6,
+    bg: int = 128,
+    force_pallas: bool = False,
+):
+    """One eager multi-swap sweep. Returns (medoids, td, n_accepted,
+    improving); TD is guaranteed non-increasing.
+
+    The batched accept is kept only if its exactly recomputed TD beats the
+    best single swap (whose FasterPAM delta is exact); otherwise the sweep
+    falls back to that single swap. ``improving`` is False iff no single
+    swap improves — the same convergence criterion as the seed loop, so the
+    final medoid set is single-swap locally optimal in both.
+    """
+    g = D.shape[0]
+    dTD = _masked_swap_deltas(
+        D, valid, medoids, bg=bg, force_pallas=force_pallas
+    )
+
+    flat = jnp.argmin(dTD)
+    i1 = (flat // g).astype(jnp.int32)
+    j1 = (flat % g).astype(jnp.int32)
+    delta1 = dTD[i1, j1]
+    improving = delta1 < -tol
+
+    batch_m, n_acc = _eager_accept(dTD, medoids, tol)
+    _, batch_td = _labels_and_td(D, batch_m, valid)
+    single_m = medoids.at[i1].set(jnp.where(improving, j1, medoids[i1]))
+    single_td = td + delta1
+    use_batch = improving & (batch_td <= single_td)
+
+    medoids = jnp.where(use_batch, batch_m, jnp.where(improving, single_m, medoids))
+    td = jnp.where(use_batch, batch_td, jnp.where(improving, single_td, td))
+    n_acc = jnp.where(use_batch, n_acc, improving.astype(jnp.int32))
+    return medoids, td, n_acc, improving
+
+
+def swap(
+    D: Array,
+    valid: Array,
+    medoids: Array,
+    *,
+    max_swaps: int = 64,
+    tol: float = 1e-6,
+    rel_tol: float = 0.0,
+    bg: int = 128,
+    force_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Eager multi-swap FasterPAM loop. Returns (medoids, n_swaps).
+
+    Sweeps :func:`sweep_once` until no single swap improves TD (or
+    ``max_swaps`` sweeps ran) — up to k swaps retire per O(g^2) sweep
+    instead of one, with TD monotonically non-increasing. ``n_swaps``
+    counts accepted swaps (comparable with :func:`swap_reference`).
+
+    ``rel_tol`` is a convergence knob: stop as soon as a sweep improves TD
+    by less than ``rel_tol * TD``. 0 (default) converges to the same
+    single-swap local optimality criterion as :func:`swap_reference`; the
+    MSA build uses a small positive value (``swap_tol``, default 1e-3)
+    because the last few sweeps chase ~0.1%-of-TD refinements at full
+    O(g^2) sweep cost — recall-neutral for an ANN index, and the dominant
+    build-time lever after the multi-swap batching itself.
+    """
+    _, td0 = _labels_and_td(D, medoids, valid)
+
+    def cond(carry):
+        _, _, sweeps, _, keep_going = carry
+        return keep_going & (sweeps < max_swaps)
+
+    def body(carry):
+        medoids, td, sweeps, n, _ = carry
+        medoids, new_td, n_acc, improving = sweep_once(
+            D, valid, medoids, td, tol=tol, bg=bg, force_pallas=force_pallas
+        )
+        keep_going = improving & (td - new_td > rel_tol * jnp.abs(new_td))
+        return medoids, new_td, sweeps + 1, n + n_acc, keep_going
+
+    medoids, _, _, n_swaps, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (medoids, td0, jnp.int32(0), jnp.int32(0), jnp.bool_(True)),
     )
     return medoids, n_swaps
 
@@ -208,7 +476,9 @@ def alternate(
     return jax.lax.fori_loop(0, max_sweeps, body, medoids)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "method", "max_swaps"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "method", "max_swaps", "bg", "force_pallas")
+)
 def kmedoids(
     D: Array,
     k: int,
@@ -216,6 +486,9 @@ def kmedoids(
     *,
     method: str = "pam",
     max_swaps: int = 64,
+    rel_tol: float = 0.0,
+    bg: int = 128,
+    force_pallas: bool = False,
 ) -> KMedoidsResult:
     """Cluster one (padded) group given its dissimilarity matrix.
 
@@ -223,18 +496,32 @@ def kmedoids(
       D:      [g, g] pairwise dissimilarities (any registered distance).
       k:      number of medoids (static).
       valid:  [g] bool mask of real (non-padding) points.
-      method: "pam" (BUILD + FasterPAM swap), "alternate", or "build"
-              (BUILD only — cheap, used for upper index levels).
+      method: "pam" (BUILD + eager multi-swap FasterPAM), "pam_reference"
+              (BUILD + the seed one-swap-per-sweep loop — benchmark
+              baseline), "alternate", or "build" (BUILD only — cheap, used
+              for upper index levels).
+      rel_tol: eager-swap per-sweep relative improvement cutoff (see
+              :func:`swap`); 0 = full single-swap local optimality.
     """
     g = D.shape[0]
     if valid is None:
         valid = jnp.ones((g,), bool)
     D = D.astype(jnp.float32)
 
-    medoids = build(D, k, valid)
+    # pam seeds from the pruned BUILD (same arithmetic as the grouped path,
+    # batch of one); the other methods keep the exact greedy BUILD.
+    if method == "pam":
+        medoids = build_grouped_pruned(D[None], k, valid[None])[0]
+    else:
+        medoids = build(D, k, valid)
     n_swaps = jnp.int32(0)
     if method == "pam":
-        medoids, n_swaps = swap(D, valid, medoids, max_swaps=max_swaps)
+        medoids, n_swaps = swap(
+            D, valid, medoids, max_swaps=max_swaps, rel_tol=rel_tol, bg=bg,
+            force_pallas=force_pallas,
+        )
+    elif method == "pam_reference":
+        medoids, n_swaps = swap_reference(D, valid, medoids, max_swaps=max_swaps)
     elif method == "alternate":
         medoids = alternate(D, valid, medoids, max_sweeps=max_swaps)
     elif method != "build":
@@ -244,6 +531,9 @@ def kmedoids(
     return KMedoidsResult(medoids=medoids, labels=labels, td=td, n_swaps=n_swaps)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "method", "max_swaps", "bg", "force_pallas")
+)
 def kmedoids_grouped(
     Dg: Array,
     k: int,
@@ -251,12 +541,44 @@ def kmedoids_grouped(
     *,
     method: str = "pam",
     max_swaps: int = 64,
+    rel_tol: float = 0.0,
+    bg: int = 128,
+    force_pallas: bool = False,
 ) -> KMedoidsResult:
-    """vmap of :func:`kmedoids` over a leading groups axis.
+    """Batched :func:`kmedoids` over a leading groups axis.
 
-    Args: Dg [G, g, g], valid [G, g]. Under pjit with the groups axis sharded,
-    every device clusters only its own groups — this is MSA's distributed
-    build.
+    Args: Dg [G, g, g], valid [G, g]. The BUILD phase runs as whole-batch
+    [G, g, g] contractions (:func:`build_grouped`); the swap/alternate
+    phases vmap over groups (their while-loops carry per-group trip counts).
+    Under pjit with the groups axis sharded, every device clusters only its
+    own groups — this is MSA's distributed build. ``method="pam_reference"``
+    reproduces the seed per-group path exactly.
     """
-    fn = lambda D, v: kmedoids(D, k=k, valid=v, method=method, max_swaps=max_swaps)
-    return jax.vmap(fn)(Dg, valid)
+    if method == "pam_reference":
+        fn = lambda D, v: kmedoids(
+            D, k=k, valid=v, method=method, max_swaps=max_swaps
+        )
+        return jax.vmap(fn)(Dg, valid)
+
+    Dg = Dg.astype(jnp.float32)
+    n_swaps = jnp.zeros((Dg.shape[0],), jnp.int32)
+    if method == "pam":
+        medoids = build_grouped_pruned(Dg, k, valid)
+        medoids, n_swaps = jax.vmap(
+            lambda D, v, m: swap(
+                D, v, m, max_swaps=max_swaps, rel_tol=rel_tol, bg=bg,
+                force_pallas=force_pallas,
+            )
+        )(Dg, valid, medoids)
+    elif method == "alternate":
+        medoids = build_grouped(Dg, k, valid)
+        medoids = jax.vmap(
+            lambda D, v, m: alternate(D, v, m, max_sweeps=max_swaps)
+        )(Dg, valid, medoids)
+    elif method == "build":
+        medoids = build_grouped(Dg, k, valid)
+    else:
+        raise ValueError(f"unknown k-medoids method {method!r}")
+
+    labels, td = jax.vmap(_labels_and_td)(Dg, medoids, valid)
+    return KMedoidsResult(medoids=medoids, labels=labels, td=td, n_swaps=n_swaps)

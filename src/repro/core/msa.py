@@ -24,6 +24,13 @@ chasing ragged lists.
 The per-level work is one jitted function; the host only loops over the
 (statically known) level count. Under pjit with the groups axis sharded, each
 device clusters its own groups — MSA's distributed build.
+
+Memory model (DESIGN.md §3.5): a level's groups are *streamed* in
+``group_chunk``-sized slabs (``lax.map``), so the clustering working set —
+the per-group ``[g, g]`` dissimilarity matrices plus the k-medoids
+intermediates — peaks at ``O(group_chunk · g²)`` regardless of the level's
+group count G. ``group_chunk=0`` disables streaming (the seed whole-level
+layout, kept as the benchmark baseline).
 """
 
 from __future__ import annotations
@@ -83,13 +90,16 @@ def _pad_to(x: Array, n: int, fill=0):
     return jnp.pad(x, widths, constant_values=fill)
 
 
-def _group_pairwise(dist: dist_lib.Distance, grp_pts: Array, grp_valid: Array,
-                    row_chunk: int) -> Array:
-    """Masked per-group distance matrix [G, g, g] with bounded peak memory.
+def _group_pairwise_dense(dist: dist_lib.Distance, grp_pts: Array,
+                          grp_valid: Array, row_chunk: int) -> Array:
+    """Masked per-group distance matrices [B, g, g] for one batch of groups.
 
     Dispatched through the kernel layer (vmapped over the group axis; on TPU
     the Pallas pairwise kernel lifts the vmap into its grid), so the MSA
-    build shares the exact distance arithmetic of the search path.
+    build shares the exact distance arithmetic of the search path. "Dense"
+    because the whole batch's matrices are live at once — callers bound B
+    (the ``group_chunk`` streaming in :func:`_build_level`); passing a full
+    level is the seed behaviour, kept as the benchmark baseline.
     """
 
     def one(pts, vld):
@@ -99,9 +109,54 @@ def _group_pairwise(dist: dist_lib.Distance, grp_pts: Array, grp_valid: Array,
     return jax.vmap(one)(grp_pts, grp_valid)
 
 
+def _cluster_groups(dist: dist_lib.Distance, gpts: Array, gvld: Array,
+                    keys: Array, *, k: int, method: str, max_swaps: int,
+                    swap_tol: float, row_chunk: int, bg: int,
+                    force_pallas: bool):
+    """Cluster one batch of groups -> (medoids [B,k], labels [B,g], td [B])."""
+    B, gl = gpts.shape[0], gpts.shape[1]
+    if method == "kmeans":
+        res = jax.vmap(lambda x, v, kk: kmeans_lib.kmeans(x, k, v, key=kk))(
+            gpts, gvld, keys
+        )
+        medoids = jnp.where(
+            jnp.arange(k)[None, :]
+            < jnp.sum(gvld, axis=1, dtype=jnp.int32)[:, None].clip(max=k),
+            res.snapped,
+            -1,
+        )
+
+        # Re-derive labels against the snapped medoids so labels index medoid
+        # slots (k-means labels index centroids, which we replaced). [g, k]
+        # distances against the k snapped points via the kernel layer — not a
+        # full [g, g] matrix with medoid columns gathered out.
+        def relabel(pts_g, vld_g, med_g):
+            mpts = jnp.take(pts_g, jnp.clip(med_g, 0, gl - 1), axis=0)
+            cols = kops.pairwise_distance(pts_g, mpts, dist,
+                                          row_chunk=row_chunk)
+            cols = jnp.where(
+                vld_g[:, None] & (med_g[None, :] >= 0), cols, dist_lib.BIG
+            )
+            lbl = jnp.argmin(cols, axis=1).astype(jnp.int32)
+            return jnp.where(vld_g, lbl, -1)
+
+        labels = jax.vmap(relabel)(gpts, gvld, medoids)
+        return medoids, labels, jnp.zeros((B,), jnp.float32)
+
+    Dg = _group_pairwise_dense(dist, gpts, gvld, row_chunk)
+    res = km.kmedoids_grouped(
+        Dg, k, gvld, method=method, max_swaps=max_swaps, rel_tol=swap_tol,
+        bg=bg, force_pallas=force_pallas,
+    )
+    return res.medoids, res.labels, res.td
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("dist", "gl", "k", "method", "max_swaps", "row_chunk"),
+    static_argnames=(
+        "dist", "gl", "k", "method", "max_swaps", "row_chunk", "group_chunk",
+        "bg", "force_pallas",
+    ),
 )
 def _build_level(
     points: Array,  # [n, d] current level items, initial layout
@@ -115,11 +170,26 @@ def _build_level(
     k: int,
     method: str,
     max_swaps: int,
+    swap_tol: float,
     row_chunk: int,
+    group_chunk: int,
+    bg: int,
+    force_pallas: bool,
 ):
     """Cluster one level. Returns the level's final-layout arrays, the
     remap (initial->final) for fixing the lower level's parents, and the next
-    level's items in initial layout."""
+    level's items in initial layout.
+
+    Execution is *chunked over groups*: the level's G groups are processed in
+    ``group_chunk``-sized slabs under ``lax.map``, each slab computing its
+    own [group_chunk, g, g] dissimilarity batch and clustering it, so peak
+    live memory is O(group_chunk · g²) however large G grows (the paper's
+    per-node memory budget, applied to the build). ``group_chunk=0`` (or
+    >= G) processes the whole level at once — the seed layout, kept as the
+    dense benchmark baseline. Only the per-group [k]/[g]-sized results
+    (medoids, labels, TD) persist across slabs; the sibling-contiguous
+    reorder below is whole-level but touches nothing larger than [G, gl].
+    """
     n, d = points.shape
     G = -(-n // gl)
     n_pad = G * gl
@@ -132,36 +202,36 @@ def _build_level(
     gpts = pts.reshape(G, gl, d)
     gvld = vld.reshape(G, gl)
 
-    if method == "kmeans":
-        keys = jax.random.split(key, G)
-        res = jax.vmap(lambda x, v, kk: kmeans_lib.kmeans(x, k, v, key=kk))(
-            gpts, gvld, keys
-        )
-        medoids = jnp.where(
-            jnp.arange(k)[None, :]
-            < jnp.sum(gvld, axis=1, dtype=jnp.int32)[:, None].clip(max=k),
-            res.snapped,
-            -1,
-        )
-        # Re-derive labels against the snapped medoids so labels index medoid
-        # slots (k-means labels index centroids, which we replaced).
-        def relabel(pts_g, vld_g, med_g):
-            D = dist.pairwise(pts_g, pts_g)
-            D = dist_lib.mask_invalid(D, vld_g, vld_g)
-            cols = jnp.where(
-                med_g[None, :] >= 0,
-                jnp.take(D, jnp.clip(med_g, 0, gl - 1), axis=1),
-                dist_lib.BIG,
-            )
-            lbl = jnp.argmin(cols, axis=1).astype(jnp.int32)
-            return jnp.where(vld_g, lbl, -1)
+    cluster = functools.partial(
+        _cluster_groups, dist, k=k, method=method, max_swaps=max_swaps,
+        swap_tol=swap_tol, row_chunk=row_chunk, bg=bg,
+        force_pallas=force_pallas,
+    )
+    if 0 < group_chunk < G:
+        nc = -(-G // group_chunk)
+        Gp = nc * group_chunk
 
-        labels = jax.vmap(relabel)(gpts, gvld, medoids)
-        td = jnp.zeros((G,), jnp.float32)
+        def pad_groups(a, fill):
+            widths = [(0, Gp - G)] + [(0, 0)] * (a.ndim - 1)
+            return jnp.pad(a, widths, constant_values=fill)
+
+        # Split to exactly G keys and pad (split is not prefix-stable across
+        # counts, and the dense path uses split(key, G) — chunking must only
+        # change the execution schedule, never the per-group keys).
+        keys = pad_groups(jax.random.split(key, G), 0)
+        chunks = (
+            pad_groups(gpts, 0.0).reshape(nc, group_chunk, gl, d),
+            pad_groups(gvld, False).reshape(nc, group_chunk, gl),
+            keys.reshape(nc, group_chunk, -1),
+        )
+        medoids, labels, td = jax.lax.map(
+            lambda c: cluster(c[0], c[1], c[2]), chunks
+        )
+        medoids = medoids.reshape(Gp, k)[:G]
+        labels = labels.reshape(Gp, gl)[:G]
+        td = td.reshape(Gp)[:G]
     else:
-        Dg = _group_pairwise(dist, gpts, gvld, row_chunk)
-        res = km.kmedoids_grouped(Dg, k, gvld, method=method, max_swaps=max_swaps)
-        medoids, labels, td = res.medoids, res.labels, res.td
+        medoids, labels, td = cluster(gpts, gvld, jax.random.split(key, G))
 
     # --- sibling-contiguous reorder within each group -----------------------
     sort_key = jnp.where(labels >= 0, labels, k)  # invalid slots last
@@ -186,12 +256,14 @@ def _build_level(
     ).astype(jnp.int32)
 
     # --- children bookkeeping for the next level's items --------------------
-    onehot = jax.nn.one_hot(jnp.where(labels_f >= 0, labels_f, k), k + 1,
-                            dtype=jnp.int32)
-    counts = jnp.sum(onehot, axis=1)[:, :k]  # [G, k] valid children per slot
-    starts = (
-        jnp.cumsum(counts, axis=1) - counts + (jnp.arange(G) * gl)[:, None]
-    ).astype(jnp.int32)
+    # labels_f is label-sorted within each group (invalid last), so per-slot
+    # child counts/starts are searchsorted bounds — no [G, gl, k+1] one-hot.
+    sk_f = jnp.where(labels_f >= 0, labels_f, k)  # [G, gl] ascending per row
+    bounds = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(k + 1))
+    )(sk_f)  # [G, k+1]; bounds[:, s] = #children in slots < s
+    counts = (bounds[:, 1:] - bounds[:, :-1]).astype(jnp.int32)  # [G, k]
+    starts = (bounds[:, :k] + (jnp.arange(G) * gl)[:, None]).astype(jnp.int32)
 
     # --- next level items: the medoid points (initial layout) ---------------
     med_safe = jnp.clip(medoids, 0, gl - 1)
@@ -216,9 +288,27 @@ def _build_level(
     return level_arrays, next_arrays, remap, jnp.sum(td)
 
 
+def _check_level_convergence(n: int, gl: int, k: int) -> None:
+    """Reject (gl, k) pairs whose level recursion never reaches one group.
+
+    Each level maps G groups to ``ceil(G*k/gl)`` groups; that map has a
+    fixed point >= 2 whenever ``2*k > gl`` (at G=2 it yields ``2k > gl``
+    points, i.e. 2 groups again), so the build loop would never terminate.
+    The paper's 2:1 ratio (``k = gl // 2``) always converges.
+    """
+    if n > gl and 2 * k > gl:
+        raise ValueError(
+            f"n_prototypes={k} with gl={gl} never reduces n={n} points to a "
+            f"single group: each level maps G groups to ceil(G*{k}/{gl}) "
+            f"groups, which is stuck at >= 2 groups whenever 2*n_prototypes "
+            f"> gl. Use n_prototypes <= gl // 2 (the paper's 2:1 ratio)."
+        )
+
+
 def n_levels_for(n: int, gl: int, k: Optional[int] = None) -> int:
     """Number of clustered levels MSA will produce for ``n`` points."""
     k = k or gl // 2
+    _check_level_convergence(n, gl, k)
     levels = 0
     while True:
         G = -(-n // gl)
@@ -238,6 +328,10 @@ def build_index_arrays(
     max_swaps: int = 64,
     key: Optional[Array] = None,
     row_chunk: int = 512,
+    group_chunk: int = 8,
+    swap_tol: float = 1e-3,
+    bg: int = 128,
+    force_pallas: bool = False,
     shuffle: bool = True,
 ) -> tuple[PDASCIndexData, tuple[Array, ...]]:
     """Traceable MSA build: returns the index pytree + per-level TD scalars.
@@ -245,11 +339,18 @@ def build_index_arrays(
     Contains no host-side array reads, so it can run inside ``jit`` /
     ``shard_map`` (the distributed per-shard build). The level loop trips a
     statically known number of times (a function of ``n``/``gl`` only).
+    ``group_chunk`` bounds per-level live memory at O(group_chunk · gl²)
+    (0 = dense whole-level clustering, the seed baseline). ``swap_tol`` is
+    the eager-swap per-sweep relative-improvement cutoff (0 = run every
+    group to full single-swap local optimality; the default trades the last
+    ~0.1% of clustering TD for skipping the slowest convergence tail —
+    recall-neutral, see DESIGN.md §3.5).
     """
     dist = dist_lib.get(distance)
     k = n_prototypes or gl // 2
     if k < 1 or k > gl:
         raise ValueError(f"need 1 <= n_prototypes <= gl, got {k} vs gl={gl}")
+    _check_level_convergence(data.shape[0], gl, k)
     if dist.needs_dim is not None and data.shape[1] != dist.needs_dim:
         raise ValueError(
             f"distance {dist.name!r} needs d={dist.needs_dim}, got {data.shape[1]}"
@@ -286,7 +387,11 @@ def build_index_arrays(
             k=k,
             method=method,
             max_swaps=max_swaps,
+            swap_tol=swap_tol,
             row_chunk=row_chunk,
+            group_chunk=group_chunk,
+            bg=bg,
+            force_pallas=force_pallas,
         )
         # Fix the lower level's parent pointers through this level's reorder.
         if raw_levels:
@@ -348,6 +453,10 @@ def build_index(
     max_swaps: int = 64,
     key: Optional[Array] = None,
     row_chunk: int = 512,
+    group_chunk: int = 8,
+    swap_tol: float = 1e-3,
+    bg: int = 128,
+    force_pallas: bool = False,
     shuffle: bool = True,
 ) -> tuple[PDASCIndexData, BuildStats]:
     """Build the PDASC multilevel index (MSA, Algorithm 1).
@@ -357,8 +466,13 @@ def build_index(
       gl: group length (points per partition at each level).
       n_prototypes: medoids per group; defaults to ``gl // 2`` (paper's 2:1).
       distance: registered distance name or a ``Distance``.
-      method: "pam" | "alternate" | "build" | "kmeans".
+      method: "pam" | "pam_reference" | "alternate" | "build" | "kmeans".
       row_chunk: row chunking for non-Gram pairwise matrices.
+      group_chunk: groups clustered per streamed slab (0 = whole level).
+      swap_tol: eager-swap per-sweep relative improvement cutoff (0 = full
+        convergence; see :func:`build_index_arrays`).
+      bg: row tile of the fused Pallas swap-sweep kernel.
+      force_pallas: run the sweep kernel interpret-mode off-TPU (tests).
     """
     index, level_td = build_index_arrays(
         data,
@@ -369,11 +483,19 @@ def build_index(
         max_swaps=max_swaps,
         key=key,
         row_chunk=row_chunk,
+        group_chunk=group_chunk,
+        swap_tol=swap_tol,
+        bg=bg,
+        force_pallas=force_pallas,
         shuffle=shuffle,
     )
+    # One host round-trip for all build stats (per-level float()/int() reads
+    # would each force a device sync).
+    sizes = [jnp.sum(lv.valid, dtype=jnp.int32) for lv in index.levels]
+    sizes, tds = jax.device_get((sizes, level_td))
     stats = BuildStats(
-        level_sizes=tuple(int(jnp.sum(lv.valid)) for lv in index.levels),
-        level_td=tuple(float(t) for t in level_td),
+        level_sizes=tuple(int(s) for s in sizes),
+        level_td=tuple(float(t) for t in tds),
         n_levels=len(index.levels),
     )
     return index, stats

@@ -2,6 +2,7 @@
 
   pairwise.py — tiled [m,d]x[n,d]->[m,n] distance matrices (MXU / VPU paths)
   topk.py     — fused distance + streaming top-k ("flash k-NN")
+  kmedoids.py — fused FasterPAM swap-sweep ΔTD (streamed row tiles)
   ops.py      — jit'd dispatch wrappers (TPU pallas / CPU interpret / ref)
   ref.py      — pure-jnp oracles defining each kernel's contract
 """
@@ -13,6 +14,7 @@ from repro.kernels.ops import (
     pairwise_distance,
     rank_candidates,
     resolve_form,
+    swap_deltas,
 )
 
 __all__ = [
@@ -22,4 +24,5 @@ __all__ = [
     "pairwise_distance",
     "rank_candidates",
     "resolve_form",
+    "swap_deltas",
 ]

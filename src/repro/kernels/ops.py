@@ -6,6 +6,7 @@ evaluation and ranking step — DESIGN.md §3.3):
   pairwise_distance(X, Y, distance)       -> [m, n]
   knn(Q, DB, distance, k)                 -> (dists[q, k], ids[q, k])
   rank_candidates(Q, C, ok, distance, k)  -> (dists[b, k], slots[b, k])
+  swap_deltas(D, d1, d2, n1, valid, k)    -> [k, g]  (k-medoids swap sweep)
 
 ``distance`` may be a kernel form (``ref.FORMS``), a registry name
 (``repro.core.distances``), or a ``Distance`` object. Dispatch:
@@ -31,6 +32,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kmedoids as _kmk
 from repro.kernels import pairwise as _pw
 from repro.kernels import ref as _ref
 from repro.kernels import topk as _tk
@@ -45,7 +47,9 @@ class KernelConfig(NamedTuple):
     bn: int = 128  # pairwise / rank / knn: candidate-cols tile
     bd: int = 256  # pairwise: feature-dim tile (VPU forms clamp to 64)
     bq: int = 8  # rank / knn: query tile of the fused top-k kernels
+    bg: int = 128  # swap sweep: point-rows tile of the fused sweep kernel
     row_chunk: int = 1024  # CPU fallback streaming chunk (bounds cube memory)
+    group_chunk: int = 8  # MSA build: groups clustered per streamed slab
     force_pallas: bool = False  # run Pallas interpret=True off-TPU (tests)
 
 
@@ -166,6 +170,36 @@ def rank_candidates(
             form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu(),
         )
     return _ref.rank_ref(Q, C, ok, k, form, cc=c_sq_norms)
+
+
+def swap_deltas(
+    D: Array,
+    d1: Array,
+    d2: Array,
+    n1: Array,
+    valid: Array,
+    *,
+    k: int,
+    bg: int = 128,
+    force_pallas: bool = False,
+) -> Array:
+    """FasterPAM swap-sweep ΔTD matrix ``[k, g]`` (the MSA build hot path).
+
+    ``D``: [g, g] group dissimilarities; ``d1``/``d2``: [g] nearest /
+    second-nearest medoid distances; ``n1``: [g] int32 nearest-medoid slot;
+    ``valid``: [g] point mask. Returns the *unmasked* swap deltas
+    ``dTD[i, j] = S[j] + T[i, j]`` — callers mask medoid / invalid columns
+    before taking argmins (``core.kmedoids``).
+
+    On the Pallas path the [g, g] gain / removal intermediates are streamed
+    in ``[bg, g]`` row tiles and only the [k, g] accumulator persists; the
+    CPU path runs the pure-jnp oracle (``ref.swap_deltas_ref``).
+    """
+    if _on_tpu() or force_pallas:
+        return _kmk.swap_deltas_pallas(
+            D, d1, d2, n1, valid, k=k, bg=bg, interpret=not _on_tpu()
+        )
+    return _ref.swap_deltas_ref(D, d1, d2, n1, valid, k)
 
 
 def rank_gathered(

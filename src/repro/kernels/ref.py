@@ -118,6 +118,41 @@ def knn_ref(Q: Array, DB: Array, k: int, form: str) -> tuple[Array, Array]:
     return -neg, ids.astype(jnp.int32)
 
 
+def swap_deltas_ref(
+    D: Array, d1: Array, d2: Array, n1: Array, valid: Array, k: int
+) -> Array:
+    """FasterPAM swap-sweep ΔTD terms: ``dTD[i, j] = S[j] + T[i, j]``.
+
+    The oracle for the fused sweep kernel (``kernels/kmedoids.py``). Inputs
+    are one group's dissimilarity matrix ``D [g, g]`` plus the FasterPAM
+    caches — nearest / second-nearest medoid distance ``d1/d2 [g]`` and
+    nearest-medoid *slot* ``n1 [g]`` — and the validity mask. Output is the
+    raw ``[k, g]`` swap-delta matrix (no medoid/validity column masking;
+    callers apply it).
+
+      S[j]    = sum_o min(D[o, j] - d1[o], 0)              (shared gain)
+      T[i, j] = sum_{o: n1[o]=i, D[o, j] >= d1[o]}
+                   min(d2[o], D[o, j]) - d1[o]             (removal term)
+
+    This reference materialises the [g, g] gain / removal intermediates; the
+    Pallas kernel streams them in [bg, g] row tiles so only the [k, g]
+    accumulator persists. ``T`` is a row segment-sum keyed on ``n1`` — O(g²)
+    adds; the kernel's one-hot matmul form (O(g²k), but MXU-shaped) computes
+    the same quantity.
+    """
+    vf = valid.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    gain = jnp.minimum(D - d1[:, None], 0.0) * vf[:, None]  # [g, g]
+    S = jnp.sum(gain, axis=0)  # [g]
+    t = jnp.where(
+        D >= d1[:, None], jnp.minimum(d2[:, None], D) - d1[:, None], 0.0
+    )
+    t = t * vf[:, None]  # [g, g]
+    seg = jnp.where(valid, n1, k)  # invalid rows -> discarded overflow bucket
+    T = jax.ops.segment_sum(t, seg, num_segments=k + 1)[:k]  # [k, g]
+    return S[None, :] + T
+
+
 NORM_FORMS = ("sqeuclidean", "l2", "cosine")  # forms consuming ||c||^2
 
 

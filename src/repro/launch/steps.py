@@ -416,7 +416,9 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
         def step(data):
             return dd.build_sharded(
                 data, mesh, db_axes=allA, gl=cfg.gl, distance=cfg.distance,
-                method=cfg.method,
+                method=cfg.method, row_chunk=cfg.row_chunk,
+                group_chunk=cfg.group_chunk, bg=cfg.bg,
+                swap_tol=cfg.swap_tol,
             )
 
         # Distance-matrix FLOPs of every level's clustering (dominant term):
