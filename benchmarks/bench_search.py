@@ -148,6 +148,12 @@ def run(seed: int = 0, modes=("dense", "beam", "radius", "kernel")):
         need_index=any(m in modes for m in ("dense", "beam", "radius")),
     )
     rows = []
+    if idx is not None:
+        # Per-tier resident bytes (navigation vs payload) alongside the QPS
+        # numbers; bench_store.py records the tiered-store counterpart.
+        mem = idx.memory_bytes()
+        print(f"[search] memory: {mem}", flush=True)
+        rows.append(dict(bench="memory", **mem))
     if "dense" in modes:
         rows += run_dense(idx, test, gt)
     if "beam" in modes:
@@ -177,6 +183,7 @@ def main(argv=None):
         json.dump(rows, f, indent=1)
 
     cmp_rows = [r for r in rows if r.get("bench") == "beam_batched_vs_vmap"]
+    mem_rows = [r for r in rows if r.get("bench") == "memory"]
     if cmp_rows:
         # Headline: the default serving beam width (PDASCIndex.search).
         headline = next((r for r in cmp_rows if r["beam"] == 32), cmp_rows[-1])
@@ -194,6 +201,7 @@ def main(argv=None):
             headline_speedup=headline["speedup"],
             min_speedup=min(r["speedup"] for r in cmp_rows),
             max_speedup=max(r["speedup"] for r in cmp_rows),
+            memory=mem_rows[0] if mem_rows else None,
         )
         with open(args.bench_out, "w") as f:
             json.dump(summary, f, indent=1)

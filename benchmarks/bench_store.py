@@ -1,0 +1,175 @@
+"""Storage substrate benchmark: tiered leaf store vs the dense resident path.
+
+For the reference config (dense_embed, gl=256, euclidean, k=10, beam=32) it
+records, per payload backend (dense fp32 / fp16 / int8):
+
+  * recall@10 against exact ground truth,
+  * us/query (two-stage search includes the host-side granule fetch — that
+    *is* the storage access being measured),
+  * resident payload bytes/vector and the ratio vs the dense seed path,
+
+into ``BENCH_store.json``, and asserts the headline acceptance bars: the
+int8 payload tier at <= 0.30x the dense resident bytes/vector with recall@10
+within 1% of ``search_beam``, and ``rerank_width=None`` (∞) bit-identical to
+``search_beam``.
+
+    PYTHONPATH=src python -m benchmarks.bench_store [--smoke]
+        [--out experiments/store.json] [--bench-out BENCH_store.json]
+
+``--smoke`` runs a tiny config (correctness assertions only, no wall-time
+numbers recorded) so CI can catch storage-path regressions after the tier-1
+suite, matching the ``bench_build.py --smoke`` step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_search import _recall
+from repro.baselines import exact_knn
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+
+
+def _timed(fn, n_queries: int, repeats: int = 3):
+    """us/query over the best of ``repeats`` post-compile runs."""
+    res = fn()  # compile
+    jax.block_until_ready(res)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        jax.block_until_ready(res)
+        best = min(best, time.perf_counter() - t0)
+    return res, best / n_queries * 1e6
+
+
+def run(smoke: bool = False, seed: int = 0):
+    if smoke:
+        n, n_queries, gl, block, rerank, repeats = 1200, 64, 64, 64, 64, 1
+    else:
+        n, n_queries, gl, block, rerank, repeats = 7800, 512, 256, 256, 128, 3
+    k, beam = 10, 32
+    data = make_dataset("dense_embed", n=n + n_queries, seed=seed)
+    train, test = data[:n], data[n:n + n_queries]
+    _, gt = exact_knn(test, train, distance="euclidean", k=k)
+    gt = np.asarray(gt)
+
+    idx = PDASCIndex.build(train, gl=gl, distance="euclidean",
+                           radius_quantile=0.35)
+    n_points = idx.n_points
+    mem_dense = idx.memory_bytes()
+    dense_ppv = mem_dense["payload_bytes_per_vector"]
+    print(f"[store] dense memory: {mem_dense}", flush=True)
+
+    rows = []
+    res_beam, us_beam = _timed(
+        lambda: idx.search(test, k=k, mode="beam", beam=beam), n_queries,
+        repeats)
+    recall_beam = _recall(np.asarray(res_beam.ids), gt)
+    rows.append(dict(
+        bench="store", backend="fp32_dense", mode="beam",
+        recall=recall_beam, us_per_q=round(us_beam, 1),
+        payload_bytes_per_vector=dense_ppv, payload_ratio=1.0,
+    ))
+    print(f"[store] dense beam: recall {recall_beam:.4f} "
+          f"{us_beam:.1f}us/q  {dense_ppv}B/vec", flush=True)
+
+    tmp = tempfile.mkdtemp()
+    for backend, path in (("fp16", None),
+                          ("int8", os.path.join(tmp, "payload.bin"))):
+        store = idx.attach_store(backend, block=block, path=path)
+        # ∞ rerank must reproduce search_beam exactly (the acceptance gate).
+        res_inf = idx.search(test, k=k, mode="two_stage", beam=beam,
+                             rerank_width=None)
+        np.testing.assert_array_equal(np.asarray(res_inf.ids),
+                                      np.asarray(res_beam.ids))
+        np.testing.assert_array_equal(np.asarray(res_inf.dists),
+                                      np.asarray(res_beam.dists))
+        res_ts, us_ts = _timed(
+            lambda: idx.search(test, k=k, mode="two_stage", beam=beam,
+                               rerank_width=rerank), n_queries, repeats)
+        recall_ts = _recall(np.asarray(res_ts.ids), gt)
+        ppv = round(store.resident_bytes / n_points, 2)
+        row = dict(
+            bench="store", backend=backend, mode="two_stage",
+            rerank_width=rerank, block=block,
+            on_disk=store.exact.on_disk,
+            recall=recall_ts, us_per_q=round(us_ts, 1),
+            payload_bytes_per_vector=ppv,
+            payload_ratio=round(ppv / dense_ppv, 4),
+            recall_delta_vs_beam=round(recall_ts - recall_beam, 4),
+        )
+        rows.append(row)
+        print(f"[store] {backend}{' (memmap)' if row['on_disk'] else ''}: "
+              f"recall {recall_ts:.4f} (Δbeam {row['recall_delta_vs_beam']}) "
+              f"{us_ts:.1f}us/q  {ppv}B/vec "
+              f"({row['payload_ratio']}x dense)", flush=True)
+
+    # Serving footprint: drop the resident fp32 leaf array (the int8 store
+    # stays attached) — the per-node memory the paper's deployment budgets.
+    idx.release_dense_payload()
+    mem_rel = idx.memory_bytes()
+    res_rel = idx.search(test, k=k, mode="two_stage", beam=beam,
+                         rerank_width=rerank)
+    # res_ts is the int8 run (last loop iteration): releasing the dense copy
+    # must not change two-stage results.
+    np.testing.assert_array_equal(np.asarray(res_rel.ids),
+                                  np.asarray(res_ts.ids))
+    rows.append(dict(bench="memory_released", **mem_rel))
+    print(f"[store] released memory: {mem_rel}", flush=True)
+
+    int8_row = next(r for r in rows if r.get("backend") == "int8")
+    assert int8_row["payload_ratio"] <= 0.30, (
+        "int8 payload tier above the 0.30x resident bytes bar", int8_row)
+    assert abs(int8_row["recall_delta_vs_beam"]) <= 0.01, (
+        "int8 two-stage recall drifted >1% from search_beam", int8_row)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny config, correctness assertions only (CI)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="experiments/store.json")
+    p.add_argument("--bench-out", default="BENCH_store.json")
+    args = p.parse_args(argv)
+
+    rows = run(smoke=args.smoke, seed=args.seed)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not args.smoke:
+        int8_row = next(r for r in rows if r.get("backend") == "int8")
+        payload = dict(
+            bench="tiered_leaf_store_vs_dense_resident",
+            backend=jax.default_backend(),
+            config=dict(dataset="dense_embed", n=7800, n_queries=512,
+                        gl=256, distance="euclidean", k=10, beam=32),
+            baseline="search_beam over the dense resident fp32 leaf array "
+                     "(the seed payload path)",
+            new="two-stage search over the tiered leaf store: quantised "
+                "payload scan (ops.scan_quantized, native dtype) -> exact "
+                "fp32 rerank over the top-rerank_width from the out-of-core "
+                "granule store",
+            rows=rows,
+            headline_payload_ratio=int8_row["payload_ratio"],
+            headline_recall_delta=int8_row["recall_delta_vs_beam"],
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[store] wrote {args.bench_out}: int8 payload "
+              f"{int8_row['payload_ratio']}x dense, recall delta "
+              f"{int8_row['recall_delta_vs_beam']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default=None,
-                   help="comma list: recall,build,search,retrieval")
+                   help="comma list: recall,build,search,retrieval,store")
     args = p.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     os.makedirs("experiments", exist_ok=True)
@@ -43,6 +43,10 @@ def main(argv=None):
         from benchmarks import bench_retrieval
 
         results["retrieval"] = bench_retrieval.run()
+    if want("store"):
+        from benchmarks import bench_store
+
+        results["store"] = bench_store.run()
     if want("recall"):
         from benchmarks import bench_recall
 

@@ -39,6 +39,13 @@ class PDASCArchConfig:
     # Build-algorithm knob (not a block size, so not in KernelConfig): the
     # eager-swap per-sweep relative improvement cutoff (0 = full convergence).
     swap_tol: float = 1e-3
+    # Storage substrate (DESIGN.md §3.6): payload-tier backend ("fp32" keeps
+    # the dense resident seed path; "int8"/"fp16" quantise the leaf vectors),
+    # granule size (quantisation block == out-of-core fetch unit) and the
+    # two-stage search's exact-rerank width (0 = ∞, the validation mode).
+    store: str = "int8"
+    store_block: int = 1024
+    rerank_width: int = 128
 
     def kernel_config(self) -> KernelConfig:
         return KernelConfig(bm=self.bm, bn=self.bn, bd=self.bd, bq=self.bq,
@@ -52,7 +59,8 @@ def config() -> PDASCArchConfig:
 
 def smoke_config() -> PDASCArchConfig:
     return PDASCArchConfig(name="pdasc-smoke", n=512, d=8, gl=32,
-                           n_queries=16, radius=2.0, bm=32, bn=32, bd=32)
+                           n_queries=16, radius=2.0, bm=32, bn=32, bd=32,
+                           store_block=64, rerank_width=32)
 
 
 SHAPES = {

@@ -11,6 +11,11 @@ maps to (DESIGN.md §3.4):
   per-partition trees; stacking sub-indexes adds one more implicit level).
 * **search** — queries are replicated across the database axes (each device
   answers against its shard), then the per-device top-k are merged globally.
+* **storage** — with a tiered leaf store (DESIGN.md §3.6) the navigation
+  tier replicates while the quantised payload shards by leaf-row range:
+  ``shard_payload`` slices codes + scales per node and
+  ``scan_quantized_sharded`` runs the stage-1 scan locally, merging
+  survivors with the same top-k collectives.
 
 Top-k merge operators (the collective hot path):
 
@@ -270,6 +275,90 @@ def search_sharded(
     # keep the caller's dtype: bf16 queries + bf16 index points -> bf16
     # distance math (the §Perf H3 memory-halving path)
     return fn(sharded_index, jnp.asarray(Q))
+
+
+# ---------------------------------------------------------------------------
+# Sharded payload tier (tiered leaf store, DESIGN.md §3.6)
+# ---------------------------------------------------------------------------
+
+
+def shard_payload(store, mesh: Mesh, *, db_axes: Sequence[str] = ("data",)):
+    """Split a quantised payload tier across the database axes.
+
+    The storage-aware deployment keeps the *navigation* tier (prototype
+    levels) replicated on every node — it is small and every query walks it
+    — while the payload codes shard by leaf-row range: node ``p`` owns rows
+    ``[p*per, (p+1)*per)`` and the matching slice of the per-block scales.
+    Returns ``(codes [P, per, d], scales [P, nb_per])`` ready for
+    ``shard_map`` over ``db_axes`` (:func:`scan_quantized_sharded`).
+    """
+    if store.backend == "fp32" or store.codes is None:
+        raise ValueError("shard_payload needs a quantised store (int8/fp16)")
+    Pn = _axes_size(mesh, db_axes)
+    n, d = store.codes.shape
+    if n % Pn:
+        raise ValueError(f"payload rows n={n} not divisible by shards {Pn}")
+    per = n // Pn
+    if per % store.block:
+        raise ValueError(
+            f"per-shard rows {per} not granule-aligned (block={store.block}); "
+            f"scales cannot shard cleanly"
+        )
+    nb_per = per // store.block
+    return (
+        store.codes.reshape(Pn, per, d),
+        store.scales.reshape(Pn, nb_per),
+    )
+
+
+def scan_quantized_sharded(
+    codes: Array,  # [P, per, d] from shard_payload
+    scales: Array,  # [P, nb_per]
+    Q: Array,  # [B, d] replicated queries
+    cand_idx: Array,  # [B, W] *global* leaf rows (the replicated descent)
+    cand_ok: Array,  # [B, W]
+    mesh: Mesh,
+    *,
+    db_axes: Sequence[str] = ("data",),
+    distance="l2",
+    k: int,
+    block: int,
+    merge: str = "butterfly",
+    kernel: Optional[kops.KernelConfig] = None,
+):
+    """Distributed stage-1 scan: each node scans the candidates it owns.
+
+    The navigation descent is replicated (every node computes the same
+    ``cand_idx``); each shard masks the candidate table to its own row
+    range, scans its local codes, and the per-shard top-k merge with the
+    same collectives as the search path. Returns ``(dists [B, k],
+    slots [B, k])`` replicated, ``slots`` being *global* leaf rows (-1 for
+    missing) — the input of the exact rerank fetch.
+    """
+    kernel = kernel or kops.DEFAULT
+    per = codes.shape[1]
+
+    def body(codes_l, scales_l, Qr, ci, ok):
+        shard = _shard_index(db_axes)
+        lo = shard * jnp.int32(per)
+        local_ok = ok & (ci >= lo) & (ci < lo + per)
+        ci_local = jnp.clip(ci - lo, 0, per - 1)
+        d, slot = kops.scan_quantized(
+            Qr, codes_l[0], scales_l[0], ci_local, local_ok, distance,
+            k=k, block=block, bq=kernel.bq, bn=kernel.bn,
+            force_pallas=kernel.force_pallas,
+        )
+        gslots = jnp.take_along_axis(ci, slot, axis=1)
+        gslots = jnp.where(d < kref.BIG / 2, gslots, -1)
+        return topk_merge(d, gslots, tuple(db_axes), k, method=merge)
+
+    fn = shard_map(
+        body,
+        mesh,
+        in_specs=(P(tuple(db_axes)), P(tuple(db_axes)), P(), P(), P()),
+        out_specs=(P(), P()),
+    )
+    return fn(codes, scales, jnp.asarray(Q, jnp.float32), cand_idx, cand_ok)
 
 
 # ---------------------------------------------------------------------------

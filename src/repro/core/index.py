@@ -1,11 +1,16 @@
 """PDASCIndex — the user-facing index API.
 
-Wraps MSA build, NSA search (dense / beam), radius estimation and
-save / load. This is the object the examples, benchmarks and the serving
-engine hold.
+Wraps MSA build, NSA search (dense / beam / two-stage), radius estimation,
+the tiered leaf store and save / load. This is the object the examples,
+benchmarks and the serving engine hold.
 
     idx = PDASCIndex.build(data, gl=1000, distance="cosine")
     res = idx.search(queries, k=10, r=idx.default_radius)
+
+    # storage-aware serving: quantised payload tier + two-stage search
+    idx = PDASCIndex.build(data, gl=1000, distance="cosine", store="int8")
+    res = idx.search(queries, k=10, mode="two_stage", rerank_width=128)
+    idx.memory_bytes()   # per-tier (navigation vs payload) accounting
 """
 
 from __future__ import annotations
@@ -23,10 +28,13 @@ import numpy as np
 from repro.core import distances as dist_lib
 from repro.core import msa, nsa, radius as radius_lib
 from repro.kernels import ops as kops
+from repro.store import leaf_store as store_lib
+from repro.store import two_stage as two_stage_lib
 
 Array = jax.Array
 
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2  # v2: tiered leaf store (payload codes + scales)
+_SUPPORTED_VERSIONS = (1, 2)  # v1 artifacts load with a dense fp32 payload
 
 
 @dataclasses.dataclass
@@ -38,6 +46,10 @@ class PDASCIndex:
     n_prototypes: int
     max_children: tuple[int, ...]
     default_radius: float
+    # Payload tier (DESIGN.md §3.6). None = the seed path: leaf vectors stay
+    # a dense fp32 device array inside ``data.levels[0]``.
+    store: Optional[store_lib.LeafStore] = None
+    _payload_released: bool = dataclasses.field(default=False, repr=False)
 
     # -- construction --------------------------------------------------------
 
@@ -58,7 +70,14 @@ class PDASCIndex:
         swap_tol: float = 1e-3,
         bg: int = 128,
         shuffle: bool = True,
+        store: Optional[str] = None,
+        store_block: int = 1024,
+        store_path: Optional[str] = None,
     ) -> "PDASCIndex":
+        """Build the index. ``store`` ("int8" / "fp16" / "fp32") additionally
+        attaches the tiered payload store over the leaf vectors
+        (:meth:`attach_store`); ``store_path`` puts the exact fp32 payload on
+        disk (memmap) instead of host memory."""
         dist = dist_lib.get(distance)
         k_protos = n_prototypes or gl // 2
         data, stats = msa.build_index(
@@ -78,7 +97,7 @@ class PDASCIndex:
         default_r = radius_lib.estimate_radius(
             jnp.asarray(dataset, jnp.float32), dist, quantile=radius_quantile
         )
-        return cls(
+        idx = cls(
             data=data,
             stats=stats,
             distance=dist,
@@ -87,6 +106,56 @@ class PDASCIndex:
             max_children=msa.max_children(data),
             default_radius=default_r,
         )
+        if store is not None:
+            idx.attach_store(store, block=store_block, path=store_path)
+        return idx
+
+    def attach_store(
+        self,
+        backend: str = "int8",
+        *,
+        block: int = 1024,
+        path: Optional[str] = None,
+        cache_granules: int = 256,
+    ) -> store_lib.LeafStore:
+        """Create the payload tier from the leaf vectors (index slot layout).
+
+        ``path`` backs the exact fp32 payload with an on-disk memmap fetched
+        in ``block``-row granules; None keeps a host copy. Returns the store
+        (also set on ``self.store``).
+        """
+        if self._payload_released:
+            raise ValueError(
+                "leaf payload already released; rebuild or load the index "
+                "before attaching a new store"
+            )
+        self.store = store_lib.LeafStore.create(
+            np.asarray(self.data.levels[0].points), backend,
+            block=block, path=path, cache_granules=cache_granules,
+        )
+        return self.store
+
+    def release_dense_payload(self) -> None:
+        """Drop the resident fp32 leaf vectors (storage-aware serving).
+
+        Requires a quantised store: the beam descent never touches leaf
+        points and the leaf ranking moves to the store's scan -> rerank, so
+        only ``mode="two_stage"`` remains servable. The leaf level keeps its
+        row count (a ``[n_0, 0]`` placeholder) and bookkeeping arrays.
+        """
+        if self.store is None or self.store.backend == "fp32":
+            raise ValueError(
+                "release_dense_payload needs a quantised store "
+                "(attach_store('int8'|'fp16') first)"
+            )
+        if self._payload_released:
+            return
+        leaf = self.data.levels[0]
+        placeholder = jnp.zeros((leaf.points.shape[0], 0), jnp.float32)
+        self.data = self.data._replace(
+            levels=(leaf._replace(points=placeholder),) + self.data.levels[1:]
+        )
+        self._payload_released = True
 
     # -- search ---------------------------------------------------------------
 
@@ -98,14 +167,41 @@ class PDASCIndex:
         r: Optional[float] = None,
         mode: str = "beam",
         beam: int | tuple = 32,
+        rerank_width: Optional[int] = 128,
         leaf_radius_filter: bool = False,
         kernel: Optional[kops.KernelConfig] = None,
     ) -> nsa.SearchResult:
         """k-ANN search. ``mode``: "beam" (batched, pruned), "dense"
-        (faithful) or "beam_vmap" (the seed per-query baseline, kept for
+        (faithful), "two_stage" (tiered store: quantised scan -> exact
+        rerank over the top-``rerank_width``; None = ∞, bit-identical to
+        "beam") or "beam_vmap" (the seed per-query baseline, kept for
         benchmarking). ``kernel`` carries the kernel-layer block knobs."""
         Q = jnp.asarray(queries, jnp.float32)
         r = float(r) if r is not None else self.default_radius
+        if mode == "two_stage":
+            if self.store is None:
+                raise ValueError(
+                    "mode='two_stage' needs a leaf store: build with "
+                    "store='int8' or call attach_store()"
+                )
+            return two_stage_lib.search_two_stage(
+                self.data,
+                self.store,
+                Q,
+                dist=self.distance,
+                k=k,
+                r=r,
+                beam=beam,
+                max_children=self.max_children,
+                rerank_width=rerank_width,
+                leaf_radius_filter=leaf_radius_filter,
+                kernel=kernel,
+            )
+        if self._payload_released:
+            raise ValueError(
+                f"mode={mode!r} needs the dense leaf payload, which was "
+                "released (release_dense_payload); use mode='two_stage'"
+            )
         if mode == "dense":
             return nsa.search_dense(
                 self.data,
@@ -157,6 +253,39 @@ class PDASCIndex:
     def n_points(self) -> int:
         return int(np.asarray(self.data.levels[0].valid).sum())
 
+    def memory_bytes(self) -> dict:
+        """Per-tier resident-memory accounting (DESIGN.md §3.6).
+
+        ``navigation``: the prototype levels 1..L plus the leaf bookkeeping
+        arrays (valid / parent / child / sq_norm / leaf_ids) — always
+        device-resident. ``payload``: the leaf vectors' resident bytes — the
+        dense fp32 array on the seed path, the quantised codes + scales once
+        a store is attached (both until :meth:`release_dense_payload` drops
+        the dense copy). ``out_of_core``: exact fp32 payload bytes living on
+        host / disk (0 without a quantised store).
+        """
+        nav = 0
+        for lv in self.data.levels[1:]:
+            nav += sum(getattr(lv, f).nbytes for f in lv._fields)
+        leaf = self.data.levels[0]
+        nav += sum(getattr(leaf, f).nbytes for f in leaf._fields
+                   if f != "points")
+        nav += self.data.leaf_ids.nbytes
+        payload = 0 if self._payload_released else int(leaf.points.nbytes)
+        out_of_core = 0
+        if self.store is not None and self.store.backend != "fp32":
+            payload += self.store.resident_bytes
+            out_of_core = self.store.out_of_core_bytes
+        n = max(self.n_points, 1)
+        return dict(
+            navigation=int(nav),
+            payload=int(payload),
+            out_of_core=int(out_of_core),
+            total_resident=int(nav + payload),
+            payload_bytes_per_vector=round(payload / n, 2),
+            total_bytes_per_vector=round((nav + payload) / n, 2),
+        )
+
     def describe(self) -> str:
         lines = [
             f"PDASCIndex(distance={self.distance.name}, gl={self.gl}, "
@@ -172,11 +301,32 @@ class PDASCIndex:
     # -- persistence ----------------------------------------------------------
 
     def save(self, path: str) -> None:
-        """Atomic save: ``<path>.npz`` (arrays) + ``<path>.json`` (metadata)."""
+        """Atomic save: ``<path>.npz`` (arrays) + ``<path>.json`` (metadata).
+
+        Format v2: a quantised store saves its codes / scales alongside the
+        levels; the exact fp32 payload is always saved as ``level0_points``
+        (restored from the out-of-core source if the dense copy was
+        released), so every artifact reloads self-contained.
+
+        Note the residency consequence: saving streams the whole exact
+        payload through host memory, and a loaded index starts with the
+        dense fp32 leaf array resident again. To resume out-of-core serving
+        after a load, re-attach a memmapped store and release:
+        ``idx.attach_store("int8", path=...); idx.release_dense_payload()``.
+        """
         arrays = {"leaf_ids": np.asarray(self.data.leaf_ids)}
         for l, lv in enumerate(self.data.levels):
             for field in lv._fields:
                 arrays[f"level{l}_{field}"] = np.asarray(getattr(lv, field))
+        store_meta = None
+        if self.store is not None:
+            if self._payload_released:
+                arrays["level0_points"] = self.store.exact.read_all()
+            store_meta = dict(backend=self.store.backend,
+                              block=self.store.block)
+            if self.store.backend != "fp32":
+                arrays["store_codes"] = np.asarray(self.store.codes)
+                arrays["store_scales"] = np.asarray(self.store.scales)
         meta = dict(
             version=_FORMAT_VERSION,
             distance=self.distance.name,
@@ -187,6 +337,7 @@ class PDASCIndex:
             default_radius=self.default_radius,
             level_sizes=list(self.stats.level_sizes),
             level_td=list(self.stats.level_td),
+            store=store_meta,
         )
         d = os.path.dirname(os.path.abspath(path)) or "."
         os.makedirs(d, exist_ok=True)
@@ -205,8 +356,14 @@ class PDASCIndex:
     def load(cls, path: str) -> "PDASCIndex":
         with open(path + ".json") as f:
             meta = json.load(f)
-        if meta["version"] != _FORMAT_VERSION:
-            raise ValueError(f"unsupported index version {meta['version']}")
+        version = meta.get("version")
+        if version not in _SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"unsupported index format version {version!r} in "
+                f"{path + '.json'}; this build reads versions "
+                f"{_SUPPORTED_VERSIONS} (1 = dense fp32 payload, 2 = tiered "
+                f"leaf store)"
+            )
         z = np.load(path + ".npz")
         levels = []
         for l in range(meta["n_levels"]):
@@ -227,7 +384,7 @@ class PDASCIndex:
             level_td=tuple(meta["level_td"]),
             n_levels=meta["n_levels"],
         )
-        return cls(
+        idx = cls(
             data=data,
             stats=stats,
             distance=dist_lib.get(meta["distance"]),
@@ -236,3 +393,20 @@ class PDASCIndex:
             max_children=tuple(meta["max_children"]),
             default_radius=meta["default_radius"],
         )
+        # v1 artifacts carry no store: the payload tier defaults to the
+        # dense fp32 leaf array already loaded above.
+        store_meta = meta.get("store")
+        if store_meta is not None:
+            exact = store_lib.ExactSource(
+                np.asarray(z["level0_points"], np.float32),
+                store_meta["block"],
+            )
+            codes = scales = None
+            if store_meta["backend"] != "fp32":
+                codes = jnp.asarray(z["store_codes"])
+                scales = jnp.asarray(z["store_scales"])
+            idx.store = store_lib.LeafStore(
+                backend=store_meta["backend"], block=store_meta["block"],
+                codes=codes, scales=scales, exact=exact,
+            )
+        return idx

@@ -40,6 +40,11 @@ sorted ascending; empty slots hold ``BIG`` / -1.
 (a ``vmap`` of ``dist.point`` gathers). It exists as the benchmark baseline
 for the batched path (``benchmarks/bench_search.py --mode beam``) and as an
 independent semantic oracle in the tests.
+
+``descend_beam`` exposes the beam descent (levels L..1) without the leaf
+ranking — stage 0 of the tiered-store two-stage search
+(``repro.store.two_stage``, DESIGN.md §3.6), which replaces the fused fp32
+leaf rank with a quantised payload scan + exact out-of-core rerank.
 """
 
 from __future__ import annotations
@@ -192,33 +197,31 @@ def search_dense(
 # ---------------------------------------------------------------------------
 
 
-def _search_beam_batch(
+def _descend_beam(
     index: PDASCIndexData,
     dist: dist_lib.Distance,
     Q: Array,  # [B, d]
-    k: int,
     radii: tuple,
     beams: tuple,
     max_children: tuple,
-    leaf_radius_filter: bool,
     kernel: kops.KernelConfig,
-) -> SearchResult:
-    """Whole-batch beam search: per level one gather + one fused rank.
+) -> tuple[Array, Array]:
+    """Levels L..1 of the batched beam search: per level one gather + one
+    fused rank. Returns the leaf candidate table ``(cand_idx [B, W],
+    cand_ok [B, W])`` — the input of the leaf ranking stage, whichever
+    payload tier performs it (the fused fp32 rank of :func:`search_beam`, or
+    the quantised scan -> exact rerank of ``repro.store.two_stage``).
 
     The radius filter is applied *after* the beam selection: candidates
     sort ascending by distance, so every in-radius candidate outranks every
     out-of-radius one and post-filtering selects the identical beam — but
-    the select itself stays one fused kernel call.
+    the select itself stays one fused kernel call. Requires a multi-level
+    index (callers special-case L == 0, where every valid leaf slot is a
+    candidate).
     """
     levels = index.levels
     L = len(levels) - 1
     B = Q.shape[0]
-
-    def rank(lv, idx, ok, width):
-        return kops.rank_gathered(
-            Q, lv.points, lv.sq_norm, idx, ok, dist, k=width,
-            bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
-        )
 
     # Every top-level prototype is a candidate for every query, so the top
     # ranking is one cross pairwise_distance call (no per-query gather —
@@ -243,7 +246,10 @@ def _search_beam_batch(
         else:
             W = cand_idx.shape[1]
             beam = min(beams[l], W)
-            d_sel, slot = rank(lv, cand_idx, cand_ok, beam)  # [B, beam]
+            d_sel, slot = kops.rank_gathered(  # [B, beam] fused rank
+                Q, lv.points, lv.sq_norm, cand_idx, cand_ok, dist, k=beam,
+                bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+            )
             sel_idx = jnp.take_along_axis(cand_idx, slot, axis=1)
         sel_ok = (d_sel < radii[l]) & (d_sel < BIG / 2)
 
@@ -257,33 +263,121 @@ def _search_beam_batch(
         n_lower = levels[l - 1].points.shape[0]
         cand_idx = jnp.clip(grid.reshape(B, beam * mc), 0, n_lower - 1)
         cand_ok = gvalid.reshape(B, beam * mc)
+    return cand_idx, cand_ok
 
-    leaf = levels[0]
-    if L == 0:  # degenerate single-level index: the leaf is the top
-        W = leaf.points.shape[0]
-        ok = jnp.broadcast_to(leaf.valid[None, :], (B, W))
-        k_eff = min(k, W)
-        neg, slot = jax.lax.top_k(-D_top, k_eff)
-        dists, slots = -neg, slot.astype(jnp.int32)
-    else:
-        W = cand_idx.shape[1]
-        ok = cand_ok
-        k_eff = min(k, W)
-        dists, slot = rank(leaf, cand_idx, ok, k_eff)  # fused leaf ranking
-        slots = jnp.take_along_axis(cand_idx, slot, axis=1)
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dist", "r", "beam", "max_children", "kernel"),
+)
+def descend_beam(
+    index: PDASCIndexData,
+    Q: Array,  # [B, d]
+    *,
+    dist: dist_lib.Distance,
+    r,
+    beam,
+    max_children: tuple,
+    kernel: Optional[kops.KernelConfig] = None,
+) -> tuple[Array, Array]:
+    """Public jitted beam descent: NSA levels L..1 without the leaf ranking.
+
+    Returns ``(cand_idx [B, W], cand_ok [B, W])`` — the leaf candidate rows
+    each query would rank. This is stage 0 of the two-stage tiered-store
+    search (DESIGN.md §3.6); ``search_beam`` is exactly this followed by one
+    fused fp32 leaf rank.
+    """
+    n_levels = len(index.levels)
+    radii = _per_level_radii(r, n_levels)
+    beams = tuple(int(b) for b in _per_level_radii(beam, n_levels))
+    if n_levels == 1:  # degenerate: every valid leaf slot is a candidate
+        n0 = index.levels[0].points.shape[0]
+        B = Q.shape[0]
+        cand_idx = jnp.broadcast_to(
+            jnp.arange(n0, dtype=jnp.int32)[None, :], (B, n0)
+        )
+        cand_ok = jnp.broadcast_to(index.levels[0].valid[None, :], (B, n0))
+        return cand_idx, cand_ok
+    return _descend_beam(
+        index, dist, Q, radii, beams, tuple(max_children),
+        kernel or kops.DEFAULT,
+    )
+
+
+def assemble_result(
+    index: PDASCIndexData,
+    dists: Array,  # [B, k_eff] ascending leaf-rank output
+    slots: Array,  # [B, k_eff] leaf slot indices
+    ok: Array,  # [B, W] candidates examined (the pruning metric)
+    *,
+    k: int,
+    leaf_radius: float,
+    leaf_radius_filter: bool,
+) -> SearchResult:
+    """Shared result-assembly tail of every leaf-ranking mode (fused beam
+    rank and the tiered-store rerank): radius masking, slot -> dataset-row
+    id translation, candidate counting, and padding out to ``k`` when the
+    candidate pool was smaller."""
     if leaf_radius_filter:
-        in_r = dists < radii[0]
-        dists = jnp.where(in_r, dists, BIG)
+        dists = jnp.where(dists < leaf_radius, dists, BIG)
     ids = jnp.where(dists < BIG / 2, jnp.take(index.leaf_ids, slots), -1)
-    # Candidates *examined* (the pruning metric). The fused kernel never
-    # materialises the full leaf distance vector, so with leaf_radius_filter
-    # this counts examined rather than in-radius candidates.
     n_cand = jnp.sum(ok, axis=1, dtype=jnp.int32)
+    k_eff = dists.shape[1]
     if k_eff < k:  # tiny index edge case: fewer candidate slots than k
         pad = k - k_eff
         dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=BIG)
         ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
     return SearchResult(dists=dists, ids=ids, n_candidates=n_cand)
+
+
+def _search_beam_batch(
+    index: PDASCIndexData,
+    dist: dist_lib.Distance,
+    Q: Array,  # [B, d]
+    k: int,
+    radii: tuple,
+    beams: tuple,
+    max_children: tuple,
+    leaf_radius_filter: bool,
+    kernel: kops.KernelConfig,
+) -> SearchResult:
+    """Whole-batch beam search: the descent (``_descend_beam``) followed by
+    one fused fp32 leaf ranking."""
+    levels = index.levels
+    L = len(levels) - 1
+    B = Q.shape[0]
+
+    leaf = levels[0]
+    if L == 0:  # degenerate single-level index: the leaf is the top
+        W = leaf.points.shape[0]
+        D_top = kops.pairwise_distance(
+            Q, leaf.points, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
+            row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
+        )
+        D_top = jnp.where(leaf.valid[None, :], D_top, BIG)
+        ok = jnp.broadcast_to(leaf.valid[None, :], (B, W))
+        k_eff = min(k, W)
+        neg, slot = jax.lax.top_k(-D_top, k_eff)
+        dists, slots = -neg, slot.astype(jnp.int32)
+    else:
+        cand_idx, cand_ok = _descend_beam(
+            index, dist, Q, radii, beams, max_children, kernel
+        )
+        W = cand_idx.shape[1]
+        ok = cand_ok
+        k_eff = min(k, W)
+        dists, slot = kops.rank_gathered(  # fused leaf ranking
+            Q, leaf.points, leaf.sq_norm, cand_idx, ok, dist, k=k_eff,
+            bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+        )
+        slots = jnp.take_along_axis(cand_idx, slot, axis=1)
+    # Candidates counted are those *examined* (the pruning metric). The fused
+    # kernel never materialises the full leaf distance vector, so with
+    # leaf_radius_filter this counts examined rather than in-radius candidates.
+    return assemble_result(
+        index, dists, slots, ok, k=k, leaf_radius=radii[0],
+        leaf_radius_filter=leaf_radius_filter,
+    )
 
 
 @functools.partial(

@@ -3,6 +3,7 @@
   pairwise.py — tiled [m,d]x[n,d]->[m,n] distance matrices (MXU / VPU paths)
   topk.py     — fused distance + streaming top-k ("flash k-NN")
   kmedoids.py — fused FasterPAM swap-sweep ΔTD (streamed row tiles)
+  quantized.py— fused dequantise + streaming top-k (payload-tier scan)
   ops.py      — jit'd dispatch wrappers (TPU pallas / CPU interpret / ref)
   ref.py      — pure-jnp oracles defining each kernel's contract
 """
@@ -13,7 +14,9 @@ from repro.kernels.ops import (
     knn,
     pairwise_distance,
     rank_candidates,
+    rank_gathered,
     resolve_form,
+    scan_quantized,
     swap_deltas,
 )
 
@@ -23,6 +26,8 @@ __all__ = [
     "knn",
     "pairwise_distance",
     "rank_candidates",
+    "rank_gathered",
     "resolve_form",
+    "scan_quantized",
     "swap_deltas",
 ]

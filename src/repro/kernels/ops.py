@@ -7,6 +7,9 @@ evaluation and ranking step — DESIGN.md §3.3):
   knn(Q, DB, distance, k)                 -> (dists[q, k], ids[q, k])
   rank_candidates(Q, C, ok, distance, k)  -> (dists[b, k], slots[b, k])
   swap_deltas(D, d1, d2, n1, valid, k)    -> [k, g]  (k-medoids swap sweep)
+  scan_quantized(Q, codes, scales, idx, ok, distance, k)
+                                          -> (dists[b, k], slots[b, k])
+                                             (quantised payload-tier scan)
 
 ``distance`` may be a kernel form (``ref.FORMS``), a registry name
 (``repro.core.distances``), or a ``Distance`` object. Dispatch:
@@ -34,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.kernels import kmedoids as _kmk
 from repro.kernels import pairwise as _pw
+from repro.kernels import quantized as _qk
 from repro.kernels import ref as _ref
 from repro.kernels import topk as _tk
 
@@ -200,6 +204,56 @@ def swap_deltas(
             D, d1, d2, n1, valid, k=k, bg=bg, interpret=not _on_tpu()
         )
     return _ref.swap_deltas_ref(D, d1, d2, n1, valid, k)
+
+
+def scan_quantized(
+    Q: Array,
+    codes: Array,
+    scales: Array,
+    cand_idx: Array,
+    cand_ok: Array,
+    distance="l2",
+    *,
+    k: int,
+    block: int,
+    bq: int = 8,
+    bn: int = 256,
+    force_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Stage-1 two-stage search: rank per-query candidates against the
+    *quantised* payload tier in its native dtype (DESIGN.md §3.6).
+
+    ``Q``: [b, d] queries; ``codes``: [n, d] quantised leaf payload (int8
+    symmetric or fp16); ``scales``: [nb] per-block dequantisation scales,
+    ``block`` rows per block; ``cand_idx``/``cand_ok``: [b, w] candidate rows
+    into ``codes`` + validity (the NSA beam layout). Returns (dists[b, k]
+    ascending, slots[b, k] into the candidate axis) — *approximate* distances
+    (quantisation error ~ scale/2 per coordinate); callers rerank the
+    survivors against the exact fp32 payload.
+
+    The gather stays in the codes dtype — 1 byte/element of HBM traffic for
+    int8 vs 4 for the fp32 leaf gather — and the Pallas path dequantises
+    per-tile in VMEM (``kernels/quantized.py``).
+    """
+    nb = scales.shape[0]
+    C = jnp.take(codes, cand_idx, axis=0)  # [b, w, d] native dtype
+    srows = jnp.take(scales, jnp.clip(cand_idx // block, 0, nb - 1))  # [b, w]
+    form = resolve_form(distance)
+    if form is None:
+        from repro.core import distances as dist_lib
+
+        dist = dist_lib.get(distance)
+        Cf = C.astype(jnp.float32) * srows.astype(jnp.float32)[..., None]
+        D = dist.point(Q[:, None, :], Cf)
+        D = jnp.where(cand_ok, D, dist_lib.BIG)
+        neg, slots = jax.lax.top_k(-D, k)
+        return -neg, slots.astype(jnp.int32)
+    if _on_tpu() or force_pallas:
+        return _qk.scan_pallas(
+            Q, C, srows, cand_ok,
+            form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu(),
+        )
+    return _ref.scan_quantized_ref(Q, C, srows, cand_ok, k, form)
 
 
 def rank_gathered(

@@ -1,0 +1,130 @@
+"""Fused dequantise -> distance -> top-k Pallas kernel (the payload-tier scan).
+
+The tiered leaf store (DESIGN.md §3.6) keeps leaf vectors as int8 / fp16
+symmetric-quantised blocks with per-block scales; stage 1 of the two-stage
+search ranks the beam's leaf candidates against that quantised payload in its
+*native* dtype. The win over gathering fp32 rows is pure memory traffic: the
+candidate cube leaving HBM is 1 byte/element (int8) instead of 4, and the
+dequantisation (one multiply by the per-row scale) happens on the VMEM tile
+just before the distance reduction — the fp32 candidate cube never exists
+outside VMEM.
+
+Structurally this is ``topk.rank_pallas`` with a dequantise prologue:
+
+  grid = (b/bq, w/bn)          # candidate axis sequential ("arbitrary")
+  per step, VMEM only:
+    c  = codes[bq, bn, d] * scales[bq, bn, 1]   # dequantise in-register
+    cc = sum(c*c, -1)                           # norms from dequantised tile
+    d  = dist(q_tile, c)                        # VPU rowwise reduction
+    merge running top-k of concat([state, d])   # one lax.top_k per tile
+
+Only the running ``[bq, k]`` top-k state persists (in the revisited output
+block); the [b, w] distance matrix never reaches HBM. Norm-consuming forms
+reduce ``||c||^2`` from the dequantised tile — the quantised payload has no
+fp32 norm cache by design (it would cost 4 bytes/vector, a 4/d overhead on
+the tier whose whole point is ~1 byte/dim).
+
+The contract is ``ref.scan_quantized_ref``; parity (interpret mode, vmapped
+included) is ``tests/test_store.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import BIG, FORMS, NORM_FORMS
+from repro.kernels.topk import _ceil_to, _rank_tile_distance
+
+Array = jax.Array
+
+
+def _scan_kernel(q_ref, c_ref, s_ref, ok_ref, od_ref, oi_ref, *, form, k, bn):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full_like(od_ref, BIG)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    # Dequantise the native-dtype code tile in VMEM: [bq, bn, d] f32, gone
+    # after the reduction below.
+    c = c_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)[:, :, None]
+    cc = jnp.sum(c * c, axis=-1) if form in NORM_FORMS else None
+    d = _rank_tile_distance(form, q_ref[...], c, cc)  # [bq, bn]
+    d = jnp.where(ok_ref[...] != 0, d, BIG)
+    bq = d.shape[0]
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+
+    all_d = jnp.concatenate([od_ref[...], d], axis=1)  # [bq, k + bn]
+    all_i = jnp.concatenate([oi_ref[...], col], axis=1)
+    neg, idx = jax.lax.top_k(-all_d, k)
+    od_ref[...] = -neg
+    oi_ref[...] = jnp.take_along_axis(all_i, idx, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("form", "k", "bq", "bn", "interpret")
+)
+def scan_pallas(
+    Q: Array,
+    C: Array,
+    scales: Array,
+    ok: Array,
+    *,
+    form: str,
+    k: int,
+    bq: int = 8,
+    bn: int = 256,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused masked ranking of quantised per-query candidates.
+
+    ``Q``: [b, d] f32 queries; ``C``: [b, w, d] gathered candidate *codes*
+    (int8 / fp16 — the payload tier's native dtype); ``scales``: [b, w] f32
+    per-row dequantisation scales; ``ok``: [b, w] validity mask. Returns
+    (dists[b, k] ascending, slots[b, k] into the ``w`` axis); masked slots
+    rank as ``BIG``.
+    """
+    if form not in FORMS:
+        raise ValueError(f"unsupported form {form!r}")
+    b, d = Q.shape
+    b2, w, d2 = C.shape
+    if b != b2 or d != d2:
+        raise ValueError(f"shape mismatch {Q.shape} vs {C.shape}")
+    if k > w:
+        raise ValueError(f"k={k} > candidate width w={w}")
+
+    bp, wp = _ceil_to(b, bq), _ceil_to(w, bn)
+    Qp = jnp.pad(Q, ((0, bp - b), (0, 0)))
+    Cp = jnp.pad(C, ((0, bp - b), (0, wp - w), (0, 0)))
+    Sp = jnp.pad(scales.astype(jnp.float32), ((0, bp - b), (0, wp - w)))
+    okp = jnp.pad(ok.astype(jnp.int8), ((0, bp - b), (0, wp - w)))
+    grid = (bp // bq, wp // bn)
+
+    kernel = functools.partial(_scan_kernel, form=form, k=k, bn=bn)
+    dists, slots = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Qp, Cp, Sp, okp)
+    # Same slot contract as rank_pallas: masked/short rows must not leak
+    # out-of-range indices to host-side consumers.
+    return dists[:b], jnp.clip(slots[:b], 0, w - 1)

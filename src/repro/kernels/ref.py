@@ -196,6 +196,24 @@ def rowwise_ref(
     raise ValueError(f"unknown form {form!r}")
 
 
+def scan_quantized_ref(
+    Q: Array, C: Array, c_scales: Array, ok: Array, k: int, form: str
+) -> tuple[Array, Array]:
+    """Stage-1 payload-tier scan oracle (the ``kernels/quantized.py`` contract).
+
+    ``C``: [b, w, d] per-query gathered *quantized* candidate codes (int8
+    symmetric or fp16); ``c_scales``: [b, w] per-row dequantisation scales
+    (the payload tier's per-block scale broadcast to its rows). Candidates
+    are dequantised (``code * scale``) and ranked exactly like
+    :func:`rank_ref`; masked slots rank as ``BIG``. Returns
+    (dists[b, k] ascending, slots[b, k] into the ``w`` axis).
+    """
+    Cf = C.astype(jnp.float32) * c_scales.astype(jnp.float32)[..., None]
+    D = jnp.where(ok, rowwise_ref(Q, Cf, form), BIG)
+    neg, slots = jax.lax.top_k(-D, k)
+    return -neg, slots.astype(jnp.int32)
+
+
 def rank_ref(
     Q: Array, C: Array, ok: Array, k: int, form: str,
     cc: Optional[Array] = None,

@@ -36,8 +36,15 @@ def _parse():
     p.add_argument("--radius-quantile", type=float, default=0.5)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--mode", default="beam",
-                   choices=["beam", "dense", "beam_vmap"])
+                   choices=["beam", "dense", "beam_vmap", "two_stage"])
     p.add_argument("--beam", type=int, default=32)
+    # Storage substrate (DESIGN.md §3.6): mode=two_stage serves from the
+    # tiered leaf store — quantised payload resident, exact fp32 out of core
+    # (memmapped at --store-path if given), dense leaf array released.
+    p.add_argument("--store", default="int8", choices=["int8", "fp16"])
+    p.add_argument("--store-block", type=int, default=1024)
+    p.add_argument("--store-path", default=None)
+    p.add_argument("--rerank-width", type=int, default=128)
     # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
     kd = KernelConfig()
     p.add_argument("--bm", type=int, default=kd.bm)
@@ -56,21 +63,50 @@ def main():
     print(f"[serve] building PDASC index on {train.shape} "
           f"({args.distance}, gl={args.gl})", flush=True)
     t0 = time.time()
+    store_kw = {}
+    if args.mode == "two_stage":
+        store_kw = dict(store=args.store, store_block=args.store_block,
+                        store_path=args.store_path)
     idx = PDASCIndex.build(train, gl=args.gl, distance=args.distance,
-                           radius_quantile=args.radius_quantile)
+                           radius_quantile=args.radius_quantile, **store_kw)
+    if args.mode == "two_stage":
+        idx.release_dense_payload()  # serve within the tiered memory budget
     print(f"[serve] built in {time.time()-t0:.1f}s\n{idx.describe()}")
+    print(f"[serve] memory: {idx.memory_bytes()}")
 
     kernel = KernelConfig(bm=args.bm, bn=args.bn, bd=args.bd, bq=args.bq,
                           row_chunk=args.row_chunk)
 
     def handler(batch, n_valid):
         res = idx.search(jnp.asarray(batch), k=args.k, mode=args.mode,
-                         beam=args.beam, kernel=kernel)
+                         beam=args.beam, rerank_width=args.rerank_width,
+                         kernel=kernel)
         return res.dists, res.ids
+
+    prefetch_fn = None
+    if args.mode == "two_stage" and idx.store.exact.on_disk:
+        from repro.core import nsa
+
+        def prefetch_fn(payloads):
+            # Between-batch granule warming: run the (cheap, jitted) descent
+            # for the queued queries and prefetch their candidate granules —
+            # a superset of the rows the next batch's rerank will fetch.
+            # Padded to the compiled batch size so no new executable compiles.
+            rows = np.stack(payloads[:args.batch])
+            pad = args.batch - len(rows)
+            if pad:
+                rows = np.concatenate([rows, np.repeat(rows[-1:], pad, 0)])
+            ci, _ = nsa.descend_beam(
+                idx.data, jnp.asarray(rows), dist=idx.distance,
+                r=idx.default_radius, beam=args.beam,
+                max_children=idx.max_children, kernel=kernel,
+            )
+            idx.store.prefetch_rows(np.asarray(ci[:len(payloads)]))
 
     engine = BatchingEngine(handler, batch_size=args.batch,
                             max_wait_ms=args.max_wait_ms,
-                            pad_payload=np.zeros(train.shape[1], np.float32))
+                            pad_payload=np.zeros(train.shape[1], np.float32),
+                            prefetch_fn=prefetch_fn)
     # warmup compile
     engine.submit(test[0]).wait(timeout=120)
 

@@ -6,6 +6,14 @@ on the serving path). A worker thread drains the queue with a max-wait
 deadline: a batch departs when full OR when the oldest request has waited
 ``max_wait_ms`` (p99-friendly batching).
 
+``prefetch_fn`` hooks storage-aware serving (DESIGN.md §3.6): while the
+worker runs the current batch, a helper thread receives a snapshot of the
+payloads still queued — a tiered-store handler uses it to warm the leaf
+store's granule cache so the next batch's exact-rerank fetches hit memory
+instead of disk. Prefetching is best-effort: snapshots that arrive while
+the helper is busy are coalesced to the latest one, and exceptions are
+swallowed (a cold cache is a latency miss, not an error).
+
 Used by ``launch/serve.py`` for two endpoints:
   * PDASC k-NN queries  (handler = distributed NSA search)
   * recsys CTR scoring  (handler = recsys serve step)
@@ -51,22 +59,47 @@ class BatchingEngine:
         batch_size: int,
         max_wait_ms: float = 5.0,
         pad_payload: Optional[Any] = None,
+        prefetch_fn: Optional[Callable[[list], None]] = None,
     ):
         self.handler = handler
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
         self.pad_payload = pad_payload
+        self.prefetch_fn = prefetch_fn
         self._q: queue.Queue = queue.Queue()
         self._ids = itertools.count()
         self._stop = threading.Event()
-        self.stats = dict(batches=0, requests=0, occupancy_sum=0.0)
+        # Serialises submit()'s closed-check+enqueue against close()'s
+        # stop+sentinel: without it a submit could land in the queue after
+        # the worker drained it, leaving a request whose wait() never fires.
+        self._submit_lock = threading.Lock()
+        self.stats = dict(batches=0, requests=0, occupancy_sum=0.0,
+                          prefetches=0)
+        self._prefetch_q: Optional[queue.Queue] = None
+        self._prefetch_thread = None
+        if prefetch_fn is not None:
+            # maxsize=1 + drop-and-replace: only the freshest queue snapshot
+            # is worth warming the cache for.
+            self._prefetch_q = queue.Queue(maxsize=1)
+            self._prefetch_thread = threading.Thread(
+                target=self._prefetch_worker, daemon=True
+            )
+            self._prefetch_thread.start()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def submit(self, payload) -> Request:
-        req = Request(payload=payload, id=next(self._ids),
-                      enqueued_at=time.time())
-        self._q.put(req)
+        with self._submit_lock:
+            if self._stop.is_set():
+                # Raise at the call site instead of enqueueing a request
+                # whose event can never fire (the worker drains requests
+                # enqueued before the shutdown sentinel, then exits).
+                raise RuntimeError(
+                    "BatchingEngine is closed; submit() rejected"
+                )
+            req = Request(payload=payload, id=next(self._ids),
+                          enqueued_at=time.time())
+            self._q.put(req)
         return req
 
     def _take_batch(self) -> list[Request]:
@@ -92,6 +125,44 @@ class BatchingEngine:
             batch.append(item)
         return batch
 
+    def _prefetch_worker(self):
+        while True:
+            snapshot = self._prefetch_q.get()
+            if snapshot is _SHUTDOWN:
+                return
+            try:
+                self.prefetch_fn(snapshot)
+                self.stats["prefetches"] += 1
+            except Exception:
+                pass  # best-effort: a cold cache costs latency, not errors
+
+    def _kick_prefetch(self):
+        """Hand the still-queued payloads to the prefetch thread (so cache
+        warming overlaps the handler call for the batch just taken)."""
+        if self._stop.is_set():  # shutting down: nothing left worth warming
+            return
+        with self._q.mutex:
+            snapshot = [r.payload for r in self._q.queue
+                        if r is not _SHUTDOWN]
+        if not snapshot:
+            return
+        try:
+            self._prefetch_q.put_nowait(snapshot)
+        except queue.Full:  # helper busy: drop the stale snapshot
+            try:
+                dropped = self._prefetch_q.get_nowait()
+            except queue.Empty:
+                dropped = None
+            if dropped is _SHUTDOWN:
+                # close() raced us: restore the sentinel, never swallow it
+                # (the prefetch thread must still terminate).
+                self._prefetch_q.put(dropped)
+                return
+            try:
+                self._prefetch_q.put_nowait(snapshot)
+            except queue.Full:
+                pass
+
     def _worker(self):
         # After close() the worker drains requests already enqueued (they
         # hold waiting callers) before exiting; _take_batch cannot block
@@ -100,6 +171,8 @@ class BatchingEngine:
             batch = self._take_batch()
             if not batch:
                 continue
+            if self._prefetch_q is not None:
+                self._kick_prefetch()
             n = len(batch)
             pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
             rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
@@ -113,9 +186,18 @@ class BatchingEngine:
             self.stats["occupancy_sum"] += n / self.batch_size
 
     def close(self):
-        self._stop.set()
-        self._q.put(_SHUTDOWN)  # wake the worker if it is parked on get()
+        with self._submit_lock:
+            self._stop.set()
+            self._q.put(_SHUTDOWN)  # wake a worker parked on get(); any
+            # request enqueued before the sentinel still gets served.
         self._thread.join(timeout=2.0)
+        if self._prefetch_q is not None:
+            try:  # drop any pending snapshot so the sentinel never blocks
+                self._prefetch_q.get_nowait()
+            except queue.Empty:
+                pass
+            self._prefetch_q.put(_SHUTDOWN)
+            self._prefetch_thread.join(timeout=2.0)
 
     @property
     def mean_occupancy(self) -> float:

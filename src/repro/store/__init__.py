@@ -1,0 +1,25 @@
+"""Storage substrate: the tiered leaf store (DESIGN.md §3.6).
+
+Separates the index's hot navigation tier (prototype hierarchy, fp32 in
+device memory) from the payload tier (leaf vectors as int8/fp16 quantised
+blocks, exact fp32 kept out of core), and serves it with the two-stage
+scan -> rerank search.
+"""
+
+from repro.store.leaf_store import (
+    BACKENDS,
+    ExactSource,
+    LeafStore,
+    dequantize,
+    quantize,
+)
+from repro.store.two_stage import search_two_stage
+
+__all__ = [
+    "BACKENDS",
+    "ExactSource",
+    "LeafStore",
+    "dequantize",
+    "quantize",
+    "search_two_stage",
+]

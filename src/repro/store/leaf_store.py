@@ -1,0 +1,237 @@
+"""Tiered leaf store: the payload tier of the PDASC index (DESIGN.md §3.6).
+
+The index splits into two tiers with very different access patterns:
+
+* **navigation tier** — the prototype hierarchy (levels 1..L plus the leaf
+  bookkeeping arrays). Touched by every query at full precision; stays fp32
+  in device memory. Roughly ``sum_l n_l * d`` floats — a constant fraction
+  of the dataset set by the 2:1 prototype ratio.
+* **payload tier** — the leaf vectors themselves. Touched only at the final
+  ranking step, and only on the beam's candidate rows. This module stores
+  that tier as symmetric-quantised blocks (int8 or fp16 codes + one fp32
+  scale per ``block`` rows) resident on device, with the exact fp32 vectors
+  kept *out of core* — a host array or an on-disk ``np.memmap`` fetched in
+  ``block``-row granules through a small LRU cache.
+
+Search against a quantised store is two-stage (``repro.store.two_stage``):
+the NSA descent ranks leaves as usual, ``ops.scan_quantized`` scores the
+candidates against the codes in their native dtype, and the top
+``rerank_width`` survivors are reranked exactly against granules fetched
+from the out-of-core payload. ``rerank_width=None`` (∞) skips the scan and
+reranks every candidate — bit-identical to ``search_beam``.
+
+Quantisation format (symmetric, per block of ``block`` rows):
+
+  int8:  scale_b = max|x_b| / 127 ; code = clip(round(x / scale_b), ±127)
+  fp16:  code = fp16(x)           ; scale_b = 1.0  (uniform container)
+  fp32:  codes is None — the payload stays the dense resident leaf array
+         (the seed path, expressed in the same store interface).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+BACKENDS = ("fp32", "fp16", "int8")
+
+_CODE_DTYPE = {"int8": jnp.int8, "fp16": jnp.float16}
+_EPS = 1e-12
+
+
+def quantize(x, backend: str, block: int) -> tuple[Array, Array]:
+    """Symmetric block quantisation: [n, d] f32 -> (codes [n, d], scales [nb]).
+
+    ``nb = ceil(n / block)``; the last block may be short (its scale covers
+    only the real rows). Round-trip error is bounded by ``scale_b / 2`` per
+    coordinate for int8 (``tests/test_store.py`` asserts it).
+    """
+    if backend not in _CODE_DTYPE:
+        raise ValueError(f"quantize backend must be int8/fp16, got {backend!r}")
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    nb = -(-n // block)
+    if backend == "fp16":
+        return x.astype(jnp.float16), jnp.ones((nb,), jnp.float32)
+    pad = nb * block - n
+    xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, block, d)
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=(1, 2)) / 127.0, _EPS)
+    codes = jnp.clip(jnp.round(xb / scales[:, None, None]), -127, 127)
+    return codes.reshape(nb * block, d)[:n].astype(jnp.int8), scales
+
+
+def dequantize(codes: Array, scales: Array, block: int) -> Array:
+    """Inverse of :func:`quantize`: codes [n, d] -> f32 [n, d]."""
+    n = codes.shape[0]
+    rows = jnp.clip(jnp.arange(n) // block, 0, scales.shape[0] - 1)
+    return codes.astype(jnp.float32) * jnp.take(scales, rows)[:, None]
+
+
+class ExactSource:
+    """Out-of-core exact fp32 payload: granule-wise fetch + LRU cache.
+
+    Backed by either a host ``np.ndarray`` or an on-disk ``np.memmap``
+    (same interface — the memmap is what makes the tier out-of-core; the
+    host-array form exists so tests can assert backend equivalence). Fetches
+    always happen in whole ``block``-row granules, the unit the distributed
+    deployment ships between nodes; ``cache_granules`` bounds resident host
+    copies. Thread-safe: the serving engine prefetches concurrently.
+    """
+
+    def __init__(self, arr, block: int, cache_granules: int = 256):
+        self._arr = arr  # np.ndarray or np.memmap, [n, d] f32
+        self.block = block
+        self.n, self.d = arr.shape
+        self._cache: collections.OrderedDict[int, np.ndarray] = (
+            collections.OrderedDict()
+        )
+        self._cache_max = max(1, cache_granules)
+        self._lock = threading.Lock()
+        self.stats = dict(fetches=0, hits=0)
+
+    @property
+    def on_disk(self) -> bool:
+        return isinstance(self._arr, np.memmap)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.d * 4
+
+    def _granule(self, g: int) -> np.ndarray:
+        with self._lock:
+            blk = self._cache.get(g)
+            if blk is not None:
+                self._cache.move_to_end(g)
+                self.stats["hits"] += 1
+                return blk
+        lo = g * self.block
+        blk = np.asarray(self._arr[lo: lo + self.block], np.float32)
+        with self._lock:
+            self.stats["fetches"] += 1
+            self._cache[g] = blk
+            while len(self._cache) > self._cache_max:
+                self._cache.popitem(last=False)
+        return blk
+
+    def read_all(self) -> np.ndarray:
+        """The whole exact payload (save path; bypasses the granule cache)."""
+        return np.asarray(self._arr, np.float32)
+
+    def prefetch(self, granules) -> None:
+        """Warm the cache (the serving engine's between-batch hook).
+
+        Capped at the cache capacity: warming more granules than the LRU can
+        hold would evict the warm-up's own earlier inserts (and anything
+        already warm) — strictly worse I/O than not prefetching.
+        """
+        gs = np.unique(np.asarray(granules, np.int64))[: self._cache_max]
+        for g in gs:
+            self._granule(int(g))
+
+    def fetch_rows(self, idx: np.ndarray) -> np.ndarray:
+        """Gather exact rows: idx [...] int -> [..., d] f32, granule-wise."""
+        idx = np.asarray(idx, np.int64)
+        flat = np.clip(idx.reshape(-1), 0, self.n - 1)
+        out = np.empty((flat.shape[0], self.d), np.float32)
+        gran = flat // self.block
+        for g in np.unique(gran):
+            sel = gran == g
+            blk = self._granule(int(g))
+            out[sel] = blk[flat[sel] - int(g) * self.block]
+        return out.reshape(*idx.shape, self.d)
+
+
+@dataclasses.dataclass
+class LeafStore:
+    """The payload tier: resident codes + out-of-core exact vectors."""
+
+    backend: str  # "fp32" | "fp16" | "int8"
+    block: int  # granule rows (quantisation block == fetch unit)
+    codes: Optional[Array]  # [n, d] int8/fp16 on device; None for fp32
+    scales: Optional[Array]  # [nb] f32 per-block scales; None for fp32
+    exact: ExactSource  # exact fp32 payload (host or memmap)
+
+    @classmethod
+    def create(
+        cls,
+        points,
+        backend: str = "int8",
+        *,
+        block: int = 1024,
+        path: Optional[str] = None,
+        cache_granules: int = 256,
+    ) -> "LeafStore":
+        """Build a store from the leaf vectors (index slot layout).
+
+        ``path``: write the exact fp32 payload to ``<path>`` as raw bytes and
+        back the exact source with a read-only ``np.memmap`` (the out-of-core
+        deployment); None keeps a host copy (in-memory form, same interface).
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown store backend {backend!r}; use {BACKENDS}")
+        pts = np.asarray(points, np.float32)
+        if path is not None:
+            d = os.path.dirname(os.path.abspath(path)) or "."
+            os.makedirs(d, exist_ok=True)
+            with open(path, "wb") as f:
+                f.write(pts.tobytes())
+            arr = np.memmap(path, dtype=np.float32, mode="r", shape=pts.shape)
+        else:
+            arr = pts
+        exact = ExactSource(arr, block, cache_granules=cache_granules)
+        if backend == "fp32":
+            return cls(backend=backend, block=block, codes=None, scales=None,
+                       exact=exact)
+        codes, scales = quantize(pts, backend, block)
+        return cls(backend=backend, block=block, codes=codes, scales=scales,
+                   exact=exact)
+
+    # -- geometry / accounting ------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.exact.n
+
+    @property
+    def d(self) -> int:
+        return self.exact.d
+
+    @property
+    def resident_bytes(self) -> int:
+        """Device-resident payload bytes. fp32: the dense leaf array itself
+        (it *is* the payload); quantised: codes + scales only."""
+        if self.backend == "fp32":
+            return self.n * self.d * 4
+        return int(self.codes.size * self.codes.dtype.itemsize
+                   + self.scales.size * 4)
+
+    @property
+    def out_of_core_bytes(self) -> int:
+        """Exact-payload bytes living off-device (0 for fp32 — resident)."""
+        return 0 if self.backend == "fp32" else self.exact.nbytes
+
+    # -- access ---------------------------------------------------------------
+
+    def dequantized(self) -> Array:
+        """Full dequantised payload [n, d] f32 (tests / small stores only)."""
+        if self.backend == "fp32":
+            return jnp.asarray(self.exact.fetch_rows(np.arange(self.n)))
+        return dequantize(self.codes, self.scales, self.block)
+
+    def fetch_rows(self, idx) -> np.ndarray:
+        """Exact fp32 rows from the out-of-core tier (granule fetch + LRU)."""
+        return self.exact.fetch_rows(idx)
+
+    def prefetch_rows(self, idx) -> None:
+        """Warm the granule cache for the rows ``idx`` (async-friendly)."""
+        flat = np.clip(np.asarray(idx, np.int64).reshape(-1), 0, self.n - 1)
+        self.exact.prefetch(flat // self.block)

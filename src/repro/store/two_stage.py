@@ -1,0 +1,167 @@
+"""Two-stage (scan -> rerank) search over the tiered leaf store.
+
+Stage 0 — NSA beam descent (``nsa.descend_beam``, jitted): levels L..1 rank
+exactly as :func:`repro.core.nsa.search_beam`, producing the leaf candidate
+table ``cand_idx [B, W]``.
+
+Stage 1 — quantised scan (``ops.scan_quantized``, jitted): candidates score
+against the resident payload codes in their native dtype; the top
+``rerank_width`` survivors per query advance. Distances here carry the
+quantisation error (~ scale/2 per coordinate) — good enough to order the
+field, not to report.
+
+Stage 2 — exact rerank: the survivors' exact fp32 rows are fetched from the
+out-of-core payload in ``block``-row granules (host memmap / LRU cache —
+the one deliberately host-synchronising step, it *is* the storage access)
+and reranked with the same fused kernel the dense path uses. Reported
+distances are exact.
+
+``rerank_width=None`` (∞) disables the approximate tier entirely: the full
+exact payload is read back from the out-of-core source, the leaf level is
+reconstructed, and the *same jitted* ``search_beam`` runs on it — bitwise
+the same program on bitwise-equal inputs, so dists, ids and candidate
+counts are bit-identical arrays (tests assert equality; re-expressing the
+leaf rank through a different jit boundary would agree only to ulps). That
+makes ∞ the validation / no-approximation mode: it reads the whole
+payload, exactly like the resident seed path it replaces. The knob
+degrades gracefully from "trust the scan" (small R, granule-sized fetch
+traffic) to "trust nothing" (∞, the dense result).
+
+While stage 1 runs on device, the candidate granules (a superset of the
+survivors') are prefetched into the exact source's cache on a worker thread
+— the fetch in stage 2 then mostly hits cache (``prefetch=True``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core.distances import BIG
+from repro.core.msa import PDASCIndexData
+from repro.core.nsa import (
+    SearchResult,
+    _per_level_radii,
+    assemble_result,
+    descend_beam,
+    search_beam,
+)
+from repro.kernels import ops as kops
+from repro.store.leaf_store import LeafStore
+
+Array = jax.Array
+
+
+def search_two_stage(
+    index: PDASCIndexData,
+    store: LeafStore,
+    Q: Array,
+    *,
+    dist: dist_lib.Distance,
+    k: int = 10,
+    r,
+    beam,
+    max_children: tuple,
+    rerank_width: Optional[int] = 128,
+    leaf_radius_filter: bool = False,
+    kernel: Optional[kops.KernelConfig] = None,
+    prefetch: bool = True,
+) -> SearchResult:
+    """Two-stage NSA over a tiered leaf store. ``Q``: [B, d] (or [d]).
+
+    Args:
+      store: the payload tier (``LeafStore``). A quantised backend enables
+        the stage-1 scan; an fp32 backend reranks the full candidate set
+        (equivalent to ``search_beam`` served from the out-of-core payload).
+      rerank_width: survivors per query advancing to the exact rerank
+        (clamped to at least ``k`` — the knob bounds fetch traffic, never
+        the result count). None / <= 0 means ∞ (rerank every candidate —
+        bit-identical to ``search_beam``).
+      prefetch: overlap stage 1 with warming the granule cache for the
+        candidate rows.
+    """
+    dist = dist_lib.get(dist)
+    kernel = kernel or kops.DEFAULT
+    Q = jnp.asarray(Q, jnp.float32)
+    squeeze = Q.ndim == 1
+    Qb = Q[None, :] if squeeze else Q
+    n_levels = len(index.levels)
+    radii = _per_level_radii(r, n_levels)
+
+    infinite = rerank_width is None or rerank_width <= 0
+    if infinite or store.backend == "fp32":
+        # ∞ / fp32 mode: no approximate tier in play — run the *same jitted*
+        # search_beam over the exact payload. If the dense leaf array is
+        # still resident it IS that payload (bitwise), so use it as-is; only
+        # a released index re-reads the out-of-core source and reconstructs
+        # the leaf level (the deliberate full-payload cost of the
+        # no-approximation fallback — this is a validation mode, not the
+        # serving path). Bitwise-equal inputs through the identical program
+        # => bit-identical results on every backend.
+        leaf = index.levels[0]
+        if leaf.points.shape[1] == store.d:  # dense payload still resident
+            full = index
+        else:
+            table = jnp.asarray(store.exact.read_all())
+            full = index._replace(
+                levels=(leaf._replace(points=table),) + index.levels[1:]
+            )
+        res = search_beam(
+            full, Qb, dist=dist, k=k, r=r, beam=beam,
+            max_children=tuple(max_children),
+            leaf_radius_filter=leaf_radius_filter, kernel=kernel,
+        )
+        return jax.tree.map(lambda a: a[0], res) if squeeze else res
+
+    cand_idx, cand_ok = descend_beam(
+        index, Qb, dist=dist, r=r, beam=beam,
+        max_children=tuple(max_children), kernel=kernel,
+    )
+    W = cand_idx.shape[1]
+    # Never let the rerank pool shrink below k: a small rerank_width is a
+    # fetch-traffic knob, not permission to return fewer than k neighbours.
+    R = min(max(int(rerank_width), k), W)
+
+    prefetcher = None
+    if prefetch and store.exact.on_disk:
+        # cand_idx is already materialised (descend_beam returned);
+        # warming the granule cache overlaps the device-side scan below.
+        # In-memory exact sources skip this — their fetch is a host slice,
+        # cheaper than the copy the warm-up would do.
+        cand_host = np.asarray(cand_idx)
+        prefetcher = threading.Thread(
+            target=store.prefetch_rows, args=(cand_host,), daemon=True
+        )
+        prefetcher.start()
+
+    d_scan, slot = kops.scan_quantized(
+        Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
+        k=R, block=store.block, bq=kernel.bq, bn=kernel.bn,
+        force_pallas=kernel.force_pallas,
+    )
+    surv_idx = jnp.take_along_axis(cand_idx, slot, axis=1)  # [B, R]
+    surv_ok = d_scan < BIG / 2
+
+    if prefetcher is not None:
+        prefetcher.join()
+
+    # Stage 2: exact fp32 rows from the out-of-core payload, granule-wise.
+    C = store.fetch_rows(np.asarray(surv_idx))  # [B, R, d] host f32
+    k_eff = min(k, R)
+    dists, slot2 = kops.rank_candidates(
+        Qb, jnp.asarray(C), surv_ok, dist, k=k_eff,
+        bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+    )
+    slots = jnp.take_along_axis(surv_idx, slot2, axis=1)
+    res = assemble_result(
+        index, dists, slots, cand_ok, k=k, leaf_radius=radii[0],
+        leaf_radius_filter=leaf_radius_filter,
+    )
+    if squeeze:
+        res = jax.tree.map(lambda a: a[0], res)
+    return res

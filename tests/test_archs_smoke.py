@@ -159,3 +159,8 @@ def test_pdasc_smoke_build_search():
     res = idx.search(data[:cfg.n_queries], k=cfg.k)
     assert res.ids.shape == (cfg.n_queries, cfg.k)
     assert bool(jnp.isfinite(res.dists[res.ids >= 0]).all())
+    # storage-aware config: the same cell served from the tiered leaf store
+    idx.attach_store(cfg.store, block=cfg.store_block)
+    res2 = idx.search(data[:cfg.n_queries], k=cfg.k, mode="two_stage",
+                      rerank_width=cfg.rerank_width)
+    assert res2.ids.shape == (cfg.n_queries, cfg.k)
