@@ -1,0 +1,221 @@
+"""Online substrate benchmark: interleaved upsert/delete/search workload.
+
+For the reference config (dense_embed, gl=256, euclidean, k=10, beam=32) it
+drives a seeded interleaved churn stream against a mutable PDASC index and
+records, into ``BENCH_online.json``:
+
+  * write throughput (upserts+deletes applied per second, incl. leaf
+    routing),
+  * search QPS under churn (delta merge + tombstone mask in the hot path)
+    vs the frozen baseline QPS,
+  * recall@10 deltas vs a from-scratch rebuild on the final live set:
+    pre-compaction (the delta/tombstone serving state) and post-compaction
+    (epoch swap), plus the compaction wall-time split by scope
+    (affected-groups vs full rebuild) and the payload blocks requantised.
+
+Acceptance bars asserted here (and in ``tests/test_online.py``): deleted
+ids never surface; pre-compaction recall within 0.02 of the fresh rebuild;
+post-compaction result sets identical to exact over the live set.
+
+    PYTHONPATH=src python -m benchmarks.bench_online [--smoke]
+        [--out experiments/online.json] [--bench-out BENCH_online.json]
+
+``--smoke`` runs a tiny config (correctness assertions only, no wall-time
+numbers recorded) so CI catches online-path regressions after the tier-1
+suite, matching ``bench_build --smoke`` / ``bench_store --smoke``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.bench_search import _recall
+from repro.baselines import exact_knn
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+from repro.online import live_dataset
+
+
+def _recall_mapped(res_ids, live_ids, gt):
+    """Recall where ``res_ids`` are rows into the live array."""
+    mapped = np.where(
+        res_ids >= 0, live_ids[np.clip(res_ids, 0, len(live_ids) - 1)], -1
+    )
+    return _recall(mapped, gt)
+
+
+def run(smoke: bool = False, seed: int = 0):
+    if smoke:
+        n, n_queries, gl, n_writes, delta_cap = 1200, 64, 64, 120, 256
+    else:
+        n, n_queries, gl, n_writes, delta_cap = 7800, 512, 256, 1024, 2048
+    k, beam = 10, 32
+    rng = np.random.default_rng(seed)
+    data = make_dataset("dense_embed", n=n + n_queries, seed=seed)
+    train, test = data[:n], data[n:n + n_queries]
+
+    idx = PDASCIndex.build(train, gl=gl, distance="euclidean",
+                           radius_quantile=0.35)
+    idx.enable_mutations(delta_capacity=delta_cap)
+    r = idx.default_radius
+
+    # frozen-baseline search throughput, measured at the same 16-query
+    # micro-batches the churn loop uses (per-dispatch overhead comparable)
+    res = idx.search(test[:16], k=k, mode="beam", beam=beam)  # compile
+    np.asarray(res.ids)
+    t0 = time.perf_counter()
+    for lo in range(0, n_queries, 16):
+        np.asarray(idx.search(test[lo:lo + 16], k=k, mode="beam",
+                              beam=beam).ids)
+    qps_frozen = (n_queries // 16) * 16 / (time.perf_counter() - t0)
+
+    # warm the churn-path executables (masked search + delta scan + merge)
+    # outside the timed loop, then reset the online tiers
+    warm_ids = idx.upsert(train[:1] + 0.01)
+    idx.delete([int(np.asarray(idx.data.leaf_ids)[0])])
+    np.asarray(idx.search(test[:16], k=k, mode="beam", beam=beam).ids)
+    idx.delete(warm_ids)
+
+    # --- interleaved churn stream -------------------------------------------
+    deleted: set[int] = {int(np.asarray(idx.data.leaf_ids)[0])}
+    upserted: list[int] = []
+    n_upserts = 0
+    t_write = 0.0
+    t_search = 0.0
+    searches = 0
+    for i in range(n_writes):
+        t0 = time.perf_counter()
+        if upserted and rng.random() < 0.35:
+            victim = upserted.pop(int(rng.integers(len(upserted))))
+            idx.delete([victim])
+            deleted.add(victim)
+        elif rng.random() < 0.25:
+            victim = int(rng.integers(n))
+            if victim not in deleted:
+                idx.delete([victim])
+                deleted.add(victim)
+        else:
+            v = train[rng.integers(n)] + rng.normal(
+                0, 0.05, train.shape[1]
+            ).astype(np.float32)
+            upserted.extend(int(x) for x in idx.upsert(v[None]))
+            n_upserts += 1
+        t_write += time.perf_counter() - t0
+        if i % 8 == 0:  # interleave searches with the write stream
+            qs = test[rng.integers(0, n_queries, 16)]
+            t0 = time.perf_counter()
+            out = idx.search(qs, k=k, mode="beam", beam=beam)
+            ids = np.asarray(out.ids)
+            t_search += time.perf_counter() - t0
+            searches += 16
+            hit = deleted & set(ids.ravel().tolist())
+            assert not hit, f"deleted ids surfaced under churn: {hit}"
+    writes_per_s = n_writes / t_write
+    qps_churn = searches / t_search if t_search else float("nan")
+
+    # --- recall vs a from-scratch rebuild on the live set -------------------
+    live_vecs, live_ids = live_dataset(idx)
+    _, gt_rows = exact_knn(test, live_vecs, distance="euclidean", k=k)
+    gt = live_ids[np.asarray(gt_rows)]
+    fresh = PDASCIndex.build(live_vecs, gl=gl, distance="euclidean",
+                             radius_quantile=0.35)
+    rec_mut = _recall(np.asarray(idx.search(test, k=k, mode="beam",
+                                            beam=beam, r=r).ids), gt)
+    rec_fresh = _recall_mapped(
+        np.asarray(fresh.search(test, k=k, mode="beam", beam=beam, r=r).ids),
+        live_ids, gt,
+    )
+    pre_delta = rec_fresh - rec_mut
+    assert pre_delta <= 0.02, (
+        f"pre-compaction recall degraded {pre_delta:.4f} > 0.02 vs fresh "
+        f"rebuild ({rec_mut:.4f} vs {rec_fresh:.4f})"
+    )
+
+    # --- compaction: epoch swap + parity ------------------------------------
+    idx.attach_store("int8", block=min(gl, 256))
+    t0 = time.perf_counter()
+    comp = idx.compact(scope="affected")
+    t_affected = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp = idx.compact(scope="affected")  # warm: executables compiled
+    t_affected_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp_full = idx.compact(scope="full")
+    t_full = time.perf_counter() - t0
+    requant = comp.store.last_rebuild if comp.store is not None else None
+    # exact search over the compacted epoch == exact ground truth
+    res_c = np.asarray(comp.search(test, k=k, mode="dense", r=1e9).ids)
+    np.testing.assert_array_equal(np.sort(res_c, axis=1), np.sort(gt, axis=1))
+    rec_comp = _recall(np.asarray(comp.search(test, k=k, mode="beam",
+                                              beam=beam, r=r).ids), gt)
+    rec_comp_full = _recall(
+        np.asarray(comp_full.search(test, k=k, mode="beam", beam=beam,
+                                    r=r).ids), gt,
+    )
+
+    rows = [dict(
+        bench="online", config=dict(
+            dataset="dense_embed", n=n, n_queries=n_queries, gl=gl,
+            distance="euclidean", k=k, beam=beam, n_writes=n_writes,
+            delta_capacity=delta_cap,
+        ),
+        writes_per_s=round(writes_per_s, 1),
+        qps_frozen=round(qps_frozen, 1),
+        qps_churn=round(qps_churn, 1),
+        qps_churn_ratio=round(qps_churn / qps_frozen, 4),
+        n_upserts=n_upserts,
+        n_deletes=len(deleted),
+        recall_fresh=round(rec_fresh, 4),
+        recall_churn=round(rec_mut, 4),
+        recall_delta_pre_compaction=round(pre_delta, 4),
+        recall_post_compaction=round(rec_comp, 4),
+        recall_post_compaction_full=round(rec_comp_full, 4),
+        compact_s_affected=round(t_affected, 3),
+        compact_s_affected_warm=round(t_affected_warm, 3),
+        compact_s_full=round(t_full, 3),
+        payload_blocks_requantized=requant,
+        epoch=comp.epoch,
+    )]
+    print(f"[online] writes/s={writes_per_s:.1f} "
+          f"qps churn/frozen={qps_churn:.1f}/{qps_frozen:.1f} "
+          f"recall churn={rec_mut:.4f} fresh={rec_fresh:.4f} "
+          f"post-compact={rec_comp:.4f} "
+          f"compact {t_affected:.2f}s affected ({t_affected_warm:.2f}s "
+          f"warm) / {t_full:.2f}s full "
+          f"requant={requant}", flush=True)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny config, correctness assertions only (CI)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="experiments/online.json")
+    p.add_argument("--bench-out", default="BENCH_online.json")
+    args = p.parse_args(argv)
+
+    rows = run(smoke=args.smoke, seed=args.seed)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not args.smoke:
+        payload = dict(
+            bench="online_mutability_under_churn",
+            baseline="frozen index + from-scratch rebuild on the live set",
+            new="delta-buffer upserts + tombstoned deletes + epoch-swap "
+                "compaction (affected-groups scope) serving live traffic",
+            rows=rows,
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[online] wrote {args.bench_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,13 @@ class PDASCArchConfig:
     store: str = "int8"
     store_block: int = 1024
     rerank_width: int = 128
+    # Online substrate (DESIGN.md §3.7): delta-buffer capacity for live
+    # upserts, and the epoch-swap compaction triggers — compact when the
+    # delta append cursor passes ``compact_delta_fill`` of capacity or the
+    # tombstone count passes ``compact_tombstone_ratio`` of the residents.
+    delta_capacity: int = 4096
+    compact_delta_fill: float = 0.5
+    compact_tombstone_ratio: float = 0.2
 
     def kernel_config(self) -> KernelConfig:
         return KernelConfig(bm=self.bm, bn=self.bn, bd=self.bd, bq=self.bq,
@@ -60,7 +67,8 @@ def config() -> PDASCArchConfig:
 def smoke_config() -> PDASCArchConfig:
     return PDASCArchConfig(name="pdasc-smoke", n=512, d=8, gl=32,
                            n_queries=16, radius=2.0, bm=32, bn=32, bd=32,
-                           store_block=64, rerank_width=32)
+                           store_block=64, rerank_width=32,
+                           delta_capacity=128)
 
 
 SHAPES = {

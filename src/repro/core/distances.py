@@ -171,9 +171,78 @@ class Distance:
 _REGISTRY: dict[str, Distance] = {}
 
 
-def register(dist: Distance) -> Distance:
-    if dist.name in _REGISTRY:
-        raise ValueError(f"distance {dist.name!r} already registered")
+def _state_eq(a, b) -> bool:
+    """Equality for bound state (partial args, closure cells) that never
+    lies towards True: captured callables compare structurally (re-imports
+    recreate them), array-valued or failing comparisons count as unequal."""
+    if a is b:
+        return True
+    if callable(a) and callable(b):
+        return _fns_match(a, b)
+    try:
+        return bool(a == b)
+    except Exception:
+        return False
+
+
+def _fns_match(f, g) -> bool:
+    """Structural callable identity: same code location and the same bound
+    state — ``functools.partial`` arguments AND closure cell values (two
+    factory-made closures from the same source line differ exactly in what
+    they captured; a captured *function* recurses structurally)."""
+    fb = gb = ()
+    if isinstance(f, functools.partial):
+        fb = f.args + tuple(sorted(f.keywords.items()))
+        f = f.func
+    if isinstance(g, functools.partial):
+        gb = g.args + tuple(sorted(g.keywords.items()))
+        g = g.func
+
+    def _loc(fn):
+        code = getattr(fn, "__code__", None)
+        where = (code.co_filename, code.co_firstlineno) if code else None
+        return (getattr(fn, "__module__", None),
+                getattr(fn, "__qualname__", None), where)
+
+    if _loc(f) != _loc(g):
+        return False
+    fc = tuple(c.cell_contents for c in (getattr(f, "__closure__", None) or ()))
+    gc = tuple(c.cell_contents for c in (getattr(g, "__closure__", None) or ()))
+    state_f, state_g = fb + fc, gb + gc
+    return len(state_f) == len(state_g) and all(
+        _state_eq(x, y) for x, y in zip(state_f, state_g)
+    )
+
+
+def _same_entry(a: Distance, b: Distance) -> bool:
+    """Structural identity for re-registration: same name, same traits, and
+    the point/pairwise callables match structurally (:func:`_fns_match`).
+    Function *objects* differ across module re-imports (fresh notebook
+    kernels, pytest ``--forked``), so object equality is the wrong test."""
+    return (
+        a.name == b.name
+        and (a.gram_form, a.is_metric, a.needs_dim, a.bound)
+        == (b.gram_form, b.is_metric, b.needs_dim, b.bound)
+        and _fns_match(a.point, b.point)
+        and _fns_match(a.pairwise, b.pairwise)
+    )
+
+
+def register(dist: Distance, *, overwrite: bool = False) -> Distance:
+    """Register ``dist`` under its name.
+
+    Re-registering a structurally identical entry is a no-op (module
+    re-import safe); a *different* entry under an existing name raises
+    unless ``overwrite=True`` replaces it explicitly.
+    """
+    prev = _REGISTRY.get(dist.name)
+    if prev is not None and not overwrite:
+        if _same_entry(prev, dist):
+            return prev
+        raise ValueError(
+            f"distance {dist.name!r} already registered with a different "
+            f"definition; pass overwrite=True to replace it"
+        )
     _REGISTRY[dist.name] = dist
     return dist
 

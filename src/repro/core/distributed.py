@@ -43,6 +43,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distances as dist_lib
@@ -229,33 +230,39 @@ def search_sharded(
     leaf_radius_filter: bool = False,
     with_stats: bool = True,
     kernel: Optional[kops.KernelConfig] = None,
+    slot_valid: Optional[Array] = None,
 ) -> nsa.SearchResult:
     """Distributed NSA: per-shard search + global top-k merge.
 
     Queries are replicated over ``db_axes`` (every shard answers against its
     own sub-index); returned ids are *global* dataset rows (shard-offset
     applied). Output is replicated. ``kernel`` (block knobs) reaches the
-    kernel layer through the per-shard search.
+    kernel layer through the per-shard search. ``slot_valid``: optional
+    ``[P, n_leaf_local]`` tombstone mask, sharded like the index — each node
+    masks its own deleted leaf slots before its local rank, so deleted ids
+    never enter the merge (DESIGN.md §3.7; build per-shard masks from global
+    ids with :func:`route_writes` + :func:`local_slot_valid`).
     """
     dist = dist_lib.get(dist)
 
     # Per-shard leaf slot count -> global row offset per shard.
     n_leaf_local = sharded_index.leaf_ids.shape[1]
 
-    def body(index_stacked, Qr):
+    def body(index_stacked, Qr, *sv):
         index = jax.tree.map(lambda a: a[0], index_stacked)
+        sv_local = sv[0][0] if sv else None
         shard = _shard_index(db_axes)
         if mode == "dense":
             res = nsa.search_dense(
                 index, Qr, dist=dist, k=k, r=r,
                 leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
-                kernel=kernel,
+                kernel=kernel, slot_valid=sv_local,
             )
         else:
             res = nsa.search_beam(
                 index, Qr, dist=dist, k=k, r=r, beam=beam,
                 max_children=max_children, leaf_radius_filter=leaf_radius_filter,
-                kernel=kernel,
+                kernel=kernel, slot_valid=sv_local,
             )
         # leaf_ids are local rows of this shard's slice; lift to global rows.
         # NOTE: the shard's local shuffle permutes only within the shard, so
@@ -266,15 +273,19 @@ def search_sharded(
         nc = jax.lax.psum(res.n_candidates, tuple(db_axes))
         return nsa.SearchResult(dists=d_m, ids=i_m, n_candidates=nc)
 
-    in_specs = (
+    in_specs = [
         jax.tree.map(lambda _: P(tuple(db_axes)), sharded_index),
         P(),  # queries replicated
-    )
+    ]
+    args = [sharded_index, jnp.asarray(Q)]
+    if slot_valid is not None:
+        in_specs.append(P(tuple(db_axes)))  # mask sharded like the index
+        args.append(jnp.asarray(slot_valid))
     out_specs = nsa.SearchResult(dists=P(), ids=P(), n_candidates=P())
-    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
+    fn = shard_map(body, mesh, in_specs=tuple(in_specs), out_specs=out_specs)
     # keep the caller's dtype: bf16 queries + bf16 index points -> bf16
     # distance math (the §Perf H3 memory-halving path)
-    return fn(sharded_index, jnp.asarray(Q))
+    return fn(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +336,7 @@ def scan_quantized_sharded(
     block: int,
     merge: str = "butterfly",
     kernel: Optional[kops.KernelConfig] = None,
+    slot_valid: Optional[Array] = None,
 ):
     """Distributed stage-1 scan: each node scans the candidates it owns.
 
@@ -333,32 +345,86 @@ def scan_quantized_sharded(
     range, scans its local codes, and the per-shard top-k merge with the
     same collectives as the search path. Returns ``(dists [B, k],
     slots [B, k])`` replicated, ``slots`` being *global* leaf rows (-1 for
-    missing) — the input of the exact rerank fetch.
+    missing) — the input of the exact rerank fetch. ``slot_valid``:
+    optional ``[P, per]`` tombstone mask sharded with the codes — each node
+    drops its own deleted rows before the scan.
     """
     kernel = kernel or kops.DEFAULT
     per = codes.shape[1]
 
-    def body(codes_l, scales_l, Qr, ci, ok):
+    def body(codes_l, scales_l, Qr, ci, ok, *sv):
         shard = _shard_index(db_axes)
         lo = shard * jnp.int32(per)
         local_ok = ok & (ci >= lo) & (ci < lo + per)
         ci_local = jnp.clip(ci - lo, 0, per - 1)
         d, slot = kops.scan_quantized(
             Qr, codes_l[0], scales_l[0], ci_local, local_ok, distance,
-            k=k, block=block, bq=kernel.bq, bn=kernel.bn,
+            k=k, block=block, slot_valid=sv[0][0] if sv else None,
+            bq=kernel.bq, bn=kernel.bn,
             force_pallas=kernel.force_pallas,
         )
         gslots = jnp.take_along_axis(ci, slot, axis=1)
         gslots = jnp.where(d < kref.BIG / 2, gslots, -1)
         return topk_merge(d, gslots, tuple(db_axes), k, method=merge)
 
+    in_specs = [P(tuple(db_axes)), P(tuple(db_axes)), P(), P(), P()]
+    args = [codes, scales, jnp.asarray(Q, jnp.float32), cand_idx, cand_ok]
+    if slot_valid is not None:
+        in_specs.append(P(tuple(db_axes)))
+        args.append(jnp.asarray(slot_valid))
     fn = shard_map(
         body,
         mesh,
-        in_specs=(P(tuple(db_axes)), P(tuple(db_axes)), P(), P(), P()),
+        in_specs=tuple(in_specs),
         out_specs=(P(), P()),
     )
-    return fn(codes, scales, jnp.asarray(Q, jnp.float32), cand_idx, cand_ok)
+    return fn(*args)
+
+
+# ---------------------------------------------------------------------------
+# Shard-by-id write routing (online substrate, DESIGN.md §3.7)
+# ---------------------------------------------------------------------------
+
+
+def route_writes(ids, n_shards: int, per_shard_n: int):
+    """Route global dataset rows to the shard that owns them.
+
+    The sharded deployment assigns row ranges: shard ``p`` owns global rows
+    ``[p*per_shard_n, (p+1)*per_shard_n)`` — the same mapping
+    :func:`search_sharded` uses to lift local ids to global ones, so writes
+    (upserts / deletes by id) land on the node whose sub-index and payload
+    slice hold the row. Returns ``[(shard, local_rows int64[m_p]), ...]``
+    for the shards that receive at least one write (host-side: write routing
+    is control plane, not a collective).
+    """
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    if ids.size and (ids.min() < 0 or ids.max() >= n_shards * per_shard_n):
+        raise ValueError(
+            f"write ids out of range [0, {n_shards * per_shard_n}) for "
+            f"{n_shards} shards x {per_shard_n} rows"
+        )
+    shard = ids // per_shard_n
+    return [
+        (int(s), ids[shard == s] - int(s) * per_shard_n)
+        for s in range(n_shards)
+        if bool(np.any(shard == s))
+    ]
+
+
+def local_slot_valid(leaf_ids_local, deleted_local_rows):
+    """Per-shard tombstone mask from locally-routed deleted rows.
+
+    ``leaf_ids_local``: int32[n_0] — the shard's leaf-slot -> local-row map
+    (one row of the stacked ``sharded_index.leaf_ids``).
+    ``deleted_local_rows``: the shard's entry from :func:`route_writes`.
+    Returns bool[n_0] (True = live) for ``search_sharded(slot_valid=...)``.
+    """
+    leaf_ids_local = np.asarray(leaf_ids_local)
+    dead = np.zeros(int(leaf_ids_local.max(initial=0)) + 1, bool)
+    rows = np.asarray(deleted_local_rows, np.int64)
+    dead[rows[rows <= leaf_ids_local.max(initial=0)]] = True
+    ok = ~dead[np.clip(leaf_ids_local, 0, dead.shape[0] - 1)]
+    return ok | (leaf_ids_local < 0)  # padding slots stay "live" (invalid anyway)
 
 
 # ---------------------------------------------------------------------------

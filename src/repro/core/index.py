@@ -1,8 +1,8 @@
 """PDASCIndex — the user-facing index API.
 
 Wraps MSA build, NSA search (dense / beam / two-stage), radius estimation,
-the tiered leaf store and save / load. This is the object the examples,
-benchmarks and the serving engine hold.
+the tiered leaf store, the online mutability substrate and save / load.
+This is the object the examples, benchmarks and the serving engine hold.
 
     idx = PDASCIndex.build(data, gl=1000, distance="cosine")
     res = idx.search(queries, k=10, r=idx.default_radius)
@@ -11,6 +11,12 @@ benchmarks and the serving engine hold.
     idx = PDASCIndex.build(data, gl=1000, distance="cosine", store="int8")
     res = idx.search(queries, k=10, mode="two_stage", rerank_width=128)
     idx.memory_bytes()   # per-tier (navigation vs payload) accounting
+
+    # online mutability (DESIGN.md §3.7): delta-buffer upserts, tombstoned
+    # deletes, epoch-swap compaction — the frozen hot path stays frozen
+    ids = idx.upsert(new_vectors)        # visible to the next search
+    idx.delete(ids[:3])                  # vanishes from every search mode
+    idx = idx.compact()                  # new epoch: tiers folded back in
 """
 
 from __future__ import annotations
@@ -27,14 +33,43 @@ import numpy as np
 
 from repro.core import distances as dist_lib
 from repro.core import msa, nsa, radius as radius_lib
+from repro.core.distances import BIG
 from repro.kernels import ops as kops
+from repro.online import compact as compact_lib
+from repro.online import delta as delta_lib
+from repro.online import tombstones as tomb_lib
 from repro.store import leaf_store as store_lib
 from repro.store import two_stage as two_stage_lib
 
 Array = jax.Array
 
 _FORMAT_VERSION = 2  # v2: tiered leaf store (payload codes + scales)
-_SUPPORTED_VERSIONS = (1, 2)  # v1 artifacts load with a dense fp32 payload
+_MUTABLE_VERSION = 3  # v3: v2 + online tiers (delta buffer, tombstones)
+_SUPPORTED_VERSIONS = (1, 2, 3)  # v1 artifacts load with a dense fp32 payload
+
+DEFAULT_DELTA_CAPACITY = 4096
+
+
+def _validate_points(x, dist: dist_lib.Distance, *, what: str) -> np.ndarray:
+    """Shape / dimensionality / finiteness validation shared by build and
+    upsert: ``needs_dim`` distances (e.g. haversine, d == 2) reject wrong
+    widths up front, and non-finite rows fail loudly instead of silently
+    poisoning every distance they touch."""
+    x = np.asarray(x, np.float32)
+    if x.ndim != 2:
+        raise ValueError(f"{what} input must be [n, d], got shape {x.shape}")
+    if dist.needs_dim is not None and x.shape[1] != dist.needs_dim:
+        raise ValueError(
+            f"distance {dist.name!r} needs d={dist.needs_dim} inputs, got "
+            f"d={x.shape[1]} at {what} time"
+        )
+    if not np.isfinite(x).all():
+        bad = int((~np.isfinite(x).all(axis=1)).sum())
+        raise ValueError(
+            f"{what} input contains non-finite values ({bad} rows with "
+            f"NaN/inf); clean the data before indexing"
+        )
+    return x
 
 
 @dataclasses.dataclass
@@ -49,7 +84,15 @@ class PDASCIndex:
     # Payload tier (DESIGN.md §3.6). None = the seed path: leaf vectors stay
     # a dense fp32 device array inside ``data.levels[0]``.
     store: Optional[store_lib.LeafStore] = None
+    # Online tiers (DESIGN.md §3.7). None until the first upsert/delete (or
+    # enable_mutations); compaction folds them back and resets them.
+    delta: Optional[delta_lib.DeltaBuffer] = None
+    tombstones: Optional[tomb_lib.TombstoneSet] = None
+    epoch: int = 0
     _payload_released: bool = dataclasses.field(default=False, repr=False)
+    # sorted (ids, slots) arrays for the id -> live-slot lookup (lazy)
+    _id_slot: Optional[tuple] = dataclasses.field(default=None, repr=False)
+    _next_id: Optional[int] = dataclasses.field(default=None, repr=False)
 
     # -- construction --------------------------------------------------------
 
@@ -79,6 +122,7 @@ class PDASCIndex:
         (:meth:`attach_store`); ``store_path`` puts the exact fp32 payload on
         disk (memmap) instead of host memory."""
         dist = dist_lib.get(distance)
+        dataset = _validate_points(dataset, dist, what="build")
         k_protos = n_prototypes or gl // 2
         data, stats = msa.build_index(
             dataset,
@@ -157,6 +201,192 @@ class PDASCIndex:
         )
         self._payload_released = True
 
+    # -- online mutability (DESIGN.md §3.7) -----------------------------------
+
+    def enable_mutations(
+        self, *, delta_capacity: int = DEFAULT_DELTA_CAPACITY
+    ) -> None:
+        """Attach the online tiers (delta buffer + tombstones). Implicit on
+        the first :meth:`upsert` / :meth:`delete`; call explicitly to pick
+        the delta capacity. Mutation methods are not thread-safe against
+        concurrent searches on the same object — the serving engine
+        serialises writes between batches (``online.EpochHandle``)."""
+        d = self._dim()
+        if self.delta is None:
+            self.delta = delta_lib.DeltaBuffer(delta_capacity, d)
+        if self.tombstones is None:
+            self.tombstones = tomb_lib.TombstoneSet(
+                self.data.levels[0].points.shape[0]
+            )
+
+    def _dim(self) -> int:
+        if self.store is not None:
+            return self.store.d
+        lv = self.data.levels
+        return lv[-1].points.shape[1] if len(lv) > 1 else lv[0].points.shape[1]
+
+    def _slots_for_ids(self, ids) -> np.ndarray:
+        """Vectorized id -> leaf slot (-1 when not a live resident).
+
+        The lazy lookup table is a pair of sorted arrays (ids, slots) —
+        O(n log n) once, then O(m log n) per batch via ``searchsorted``;
+        a Python dict at this size would cost ~100 bytes/entry and a
+        multi-second build pause on multi-million-point indexes."""
+        if self._id_slot is None:
+            leaf_ids = np.asarray(self.data.leaf_ids)
+            valid = np.asarray(self.data.levels[0].valid)
+            live = valid & (leaf_ids >= 0)
+            slots = np.nonzero(live)[0].astype(np.int64)
+            keys = leaf_ids[live].astype(np.int64)
+            order = np.argsort(keys)
+            self._id_slot = (keys[order], slots[order])
+        keys, slots = self._id_slot
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if keys.size == 0:
+            return np.full(ids.shape, -1, np.int64)
+        pos = np.clip(np.searchsorted(keys, ids), 0, keys.size - 1)
+        return np.where(keys[pos] == ids, slots[pos], -1)
+
+    def _route_to_leaf(
+        self, V: np.ndarray, kernel: Optional[kops.KernelConfig] = None
+    ) -> np.ndarray:
+        """Nearest leaf slot per row via the jitted beam descent at beam=1
+        (+ one fused k=1 rank) — the insert-time routing that tells
+        compaction each arrival's destination group."""
+        kernel = kernel or kops.DEFAULT
+        Qb = jnp.asarray(V, jnp.float32)
+        cand_idx, cand_ok = nsa.descend_beam(
+            self.data, Qb, dist=self.distance, r=float("inf"), beam=1,
+            max_children=self.max_children, kernel=kernel,
+        )
+        if not self._payload_released:
+            leaf = self.data.levels[0]
+            d, slot = kops.rank_gathered(
+                Qb, leaf.points, leaf.sq_norm, cand_idx, cand_ok,
+                self.distance, k=1, bq=kernel.bq, bn=kernel.bn,
+                force_pallas=kernel.force_pallas,
+            )
+        else:  # payload released: route against the quantised codes
+            d, slot = kops.scan_quantized(
+                Qb, self.store.codes, self.store.scales, cand_idx, cand_ok,
+                self.distance, k=1, block=self.store.block,
+                bq=kernel.bq, bn=kernel.bn,
+                force_pallas=kernel.force_pallas,
+            )
+        slots = np.asarray(jnp.take_along_axis(cand_idx, slot, axis=1)[:, 0])
+        found = np.asarray(d[:, 0]) < BIG / 2
+        return np.where(found, slots, 0).astype(np.int32)
+
+    def upsert(self, vectors, ids=None, *,
+               kernel: Optional[kops.KernelConfig] = None) -> np.ndarray:
+        """Insert (or replace) points; visible to the very next search.
+
+        ``ids``: optional int ids. Omitted -> fresh ids above every id the
+        index has seen. An existing id is *replaced*: its old occurrence
+        (resident slot or earlier delta entry) is tombstoned / deactivated
+        and the new vector appended. Returns the assigned ids. Raises when
+        the delta buffer cannot hold the batch — compact first (the serving
+        handle does this automatically).
+        """
+        if self.delta is None:
+            self.enable_mutations()
+        V = np.atleast_2d(np.asarray(vectors, np.float32))
+        V = _validate_points(V, self.distance, what="upsert")
+        m = V.shape[0]
+        if ids is None:
+            ids = self._fresh_ids(m)
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        if ids.shape[0] != m:
+            raise ValueError(f"{m} vectors but {ids.shape[0]} ids")
+        if np.unique(ids).shape[0] != m:
+            raise ValueError("duplicate ids within one upsert batch")
+        if self.delta.free < m:
+            raise RuntimeError(
+                f"delta buffer full ({self.delta.size}/{self.delta.capacity}"
+                f" used, {m} requested); call compact() to fold it in"
+            )
+        # replace semantics: retire any older occurrence of these ids
+        self.delta.deactivate_ids(ids)
+        stale = self._slots_for_ids(ids)
+        stale = stale[stale >= 0]
+        if stale.size:
+            self.tombstones.add(stale)
+        slots = self._route_to_leaf(V, kernel)
+        self.delta.append(V, ids, slots)
+        self._bump_next_id(ids)
+        return ids
+
+    def delete(self, ids) -> int:
+        """Delete by id: flips tombstone bits / deactivates delta entries —
+        the index arrays stay frozen. Returns the number of live points
+        removed (unknown ids are ignored, not an error)."""
+        if self.delta is None:
+            self.enable_mutations()
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        n = self.delta.deactivate_ids(ids)
+        slots = self._slots_for_ids(ids)
+        slots = slots[slots >= 0]
+        if slots.size:
+            n += self.tombstones.add(slots)
+        return n
+
+    def _seen_id_ceiling(self) -> int:
+        """One above every id this index has ever seen — including ids whose
+        points were deleted or whose delta entries were deactivated, so a
+        freed id is never re-issued (compaction and save/load carry this)."""
+        if self._next_id is not None:
+            return self._next_id
+        hi = int(np.asarray(self.data.leaf_ids).max(initial=-1))
+        if self.delta is not None and self.delta.size:
+            hi = max(hi, int(self.delta.ids[: self.delta.size].max()))
+        return hi + 1
+
+    def _fresh_ids(self, m: int) -> np.ndarray:
+        self._next_id = self._seen_id_ceiling()
+        out = np.arange(self._next_id, self._next_id + m, dtype=np.int32)
+        self._next_id += m
+        return out
+
+    def _bump_next_id(self, ids: np.ndarray) -> None:
+        if self._next_id is not None and ids.size:
+            self._next_id = max(self._next_id, int(ids.max()) + 1)
+
+    def needs_compaction(
+        self, *, delta_fill: float = 0.5, tombstone_ratio: float = 0.2
+    ) -> bool:
+        """Compaction trigger: delta append cursor past ``delta_fill`` of
+        capacity, or tombstones past ``tombstone_ratio`` of the resident
+        population."""
+        if self.delta is not None and self.delta.fill_ratio() >= delta_fill:
+            return True
+        if self.tombstones is not None and self.tombstones.count:
+            # resident count is frozen per epoch — stats.level_sizes[0]
+            # (set at build / compaction / load) avoids an O(n) device
+            # readback on every write batch
+            return (self.tombstones.ratio(self.stats.level_sizes[0])
+                    >= tombstone_ratio)
+        return False
+
+    def compact(self, *, scope: str = "affected", **kwargs) -> "PDASCIndex":
+        """Fold the online tiers into a fresh epoch (``online.compact``).
+
+        Never mutates ``self`` — returns a new index with ``epoch + 1``,
+        empty tiers (same delta capacity) and a (partially) re-quantised
+        payload store. Read-copy-update: keep serving the old epoch until
+        the swap."""
+        new = compact_lib.compact_index(self, scope=scope, **kwargs)
+        new.enable_mutations(
+            delta_capacity=self.delta.capacity
+            if self.delta is not None else DEFAULT_DELTA_CAPACITY
+        )
+        return new
+
+    def _online_dirty(self) -> bool:
+        return bool(
+            (self.delta is not None and self.delta.n_active)
+            or (self.tombstones is not None and self.tombstones.count)
+        )
+
     # -- search ---------------------------------------------------------------
 
     def search(
@@ -175,19 +405,31 @@ class PDASCIndex:
         (faithful), "two_stage" (tiered store: quantised scan -> exact
         rerank over the top-``rerank_width``; None = ∞, bit-identical to
         "beam") or "beam_vmap" (the seed per-query baseline, kept for
-        benchmarking). ``kernel`` carries the kernel-layer block knobs."""
+        benchmarking). ``kernel`` carries the kernel-layer block knobs.
+
+        With online tiers attached (DESIGN.md §3.7) every mode threads the
+        tombstone mask into its leaf ranking (deleted ids never appear) and
+        merges the delta buffer's exact scan into the result.
+        """
         Q = jnp.asarray(queries, jnp.float32)
         r = float(r) if r is not None else self.default_radius
+        squeeze = Q.ndim == 1
+        Qb = Q[None, :] if squeeze else Q
+        slot_valid = (
+            self.tombstones.valid_mask()
+            if self.tombstones is not None and self.tombstones.count
+            else None
+        )
         if mode == "two_stage":
             if self.store is None:
                 raise ValueError(
                     "mode='two_stage' needs a leaf store: build with "
                     "store='int8' or call attach_store()"
                 )
-            return two_stage_lib.search_two_stage(
+            res = two_stage_lib.search_two_stage(
                 self.data,
                 self.store,
-                Q,
+                Qb,
                 dist=self.distance,
                 k=k,
                 r=r,
@@ -196,46 +438,79 @@ class PDASCIndex:
                 rerank_width=rerank_width,
                 leaf_radius_filter=leaf_radius_filter,
                 kernel=kernel,
+                slot_valid=slot_valid,
             )
-        if self._payload_released:
-            raise ValueError(
-                f"mode={mode!r} needs the dense leaf payload, which was "
-                "released (release_dense_payload); use mode='two_stage'"
+        elif mode in ("dense", "beam", "beam_vmap"):
+            if self._payload_released:
+                raise ValueError(
+                    f"mode={mode!r} needs the dense leaf payload, which was "
+                    "released (release_dense_payload); use mode='two_stage'"
+                )
+            if mode == "dense":
+                res = nsa.search_dense(
+                    self.data,
+                    Qb,
+                    dist=self.distance,
+                    k=k,
+                    r=r,
+                    leaf_radius_filter=leaf_radius_filter,
+                    kernel=kernel,
+                    slot_valid=slot_valid,
+                )
+            elif mode == "beam":
+                res = nsa.search_beam(
+                    self.data,
+                    Qb,
+                    dist=self.distance,
+                    k=k,
+                    r=r,
+                    beam=beam,
+                    max_children=self.max_children,
+                    leaf_radius_filter=leaf_radius_filter,
+                    kernel=kernel,
+                    slot_valid=slot_valid,
+                )
+            else:  # beam_vmap: the frozen seed baseline
+                if self._online_dirty():
+                    raise ValueError(
+                        "mode='beam_vmap' (the seed benchmark baseline) does"
+                        " not support the online tiers; use 'beam'/'dense'/"
+                        "'two_stage' or compact() first"
+                    )
+                res = nsa.search_beam_vmap(
+                    self.data,
+                    Qb,
+                    dist=self.distance,
+                    k=k,
+                    r=r,
+                    beam=beam,
+                    max_children=self.max_children,
+                    leaf_radius_filter=leaf_radius_filter,
+                )
+        else:
+            raise ValueError(f"unknown search mode {mode!r}")
+
+        if self.delta is not None and self.delta.n_active:
+            scan = self.delta.scan(Qb, self.distance, k=k, kernel=kernel)
+            sd, si = scan.dists, scan.ids
+            if leaf_radius_filter:
+                # same leaf radius rule the resident ranking applies, so a
+                # point filters identically whether it is buffered or (post
+                # compaction) resident
+                keep = sd < r
+                sd = jnp.where(keep, sd, BIG)
+                si = jnp.where(keep, si, -1)
+            d_m, i_m = delta_lib.merge_topk(
+                res.dists, res.ids, sd, si, k
             )
-        if mode == "dense":
-            return nsa.search_dense(
-                self.data,
-                Q,
-                dist=self.distance,
-                k=k,
-                r=r,
-                leaf_radius_filter=leaf_radius_filter,
-                kernel=kernel,
+            res = nsa.SearchResult(
+                dists=d_m, ids=i_m,
+                n_candidates=res.n_candidates
+                + jnp.int32(self.delta.n_active),
             )
-        if mode == "beam":
-            return nsa.search_beam(
-                self.data,
-                Q,
-                dist=self.distance,
-                k=k,
-                r=r,
-                beam=beam,
-                max_children=self.max_children,
-                leaf_radius_filter=leaf_radius_filter,
-                kernel=kernel,
-            )
-        if mode == "beam_vmap":
-            return nsa.search_beam_vmap(
-                self.data,
-                Q,
-                dist=self.distance,
-                k=k,
-                r=r,
-                beam=beam,
-                max_children=self.max_children,
-                leaf_radius_filter=leaf_radius_filter,
-            )
-        raise ValueError(f"unknown search mode {mode!r}")
+        if squeeze:
+            res = jax.tree.map(lambda a: a[0], res)
+        return res
 
     def per_level_radii(self, *, quantile: float = 0.5) -> tuple[float, ...]:
         return radius_lib.per_level_radii(
@@ -251,10 +526,16 @@ class PDASCIndex:
 
     @property
     def n_points(self) -> int:
-        return int(np.asarray(self.data.levels[0].valid).sum())
+        """Live point count: resident − tombstoned + active delta."""
+        n = int(np.asarray(self.data.levels[0].valid).sum())
+        if self.tombstones is not None:
+            n -= self.tombstones.count
+        if self.delta is not None:
+            n += self.delta.n_active
+        return n
 
     def memory_bytes(self) -> dict:
-        """Per-tier resident-memory accounting (DESIGN.md §3.6).
+        """Per-tier resident-memory accounting (DESIGN.md §3.6/§3.7).
 
         ``navigation``: the prototype levels 1..L plus the leaf bookkeeping
         arrays (valid / parent / child / sq_norm / leaf_ids) — always
@@ -262,7 +543,10 @@ class PDASCIndex:
         dense fp32 array on the seed path, the quantised codes + scales once
         a store is attached (both until :meth:`release_dense_payload` drops
         the dense copy). ``out_of_core``: exact fp32 payload bytes living on
-        host / disk (0 without a quantised store).
+        host / disk (0 without a quantised store). ``delta`` /
+        ``tombstones``: the online tiers (0 until mutations are enabled) —
+        the delta is a fixed ``capacity x d`` fp32 buffer + bookkeeping, the
+        tombstones 1 bit per leaf slot.
         """
         nav = 0
         for lv in self.data.levels[1:]:
@@ -276,26 +560,36 @@ class PDASCIndex:
         if self.store is not None and self.store.backend != "fp32":
             payload += self.store.resident_bytes
             out_of_core = self.store.out_of_core_bytes
+        delta_b = self.delta.nbytes if self.delta is not None else 0
+        tomb_b = self.tombstones.nbytes if self.tombstones is not None else 0
         n = max(self.n_points, 1)
+        total = nav + payload + delta_b + tomb_b
         return dict(
             navigation=int(nav),
             payload=int(payload),
             out_of_core=int(out_of_core),
-            total_resident=int(nav + payload),
+            delta=int(delta_b),
+            tombstones=int(tomb_b),
+            total_resident=int(total),
             payload_bytes_per_vector=round(payload / n, 2),
-            total_bytes_per_vector=round((nav + payload) / n, 2),
+            total_bytes_per_vector=round(total / n, 2),
         )
 
     def describe(self) -> str:
         lines = [
             f"PDASCIndex(distance={self.distance.name}, gl={self.gl}, "
-            f"nPrototypes={self.n_prototypes}, levels={self.n_levels})"
+            f"nPrototypes={self.n_prototypes}, levels={self.n_levels}, "
+            f"epoch={self.epoch})"
         ]
         for l, (size, td) in enumerate(
             zip(self.stats.level_sizes, self.stats.level_td)
         ):
             slots = self.data.levels[l].points.shape[0]
             lines.append(f"  level {l}: {size} valid / {slots} slots, TD={td:.4g}")
+        if self.delta is not None or self.tombstones is not None:
+            nd = self.delta.n_active if self.delta is not None else 0
+            nt = self.tombstones.count if self.tombstones is not None else 0
+            lines.append(f"  online: {nd} delta, {nt} tombstoned")
         return "\n".join(lines)
 
     # -- persistence ----------------------------------------------------------
@@ -306,7 +600,14 @@ class PDASCIndex:
         Format v2: a quantised store saves its codes / scales alongside the
         levels; the exact fp32 payload is always saved as ``level0_points``
         (restored from the out-of-core source if the dense copy was
-        released), so every artifact reloads self-contained.
+        released), so every artifact reloads self-contained. Format v3
+        (written only when online tiers are attached) additionally persists
+        the delta buffer and the tombstone bitmap, so a loaded index resumes
+        with the same live point set mid-epoch.
+
+        Distances persist by *name*: ad-hoc ``Distance`` objects (e.g.
+        ``distances.minkowski(p)``) must be registered first or save()
+        refuses — a clear error now beats a pickle surprise at load time.
 
         Note the residency consequence: saving streams the whole exact
         payload through host memory, and a loaded index starts with the
@@ -314,6 +615,28 @@ class PDASCIndex:
         after a load, re-attach a memmapped store and release:
         ``idx.attach_store("int8", path=...); idx.release_dense_payload()``.
         """
+        try:
+            registered = dist_lib.get(self.distance.name)
+        except KeyError:
+            registered = None
+        if registered is None:
+            raise ValueError(
+                f"distance {self.distance.name!r} is not in the registry; "
+                f"save() persists distances by name only. Register it first "
+                f"(repro.core.distances.register) — ad-hoc instances like "
+                f"distances.minkowski(p) cannot round-trip otherwise."
+            )
+        if registered is not self.distance and not dist_lib._same_entry(
+            registered, self.distance
+        ):
+            # name collision: load() would silently bind the registry's
+            # entry, changing distance semantics — refuse up front
+            raise ValueError(
+                f"this index's distance {self.distance.name!r} differs from "
+                f"the registry entry of the same name; save() would "
+                f"round-trip to the registered one. Register the index's "
+                f"distance under a distinct name (or overwrite=True) first."
+            )
         arrays = {"leaf_ids": np.asarray(self.data.leaf_ids)}
         for l, lv in enumerate(self.data.levels):
             for field in lv._fields:
@@ -327,8 +650,26 @@ class PDASCIndex:
             if self.store.backend != "fp32":
                 arrays["store_codes"] = np.asarray(self.store.codes)
                 arrays["store_scales"] = np.asarray(self.store.scales)
+        mutable_meta = None
+        version = _FORMAT_VERSION
+        if self.delta is not None or self.tombstones is not None:
+            version = _MUTABLE_VERSION
+            delta = self.delta
+            mutable_meta = dict(
+                delta_capacity=delta.capacity if delta is not None else
+                DEFAULT_DELTA_CAPACITY,
+                delta_size=delta.size if delta is not None else 0,
+                next_id=self._seen_id_ceiling(),
+            )
+            if delta is not None:
+                arrays["delta_vectors"] = delta.vectors[: delta.size]
+                arrays["delta_ids"] = delta.ids[: delta.size]
+                arrays["delta_slots"] = delta.leaf_slot[: delta.size]
+                arrays["delta_active"] = delta.active[: delta.size]
+            if self.tombstones is not None:
+                arrays["tombstone_bits"] = self.tombstones.bits
         meta = dict(
-            version=_FORMAT_VERSION,
+            version=version,
             distance=self.distance.name,
             gl=self.gl,
             n_prototypes=self.n_prototypes,
@@ -338,6 +679,8 @@ class PDASCIndex:
             level_sizes=list(self.stats.level_sizes),
             level_td=list(self.stats.level_td),
             store=store_meta,
+            epoch=self.epoch,
+            mutable=mutable_meta,
         )
         d = os.path.dirname(os.path.abspath(path)) or "."
         os.makedirs(d, exist_ok=True)
@@ -362,7 +705,7 @@ class PDASCIndex:
                 f"unsupported index format version {version!r} in "
                 f"{path + '.json'}; this build reads versions "
                 f"{_SUPPORTED_VERSIONS} (1 = dense fp32 payload, 2 = tiered "
-                f"leaf store)"
+                f"leaf store, 3 = + online tiers)"
             )
         z = np.load(path + ".npz")
         levels = []
@@ -392,6 +735,7 @@ class PDASCIndex:
             n_prototypes=meta["n_prototypes"],
             max_children=tuple(meta["max_children"]),
             default_radius=meta["default_radius"],
+            epoch=int(meta.get("epoch", 0)),
         )
         # v1 artifacts carry no store: the payload tier defaults to the
         # dense fp32 leaf array already loaded above.
@@ -409,4 +753,27 @@ class PDASCIndex:
                 backend=store_meta["backend"], block=store_meta["block"],
                 codes=codes, scales=scales, exact=exact,
             )
+        mut = meta.get("mutable")
+        if mut is not None:
+            size = int(mut["delta_size"])
+            delta = delta_lib.DeltaBuffer(int(mut["delta_capacity"]),
+                                          idx._dim())
+            if size:
+                delta.vectors[:size] = np.asarray(z["delta_vectors"])
+                delta.ids[:size] = np.asarray(z["delta_ids"])
+                delta.leaf_slot[:size] = np.asarray(z["delta_slots"])
+                delta.active[:size] = np.asarray(z["delta_active"])
+                delta.size = size
+            idx.delta = delta
+            if mut.get("next_id") is not None:
+                idx._next_id = int(mut["next_id"])
+            if "tombstone_bits" in z:
+                idx.tombstones = tomb_lib.TombstoneSet(
+                    data.levels[0].points.shape[0],
+                    bits=np.asarray(z["tombstone_bits"]),
+                )
+            else:
+                idx.tombstones = tomb_lib.TombstoneSet(
+                    data.levels[0].points.shape[0]
+                )
         return idx

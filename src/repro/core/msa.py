@@ -318,6 +318,127 @@ def n_levels_for(n: int, gl: int, k: Optional[int] = None) -> int:
             return levels
 
 
+def _cluster_levels(
+    points: Array,
+    valid: Array,
+    carry_a: Array,
+    carry_b: Array,
+    key: Array,
+    *,
+    dist: dist_lib.Distance,
+    gl: int,
+    k: int,
+    method: str,
+    max_swaps: int,
+    swap_tol: float,
+    row_chunk: int,
+    group_chunk: int,
+    bg: int,
+    force_pallas: bool,
+    prev_levels: Optional[list] = None,
+):
+    """Bottom-up level loop shared by the from-scratch build and the online
+    compaction (``repro.online.compact``, DESIGN.md §3.7).
+
+    Clusters the given items into groups of ``gl`` repeatedly until one
+    group remains. ``prev_levels`` (final-layout level dicts, leaf first)
+    seeds the loop with already-built lower levels: the first clustered
+    level is then an *upper* level — its items are medoids carrying
+    child_start / child_count in carry_a / carry_b — and its reorder remap
+    fixes ``prev_levels[-1]``'s parent pointers, exactly as every later
+    level fixes its predecessor. Compaction uses this to re-cluster only
+    affected leaf groups and let the standard loop regrow the (much
+    smaller) hierarchy above them.
+
+    Returns ``(raw_levels, level_td, top)`` — the final-layout level dicts
+    (including ``prev_levels``), one TD scalar per level clustered here, and
+    the never-clustered top level dict.
+    """
+    raw_levels: list[dict] = list(prev_levels) if prev_levels else []
+    first_is_leaf = not raw_levels
+    level_td: list[Array] = []
+    next_cs = next_cc = None  # child_start/count travelling with items
+    if not first_is_leaf:
+        next_cs, next_cc = carry_a, carry_b
+
+    while True:
+        G = -(-points.shape[0] // gl)
+        key, sub = jax.random.split(key)
+        level_arrays, next_arrays, remap, td = _build_level(
+            points,
+            valid,
+            carry_a,
+            carry_b,
+            sub,
+            dist=dist,
+            gl=gl,
+            k=k,
+            method=method,
+            max_swaps=max_swaps,
+            swap_tol=swap_tol,
+            row_chunk=row_chunk,
+            group_chunk=group_chunk,
+            bg=bg,
+            force_pallas=force_pallas,
+        )
+        # Fix the lower level's parent pointers through this level's reorder.
+        if raw_levels:
+            prev = raw_levels[-1]
+            p = prev["parent"]
+            prev["parent"] = jnp.where(
+                p >= 0, remap[jnp.clip(p, 0, remap.shape[0] - 1)], -1
+            )
+        if next_cs is None:  # leaf level: ids in carry_a, no children
+            level_arrays["child_start"] = jnp.full_like(level_arrays["carry_a"], -1)
+            level_arrays["child_count"] = jnp.zeros_like(level_arrays["carry_a"])
+            level_arrays["leaf_ids"] = level_arrays["carry_a"]
+        else:
+            level_arrays["child_start"] = level_arrays["carry_a"]
+            level_arrays["child_count"] = level_arrays["carry_b"]
+        raw_levels.append(level_arrays)
+        level_td.append(td)
+
+        points = next_arrays["points"]
+        valid = next_arrays["valid"]
+        carry_a = next_arrays["child_start"]
+        carry_b = next_arrays["child_count"]
+        next_cs, next_cc = carry_a, carry_b
+        if G == 1:
+            break
+
+    # Top level: the medoids of the final single group; never clustered.
+    top = dict(
+        points=points,
+        valid=valid,
+        parent=jnp.full((points.shape[0],), -1, jnp.int32),
+        child_start=next_cs,
+        child_count=next_cc,
+    )
+    return raw_levels, level_td, top
+
+
+def finalize_index(raw_levels: list, top: dict) -> PDASCIndexData:
+    """Assemble final-layout level dicts (+ the top dict) into the
+    ``PDASCIndexData`` pytree, computing the per-point norm cache."""
+    levels = []
+    for lv in list(raw_levels) + [top]:
+        pts = lv["points"]
+        levels.append(
+            PDASCLevel(
+                points=pts,
+                valid=lv["valid"],
+                parent=jnp.asarray(lv["parent"]).astype(jnp.int32),
+                child_start=jnp.asarray(lv["child_start"]).astype(jnp.int32),
+                child_count=jnp.asarray(lv["child_count"]).astype(jnp.int32),
+                sq_norm=jnp.sum(pts * pts, axis=-1),
+            )
+        )
+    return PDASCIndexData(
+        levels=tuple(levels),
+        leaf_ids=jnp.asarray(raw_levels[0]["leaf_ids"]).astype(jnp.int32),
+    )
+
+
 def build_index_arrays(
     data,
     *,
@@ -369,77 +490,13 @@ def build_index_arrays(
     carry_a = perm.astype(jnp.int32)  # leaf: original row ids
     carry_b = jnp.full((n,), -1, jnp.int32)
 
-    raw_levels: list[dict] = []  # final-layout arrays per level (leaf first)
-    level_td: list[Array] = []
-    next_cs = next_cc = None  # child_start/count travelling with items
-
-    while True:
-        G = -(-points.shape[0] // gl)
-        key, sub = jax.random.split(key)
-        level_arrays, next_arrays, remap, td = _build_level(
-            points,
-            valid,
-            carry_a,
-            carry_b,
-            sub,
-            dist=dist,
-            gl=gl,
-            k=k,
-            method=method,
-            max_swaps=max_swaps,
-            swap_tol=swap_tol,
-            row_chunk=row_chunk,
-            group_chunk=group_chunk,
-            bg=bg,
-            force_pallas=force_pallas,
-        )
-        # Fix the lower level's parent pointers through this level's reorder.
-        if raw_levels:
-            prev = raw_levels[-1]
-            p = prev["parent"]
-            prev["parent"] = jnp.where(p >= 0, remap[jnp.clip(p, 0, remap.shape[0] - 1)], -1)
-        if next_cs is None:  # leaf level: ids in carry_a, no children
-            level_arrays["child_start"] = jnp.full_like(level_arrays["carry_a"], -1)
-            level_arrays["child_count"] = jnp.zeros_like(level_arrays["carry_a"])
-            level_arrays["leaf_ids"] = level_arrays["carry_a"]
-        else:
-            level_arrays["child_start"] = level_arrays["carry_a"]
-            level_arrays["child_count"] = level_arrays["carry_b"]
-        raw_levels.append(level_arrays)
-        level_td.append(td)
-
-        points = next_arrays["points"]
-        valid = next_arrays["valid"]
-        carry_a = next_arrays["child_start"]
-        carry_b = next_arrays["child_count"]
-        next_cs, next_cc = carry_a, carry_b
-        if G == 1:
-            break
-
-    # Top level: the medoids of the final single group; never clustered.
-    top = dict(
-        points=points,
-        valid=valid,
-        parent=jnp.full((points.shape[0],), -1, jnp.int32),
-        child_start=next_cs,
-        child_count=next_cc,
+    raw_levels, level_td, top = _cluster_levels(
+        points, valid, carry_a, carry_b, key,
+        dist=dist, gl=gl, k=k, method=method, max_swaps=max_swaps,
+        swap_tol=swap_tol, row_chunk=row_chunk, group_chunk=group_chunk,
+        bg=bg, force_pallas=force_pallas,
     )
-    raw_levels.append(top)
-
-    levels = []
-    for lv in raw_levels:
-        pts = lv["points"]
-        levels.append(
-            PDASCLevel(
-                points=pts,
-                valid=lv["valid"],
-                parent=lv["parent"].astype(jnp.int32),
-                child_start=lv["child_start"].astype(jnp.int32),
-                child_count=lv["child_count"].astype(jnp.int32),
-                sq_norm=jnp.sum(pts * pts, axis=-1),
-            )
-        )
-    index = PDASCIndexData(levels=tuple(levels), leaf_ids=raw_levels[0]["leaf_ids"])
+    index = finalize_index(raw_levels, top)
     return index, tuple(level_td) + (jnp.float32(0.0),)
 
 

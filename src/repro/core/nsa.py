@@ -59,6 +59,7 @@ from repro.core import distances as dist_lib
 from repro.core.distances import BIG
 from repro.core.msa import PDASCIndexData
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Array = jax.Array
 
@@ -93,6 +94,7 @@ def _search_dense_batch(
     leaf_radius_filter: bool,
     kernel: kops.KernelConfig,
     with_stats: bool = True,
+    slot_valid: Optional[Array] = None,
 ) -> SearchResult:
     """Batched masked NSA: per level one [B, n_l] distance matrix.
 
@@ -144,6 +146,8 @@ def _search_dense_batch(
         cand = parent_ok & leaf.valid[None, :]
     else:
         cand = jnp.broadcast_to(leaf.valid[None, :], D.shape)
+    if slot_valid is not None:  # tombstone mask: deleted leaf slots drop out
+        cand = cand & slot_valid[None, :]
     if leaf_radius_filter:
         cand = cand & (D < radii[0])
 
@@ -172,12 +176,16 @@ def search_dense(
     leaf_radius_filter: bool = False,
     with_stats: bool = True,
     kernel: Optional[kops.KernelConfig] = None,
+    slot_valid: Optional[Array] = None,
 ) -> SearchResult:
     """Batched faithful NSA. ``Q``: [B, d] (or [d]).
 
     ``with_stats=False`` skips the candidate-count reduction (one full
     [B, n] pass) — the serving configuration. ``kernel`` carries the
-    kernel-layer block knobs (None = defaults).
+    kernel-layer block knobs (None = defaults). ``slot_valid`` is the online
+    substrate's tombstone mask over leaf slots (True = live, DESIGN.md
+    §3.7): deleted slots never become candidates; the navigation levels are
+    untouched (prototypes are copies, not results).
     """
     radii = _per_level_radii(r, len(index.levels))
     squeeze = Q.ndim == 1
@@ -186,6 +194,7 @@ def search_dense(
         index, dist, Qb, k=k, radii=radii,
         leaf_radius_filter=leaf_radius_filter,
         kernel=kernel or kops.DEFAULT, with_stats=with_stats,
+        slot_valid=slot_valid,
     )
     if squeeze:
         res = jax.tree.map(lambda a: a[0], res)
@@ -340,9 +349,11 @@ def _search_beam_batch(
     max_children: tuple,
     leaf_radius_filter: bool,
     kernel: kops.KernelConfig,
+    slot_valid: Optional[Array] = None,
 ) -> SearchResult:
     """Whole-batch beam search: the descent (``_descend_beam``) followed by
-    one fused fp32 leaf ranking."""
+    one fused fp32 leaf ranking. ``slot_valid`` (tombstones) masks leaf
+    slots out of the ranking only — the descent stays frozen."""
     levels = index.levels
     L = len(levels) - 1
     B = Q.shape[0]
@@ -354,8 +365,10 @@ def _search_beam_batch(
             Q, leaf.points, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
             row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
         )
-        D_top = jnp.where(leaf.valid[None, :], D_top, BIG)
-        ok = jnp.broadcast_to(leaf.valid[None, :], (B, W))
+        live = (leaf.valid if slot_valid is None
+                else leaf.valid & slot_valid)
+        D_top = jnp.where(live[None, :], D_top, BIG)
+        ok = jnp.broadcast_to(live[None, :], (B, W))
         k_eff = min(k, W)
         neg, slot = jax.lax.top_k(-D_top, k_eff)
         dists, slots = -neg, slot.astype(jnp.int32)
@@ -364,7 +377,7 @@ def _search_beam_batch(
             index, dist, Q, radii, beams, max_children, kernel
         )
         W = cand_idx.shape[1]
-        ok = cand_ok
+        ok = kref.fold_slot_valid(cand_idx, cand_ok, slot_valid)
         k_eff = min(k, W)
         dists, slot = kops.rank_gathered(  # fused leaf ranking
             Q, leaf.points, leaf.sq_norm, cand_idx, ok, dist, k=k_eff,
@@ -398,6 +411,7 @@ def search_beam(
     max_children: tuple,
     leaf_radius_filter: bool = False,
     kernel: Optional[kops.KernelConfig] = None,
+    slot_valid: Optional[Array] = None,
 ) -> SearchResult:
     """Batched beam NSA — the serving hot path.
 
@@ -406,6 +420,10 @@ def search_beam(
       max_children: static per-level max cluster size
         (:func:`repro.core.msa.max_children`).
       kernel: kernel-layer block knobs (None = defaults).
+      slot_valid: optional bool[n_0] tombstone mask over leaf slots (True =
+        live, DESIGN.md §3.7). Deleted slots rank as ``BIG`` at the leaf
+        step; the beam descent over the (frozen) navigation tier is
+        unchanged.
     """
     n_levels = len(index.levels)
     radii = _per_level_radii(r, n_levels)
@@ -423,6 +441,7 @@ def search_beam(
         max_children=tuple(max_children),
         leaf_radius_filter=leaf_radius_filter,
         kernel=kernel or kops.DEFAULT,
+        slot_valid=slot_valid,
     )
     if squeeze:
         res = jax.tree.map(lambda a: a[0], res)

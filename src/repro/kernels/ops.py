@@ -216,6 +216,7 @@ def scan_quantized(
     *,
     k: int,
     block: int,
+    slot_valid: Optional[Array] = None,
     bq: int = 8,
     bn: int = 256,
     force_pallas: bool = False,
@@ -234,7 +235,13 @@ def scan_quantized(
     The gather stays in the codes dtype — 1 byte/element of HBM traffic for
     int8 vs 4 for the fp32 leaf gather — and the Pallas path dequantises
     per-tile in VMEM (``kernels/quantized.py``).
+
+    ``slot_valid``: optional bool[n] tombstone mask over the code table
+    (True = live row). Folded into ``cand_ok`` *before* the scan
+    (``ref.fold_slot_valid``), so deleted rows rank as ``BIG`` on every
+    dispatch path without the codes being rewritten.
     """
+    cand_ok = _ref.fold_slot_valid(cand_idx, cand_ok, slot_valid)
     nb = scales.shape[0]
     C = jnp.take(codes, cand_idx, axis=0)  # [b, w, d] native dtype
     srows = jnp.take(scales, jnp.clip(cand_idx // block, 0, nb - 1))  # [b, w]
@@ -265,6 +272,7 @@ def rank_gathered(
     distance="l2",
     *,
     k: int,
+    slot_valid: Optional[Array] = None,
     bq: int = 8,
     bn: int = 256,
     force_pallas: bool = False,
@@ -273,6 +281,11 @@ def rank_gathered(
     (the NSA beam-search layout: ``cand_idx[b]`` indexes rows of ``points``).
 
     Returns (dists[b, k] ascending, slots[b, k] into the candidate axis).
+
+    ``slot_valid``: optional bool[n] tombstone mask over the point table
+    (True = live). Folded into ``cand_ok`` before dispatch
+    (``ref.fold_slot_valid``) — deleted rows rank as ``BIG`` on every path
+    (gemm+gather, gathered cube, Pallas) without touching ``points``.
 
     Dispatch picks the cheapest way to avoid the [b, w, d] gathered cube:
 
@@ -288,6 +301,7 @@ def rank_gathered(
     * CPU, small w or non-Gram form — gather the rows and rank the cube
       (cache-resident at these sizes; broadcast forms have no gemm).
     """
+    cand_ok = _ref.fold_slot_valid(cand_idx, cand_ok, slot_valid)
     b, w = cand_idx.shape
     n = points.shape[0]
     form = resolve_form(distance)

@@ -153,6 +153,23 @@ def swap_deltas_ref(
     return S[None, :] + T
 
 
+def fold_slot_valid(cand_idx: Array, cand_ok: Array, slot_valid) -> Array:
+    """Fold a per-row table validity mask into a candidate mask.
+
+    ``slot_valid``: bool[n] over the shared point/code table (True = live) —
+    the online substrate's tombstone mask (DESIGN.md §3.7). Gathers the bit
+    for every candidate row and ANDs it into ``cand_ok``, so downstream
+    ranking (``rank_ref`` / ``scan_quantized_ref`` / the Pallas twins) prices
+    deleted rows at ``BIG`` without the table itself changing. ``None``
+    passes ``cand_ok`` through untouched (the frozen-index fast path).
+    """
+    if slot_valid is None:
+        return cand_ok
+    n = slot_valid.shape[0]
+    rows = jnp.clip(cand_idx, 0, n - 1)
+    return cand_ok & jnp.take(slot_valid, rows)
+
+
 NORM_FORMS = ("sqeuclidean", "l2", "cosine")  # forms consuming ||c||^2
 
 

@@ -7,6 +7,13 @@ Builds (or loads) a PDASC index, wraps the distributed NSA search in
 ``repro.serving.BatchingEngine`` (fixed compiled batch, max-wait batching),
 fires synthetic query traffic at it, and reports latency percentiles +
 recall against exact ground truth.
+
+``--churn N`` interleaves N live writes (upserts + deletes through
+``submit_upsert`` / ``submit_delete``) into the query stream — the online
+substrate demo (DESIGN.md §3.7): writes apply between batches via an
+``online.EpochHandle``, compaction swaps epochs under traffic, and the
+final recall is measured against exact ground truth over the *post-churn*
+live point set.
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import numpy as np
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.kernels.ops import KernelConfig, knn
+from repro.online import EpochHandle, live_dataset
 from repro.serving import BatchingEngine
 
 
@@ -45,6 +53,15 @@ def _parse():
     p.add_argument("--store-block", type=int, default=1024)
     p.add_argument("--store-path", default=None)
     p.add_argument("--rerank-width", type=int, default=128)
+    # Online substrate (DESIGN.md §3.7): interleave live writes with search
+    # traffic; the EpochHandle compacts + swaps epochs between batches.
+    p.add_argument("--churn", type=int, default=0,
+                   help="number of upsert/delete writes interleaved into "
+                        "the query stream (0 = frozen index)")
+    p.add_argument("--churn-delete-frac", type=float, default=0.3)
+    p.add_argument("--delta-capacity", type=int, default=1024)
+    p.add_argument("--compact-delta-fill", type=float, default=0.5)
+    p.add_argument("--compact-tombstone-ratio", type=float, default=0.2)
     # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
     kd = KernelConfig()
     p.add_argument("--bm", type=int, default=kd.bm)
@@ -77,8 +94,17 @@ def main():
     kernel = KernelConfig(bm=args.bm, bn=args.bn, bd=args.bd, bq=args.bq,
                           row_chunk=args.row_chunk)
 
+    handle = None
+    if args.churn > 0:
+        idx.enable_mutations(delta_capacity=args.delta_capacity)
+        handle = EpochHandle(
+            idx, delta_fill=args.compact_delta_fill,
+            tombstone_ratio=args.compact_tombstone_ratio,
+        )
+
     def handler(batch, n_valid):
-        res = idx.search(jnp.asarray(batch), k=args.k, mode=args.mode,
+        cur = handle.current if handle is not None else idx
+        res = cur.search(jnp.asarray(batch), k=args.k, mode=args.mode,
                          beam=args.beam, rerank_width=args.rerank_width,
                          kernel=kernel)
         return res.dists, res.ids
@@ -92,28 +118,57 @@ def main():
             # for the queued queries and prefetch their candidate granules —
             # a superset of the rows the next batch's rerank will fetch.
             # Padded to the compiled batch size so no new executable compiles.
+            cur = handle.current if handle is not None else idx
             rows = np.stack(payloads[:args.batch])
             pad = args.batch - len(rows)
             if pad:
                 rows = np.concatenate([rows, np.repeat(rows[-1:], pad, 0)])
             ci, _ = nsa.descend_beam(
-                idx.data, jnp.asarray(rows), dist=idx.distance,
-                r=idx.default_radius, beam=args.beam,
-                max_children=idx.max_children, kernel=kernel,
+                cur.data, jnp.asarray(rows), dist=cur.distance,
+                r=cur.default_radius, beam=args.beam,
+                max_children=cur.max_children, kernel=kernel,
             )
-            idx.store.prefetch_rows(np.asarray(ci[:len(payloads)]))
+            cur.store.prefetch_rows(np.asarray(ci[:len(payloads)]))
 
-    engine = BatchingEngine(handler, batch_size=args.batch,
-                            max_wait_ms=args.max_wait_ms,
-                            pad_payload=np.zeros(train.shape[1], np.float32),
-                            prefetch_fn=prefetch_fn)
+    engine = BatchingEngine(
+        handler, batch_size=args.batch, max_wait_ms=args.max_wait_ms,
+        pad_payload=np.zeros(train.shape[1], np.float32),
+        prefetch_fn=prefetch_fn,
+        write_handler=handle.apply_writes if handle is not None else None,
+    )
     # warmup compile
     engine.submit(test[0]).wait(timeout=120)
 
     rng = np.random.default_rng(args.seed)
     q_rows = rng.integers(0, len(test), args.queries)
+    # writes interleave only with the head of the stream: the tail quarter
+    # is scored against the final live set, so it must see no further
+    # mutations (and at most one write per head query slot)
+    tail = max(args.queries // 4, 1)
+    head = args.queries - tail
+    churn = min(args.churn, head)
+    if churn < args.churn:
+        print(f"[serve] clamping --churn {args.churn} -> {churn} "
+              f"(one write per query slot ahead of the scored tail)")
+    write_every = (head // churn) if churn else 0
+    upserted_ids: list[int] = []
     lat, results = [], []
-    for i in q_rows:
+    for j, i in enumerate(q_rows):
+        if (write_every and j < head and j % write_every == 0
+                and j // write_every < churn):
+            # interleave one write: mostly upserts (train-like vectors),
+            # a fraction deletes of previously upserted ids
+            if upserted_ids and rng.random() < args.churn_delete_frac:
+                victim = upserted_ids.pop(rng.integers(len(upserted_ids)))
+                # wait like the upsert path does: a dropped write error here
+                # would silently leave the victim live while still counting
+                # in the writes stat
+                engine.submit_delete(np.array([victim])).wait(timeout=60)
+            else:
+                vec = train[rng.integers(len(train))] + rng.normal(
+                    0, 0.01, train.shape[1]).astype(np.float32)
+                req_w = engine.submit_upsert(vec)
+                upserted_ids.extend(int(x) for x in req_w.wait(timeout=60))
         t0 = time.time()
         req = engine.submit(test[i])
         _, ids = req.wait(timeout=60)
@@ -121,17 +176,34 @@ def main():
         results.append(ids)
     engine.close()
 
-    # recall vs exact
-    _, gt = knn(jnp.asarray(test[q_rows]), jnp.asarray(train),
+    # recall vs exact — over the *live* post-churn point set when churning
+    if handle is not None:
+        base_vecs, base_ids = live_dataset(handle.current)
+    else:
+        base_vecs, base_ids = train, np.arange(len(train))
+    _, gt = knn(jnp.asarray(test[q_rows]), jnp.asarray(base_vecs),
                 args.distance, k=args.k)
-    gt = np.asarray(gt)
-    rec = np.mean([
-        len(set(r[r >= 0]) & set(g)) / args.k for r, g in zip(results, gt)
-    ])
+    gt = base_ids[np.asarray(gt)]
     lat = np.array(lat) * 1e3
-    print(f"[serve] {args.queries} queries: recall@{args.k}={rec:.3f} "
-          f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms "
-          f"mean_batch_occupancy={engine.mean_occupancy:.2f}")
+    if handle is not None:
+        # churned stream: score recall on the tail queries — all writes were
+        # scheduled ahead of the tail, so these really were served against
+        # the final live set the ground truth was computed over
+        pairs = list(zip(results[-tail:], gt[-tail:]))
+    else:
+        pairs = list(zip(results, gt))
+    rec = np.mean([
+        len(set(r[r >= 0]) & set(g)) / args.k for r, g in pairs
+    ])
+    line = (f"[serve] {args.queries} queries: recall@{args.k}={rec:.3f} "
+            f"p50={np.percentile(lat, 50):.1f}ms "
+            f"p99={np.percentile(lat, 99):.1f}ms "
+            f"mean_batch_occupancy={engine.mean_occupancy:.2f}")
+    if handle is not None:
+        line += (f" writes={engine.stats['writes']} "
+                 f"epoch_swaps={handle.swaps} "
+                 f"epoch={handle.current.epoch}")
+    print(line)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Online mutability substrate (DESIGN.md §3.7) — the fourth substrate after
+search, build and storage: live upserts, deletes and epoch-swap compaction
+over an otherwise frozen PDASC index.
+
+* ``delta``      — capacity-bounded fp32 append tier for recent upserts,
+                   leaf-routed at insert time, searched by an exact kernel
+                   scan merged into every mode's results.
+* ``tombstones`` — packed deletion bitmask threaded into the leaf ranking of
+                   every search mode as a validity mask.
+* ``compact``    — group-granular epoch-swap rebuild folding both tiers back
+                   into a fresh immutable index.
+* ``epoch``      — the RCU handle wiring it all into ``BatchingEngine``.
+"""
+
+from repro.online.compact import compact_index, live_dataset
+from repro.online.delta import DeltaBuffer, merge_topk
+from repro.online.epoch import EpochHandle
+from repro.online.tombstones import TombstoneSet
+
+__all__ = [
+    "DeltaBuffer",
+    "EpochHandle",
+    "TombstoneSet",
+    "compact_index",
+    "live_dataset",
+    "merge_topk",
+]

@@ -1,0 +1,422 @@
+"""Epoch-swap compaction: fold the delta buffer and tombstones back into a
+frozen PDASC index (DESIGN.md §3.7).
+
+Read-copy-update at the index level: compaction never mutates the serving
+epoch. It materialises the live point set (leaf residents − tombstones +
+routed delta points), rebuilds, and returns a *new* ``PDASCIndex`` with
+``epoch + 1``, empty delta / tombstone tiers and a freshly (partially)
+re-quantised payload store. In-flight searches keep reading the old epoch;
+the serving layer (``online.epoch.EpochHandle`` + ``BatchingEngine``) swaps
+the reference between batches, so no query ever observes a half-built index.
+
+Two scopes:
+
+``scope="affected"`` (default)
+    Group-granular rebuild, the reason delta points are leaf-routed at
+    insert time. Only the leaf groups that lost residents (tombstones) or
+    gained arrivals (delta routing / spill) are re-clustered — through the
+    same PR 2 build substrate (``msa._cluster_groups``, streamed in
+    ``group_chunk`` slabs). Untouched groups keep their rows bit-identical
+    and their clustering recovered from the frozen level-1 structure (labels
+    are run-length decodes of the sibling-contiguous parent pointers). The
+    hierarchy above the leaf is regrown by the shared bottom-up loop
+    (``msa._cluster_levels(prev_levels=[leaf])``) — upper levels hold ~n/2
+    points total, so the rebuild cost is dominated by the affected leaf
+    fraction. Payload codes re-quantise only for blocks overlapping changed
+    rows (``LeafStore.rebuild``).
+
+``scope="full"``
+    From-scratch rebuild over the live set (the parity oracle for tests and
+    the fallback when nearly every group is dirty anyway).
+
+Arrivals route to their insert-time group while it has room (a group holds
+``gl`` slots; deletions free slots); overflow spills into fresh groups
+appended after the existing ones, clustered like any other affected group.
+"""
+
+from __future__ import annotations
+
+import functools
+import re as _re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import msa
+
+
+def live_dataset(idx) -> tuple[np.ndarray, np.ndarray]:
+    """The current live point set of a mutable index.
+
+    Returns ``(vectors [m, d] f32, ids [m] int32)`` — surviving leaf
+    residents in slot order, then active delta entries in insertion order.
+    This is the dataset a from-scratch rebuild would be built on (the
+    parity baseline of ``tests/test_online.py``).
+    """
+    leaf = idx.data.levels[0]
+    pts = _leaf_points(idx)
+    valid = np.asarray(leaf.valid)
+    ids = np.asarray(idx.data.leaf_ids)
+    alive = valid.copy()
+    if idx.tombstones is not None and idx.tombstones.count:
+        alive[idx.tombstones.dead_slots()] = False
+    vecs = [pts[alive]]
+    out_ids = [ids[alive]]
+    if idx.delta is not None and idx.delta.n_active:
+        d_vecs, d_ids, _ = idx.delta.live_entries()
+        vecs.append(d_vecs)
+        out_ids.append(d_ids)
+    return (
+        np.concatenate(vecs, axis=0).astype(np.float32),
+        np.concatenate(out_ids, axis=0).astype(np.int32),
+    )
+
+
+def _leaf_points(idx) -> np.ndarray:
+    """Exact fp32 leaf vectors in slot layout, whether the dense copy is
+    resident or released to the out-of-core payload tier."""
+    leaf = idx.data.levels[0]
+    pts = np.asarray(leaf.points, np.float32)
+    if idx.store is not None and pts.shape[1] != idx.store.d:
+        # dense payload released: the exact source is the payload of record
+        return idx.store.exact.read_all()
+    return pts
+
+
+def _recover_group_clustering(parent, valid, G, gl, k, level1_pts):
+    """Decode each group's frozen clustering from the sibling-contiguous
+    leaf layout: labels are run indices of the parent pointer within the
+    group's valid prefix, and medoid ``l`` of group ``g`` is the level-1
+    point those runs point at. Exact inverse of ``msa._build_level``'s
+    reorder (every valid medoid has >= 1 child — itself)."""
+    pg = parent.reshape(G, gl)
+    vg = valid.reshape(G, gl)
+    change = np.ones((G, gl), bool)
+    change[:, 1:] = pg[:, 1:] != pg[:, :-1]
+    change &= vg
+    labels = np.cumsum(change, axis=1) - 1
+    labels = np.where(vg, labels, -1).astype(np.int32)
+
+    med_parent = np.full((G, k), -1, np.int64)
+    gi, ji = np.nonzero(change)
+    li = labels[gi, ji]
+    keep = li < k  # defensive: malformed layouts would overflow the slots
+    med_parent[gi[keep], li[keep]] = pg[gi[keep], ji[keep]]
+    med_valid = med_parent >= 0
+    safe = np.clip(med_parent, 0, level1_pts.shape[0] - 1)
+    med_pts = level1_pts[safe]
+    med_pts[~med_valid] = 0.0
+    return labels, med_pts.astype(np.float32), med_valid
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dist", "k", "method", "max_swaps", "swap_tol",
+                     "row_chunk", "bg", "force_pallas"),
+)
+def _cluster_slab(gpts, gvld, keys, *, dist, k, method, max_swaps, swap_tol,
+                  row_chunk, bg, force_pallas):
+    return msa._cluster_groups(
+        dist, gpts, gvld, keys, k=k, method=method, max_swaps=max_swaps,
+        swap_tol=swap_tol, row_chunk=row_chunk, bg=bg,
+        force_pallas=force_pallas,
+    )
+
+
+def _cluster_affected(idx, gpts, gvld, *, method, max_swaps, swap_tol,
+                      row_chunk, group_chunk, bg, force_pallas, key):
+    """Re-cluster the affected groups through the PR 2 build substrate,
+    streamed in ``group_chunk`` slabs (host loop; each slab is one jitted
+    kernel-path call). Slabs pad to the chunk size with invalid groups so
+    every compaction of the same index shape hits one compiled executable.
+    """
+    A = gpts.shape[0]
+    k = idx.n_prototypes
+    keys = jax.random.split(key, A)
+    chunk = min(group_chunk, A) if group_chunk and group_chunk > 0 else A
+    med, lab = [], []
+    for lo in range(0, A, chunk):
+        hi = min(lo + chunk, A)
+        gp, gv, ks = gpts[lo:hi], gvld[lo:hi], keys[lo:hi]
+        pad = chunk - (hi - lo)
+        if pad:
+            gp = np.concatenate([gp, np.zeros((pad,) + gp.shape[1:],
+                                              gp.dtype)])
+            gv = np.concatenate([gv, np.zeros((pad, gv.shape[1]), bool)])
+            ks = jnp.concatenate([ks, jnp.zeros((pad, ks.shape[1]),
+                                                ks.dtype)])
+        m, l, _ = _cluster_slab(
+            jnp.asarray(gp), jnp.asarray(gv), ks, dist=idx.distance, k=k,
+            method=method, max_swaps=max_swaps, swap_tol=swap_tol,
+            row_chunk=row_chunk, bg=bg, force_pallas=force_pallas,
+        )
+        med.append(np.asarray(m)[: hi - lo])
+        lab.append(np.asarray(l)[: hi - lo])
+    return np.concatenate(med, axis=0), np.concatenate(lab, axis=0)
+
+
+def compact_index(
+    idx,
+    *,
+    scope: str = "affected",
+    method: str = "pam",
+    max_swaps: int = 64,
+    swap_tol: float = 1e-3,
+    row_chunk: int = 512,
+    group_chunk: int = 8,
+    bg: int = 128,
+    force_pallas: bool = False,
+    key=None,
+    store_path: Optional[str] = None,
+):
+    """Compact a mutable index into a fresh epoch (never mutates ``idx``).
+
+    Returns a new ``PDASCIndex``: live points only, empty delta/tombstone
+    tiers, ``epoch = idx.epoch + 1``, payload store re-created with
+    unchanged quantisation blocks reused. A memmapped exact payload gets a
+    *fresh* per-epoch file (``<base>.epoch<N>``; ``store_path`` overrides) —
+    never the old epoch's file, whose granules RCU readers may still be
+    fetching; retired epoch files are the operator's to garbage-collect
+    once no reader holds the old index. A released dense payload stays
+    released on the new epoch (the out-of-core memory budget survives
+    compaction).
+    """
+    from repro.core.index import PDASCIndex  # deferred: index imports us
+
+    if scope not in ("affected", "full"):
+        raise ValueError(f"unknown compaction scope {scope!r}")
+    key = key if key is not None else jax.random.fold_in(
+        jax.random.PRNGKey(0xC0), idx.epoch + 1
+    )
+
+    if scope == "full":
+        data, stats, leaf_ids_live = _rebuild_full(
+            idx, key, method=method, max_swaps=max_swaps, swap_tol=swap_tol,
+            row_chunk=row_chunk, group_chunk=group_chunk, bg=bg,
+            force_pallas=force_pallas,
+        )
+        changed = np.ones(data.levels[0].points.shape[0], bool)
+    else:
+        data, stats, changed = _rebuild_affected(
+            idx, key, method=method, max_swaps=max_swaps, swap_tol=swap_tol,
+            row_chunk=row_chunk, group_chunk=group_chunk, bg=bg,
+            force_pallas=force_pallas,
+        )
+
+    new_idx = PDASCIndex(
+        data=data,
+        stats=stats,
+        distance=idx.distance,
+        gl=idx.gl,
+        n_prototypes=idx.n_prototypes,
+        max_children=msa.max_children(data),
+        default_radius=idx.default_radius,
+        epoch=idx.epoch + 1,
+        # freed ids (deleted / deactivated) must never be re-issued: carry
+        # the id ceiling across the epoch, not just the surviving ids
+        _next_id=idx._seen_id_ceiling(),
+    )
+    if idx.store is not None:
+        if store_path is None and idx.store.exact.on_disk:
+            base = _re.sub(r"\.epoch\d+$", "", idx.store.exact.path)
+            store_path = f"{base}.epoch{idx.epoch + 1}"
+        new_idx.store = idx.store.rebuild(
+            np.asarray(data.levels[0].points), changed, path=store_path
+        )
+        if idx._payload_released:
+            new_idx.release_dense_payload()
+    return new_idx
+
+
+def _rebuild_full(idx, key, *, method, max_swaps, swap_tol, row_chunk,
+                  group_chunk, bg, force_pallas):
+    vecs, ids = live_dataset(idx)
+    data, stats = msa.build_index(
+        vecs, gl=idx.gl, n_prototypes=idx.n_prototypes,
+        distance=idx.distance, method=method, max_swaps=max_swaps, key=key,
+        row_chunk=row_chunk, group_chunk=group_chunk, swap_tol=swap_tol,
+        bg=bg, force_pallas=force_pallas,
+    )
+    # build() numbers leaves by row into `vecs`; lift back to original ids.
+    rows = np.asarray(data.leaf_ids)
+    leaf_ids = np.where(rows >= 0, ids[np.clip(rows, 0, len(ids) - 1)], -1)
+    data = data._replace(leaf_ids=jnp.asarray(leaf_ids, dtype=jnp.int32))
+    return data, stats, ids
+
+
+def _rebuild_affected(idx, key, *, method, max_swaps, swap_tol, row_chunk,
+                      group_chunk, bg, force_pallas):
+    gl, k = idx.gl, idx.n_prototypes
+    dist = idx.distance
+    leaf = idx.data.levels[0]
+    pts = _leaf_points(idx)
+    n_pad, d = pts.shape
+    G = n_pad // gl
+    valid = np.asarray(leaf.valid)
+    parent = np.asarray(leaf.parent)
+    leaf_ids = np.asarray(idx.data.leaf_ids)
+
+    dead = np.zeros(n_pad, bool)
+    if idx.tombstones is not None and idx.tombstones.count:
+        dead[idx.tombstones.dead_slots()] = True
+    alive = valid & ~dead
+
+    if idx.delta is not None and idx.delta.n_active:
+        d_vecs, d_ids, d_slots = idx.delta.live_entries()
+    else:
+        d_vecs = np.zeros((0, d), np.float32)
+        d_ids = d_slots = np.zeros((0,), np.int32)
+
+    # --- route arrivals: insert-time group while it has room, else spill ----
+    alive_cnt = alive.reshape(G, gl).sum(axis=1)
+    room = gl - alive_cnt
+    target_g = np.clip(np.asarray(d_slots, np.int64) // gl, 0, max(G - 1, 0))
+    arrivals: list[list[int]] = [[] for _ in range(G)]
+    spill: list[int] = []
+    for i, g in enumerate(target_g):
+        g = int(g)
+        if G and room[g] > 0:
+            arrivals[g].append(i)
+            room[g] -= 1
+        else:
+            spill.append(i)
+    n_spill_groups = -(-len(spill) // gl) if spill else 0
+    G_new = G + n_spill_groups
+    n_new = G_new * gl
+
+    # --- assemble the new leaf groups ---------------------------------------
+    new_pts = np.zeros((G_new, gl, d), np.float32)
+    new_valid = np.zeros((G_new, gl), bool)
+    new_ids = np.full((G_new, gl), -1, np.int32)
+    affected = np.zeros(G_new, bool)
+    new_pts[:G] = pts.reshape(G, gl, d)
+    new_valid[:G] = alive.reshape(G, gl)
+    new_ids[:G] = np.where(alive, leaf_ids, -1).reshape(G, gl)
+    had_dead = (dead & valid).reshape(G, gl).any(axis=1)
+    for g in range(G):
+        arr = arrivals[g]
+        if not arr and not had_dead[g]:
+            continue  # frozen group: rows stay bit-identical
+        affected[g] = True
+        sel = new_valid[g]
+        m = int(sel.sum())
+        packed = np.zeros((gl, d), np.float32)
+        packed_ids = np.full(gl, -1, np.int32)
+        packed[:m] = new_pts[g][sel]
+        packed_ids[:m] = new_ids[g][sel]
+        if arr:
+            packed[m:m + len(arr)] = d_vecs[arr]
+            packed_ids[m:m + len(arr)] = d_ids[arr]
+            m += len(arr)
+        new_pts[g] = packed
+        new_ids[g] = packed_ids
+        new_valid[g] = np.arange(gl) < m
+    for s in range(n_spill_groups):
+        g = G + s
+        affected[g] = True
+        rows = spill[s * gl:(s + 1) * gl]
+        new_pts[g, : len(rows)] = d_vecs[rows]
+        new_ids[g, : len(rows)] = d_ids[rows]
+        new_valid[g, : len(rows)] = True
+
+    # --- per-group clustering: recover frozen groups, re-cluster the rest ---
+    labels = np.full((G_new, gl), -1, np.int32)
+    med_pts = np.zeros((G_new, k, d), np.float32)
+    med_valid = np.zeros((G_new, k), bool)
+    if G and not affected[:G].all():
+        keep_lab, keep_mp, keep_mv = _recover_group_clustering(
+            parent, valid, G, gl, k, np.asarray(idx.data.levels[1].points)
+        )
+        frozen = ~affected[:G]
+        labels[:G][frozen] = keep_lab[frozen]
+        med_pts[:G][frozen] = keep_mp[frozen]
+        med_valid[:G][frozen] = keep_mv[frozen]
+    aff = np.nonzero(affected)[0]
+    if aff.size:
+        key, sub = jax.random.split(key)
+        med_idx, aff_lab = _cluster_affected(
+            idx, new_pts[aff], new_valid[aff], method=method,
+            max_swaps=max_swaps, swap_tol=swap_tol, row_chunk=row_chunk,
+            group_chunk=group_chunk, bg=bg, force_pallas=force_pallas,
+            key=sub,
+        )
+        labels[aff] = aff_lab
+        safe = np.clip(med_idx, 0, gl - 1)
+        mp = np.take_along_axis(new_pts[aff], safe[:, :, None], axis=1)
+        mv = med_idx >= 0
+        mp[~mv] = 0.0
+        med_pts[aff] = mp
+        med_valid[aff] = mv
+
+    # --- sibling-contiguous reorder + child bookkeeping (all groups) --------
+    sort_key = np.where(labels >= 0, labels, k)
+    order = np.argsort(sort_key, axis=1, kind="stable")  # identity if frozen
+    labels_f = np.take_along_axis(labels, order, axis=1)
+    pts_f = np.take_along_axis(new_pts, order[:, :, None], axis=1)
+    valid_f = np.take_along_axis(new_valid, order, axis=1)
+    ids_f = np.take_along_axis(new_ids, order, axis=1)
+
+    counts = np.zeros((G_new, k), np.int64)
+    gi, ji = np.nonzero(labels_f >= 0)
+    np.add.at(counts, (gi, labels_f[gi, ji]), 1)
+    bounds = np.concatenate(
+        [np.zeros((G_new, 1), np.int64), np.cumsum(counts, axis=1)], axis=1
+    )
+    starts = bounds[:, :k] + (np.arange(G_new) * gl)[:, None]
+    parent_f = np.where(
+        labels_f >= 0, (np.arange(G_new) * k)[:, None] + labels_f, -1
+    ).astype(np.int32)
+
+    leaf_dict = dict(
+        points=jnp.asarray(pts_f.reshape(n_new, d)),
+        valid=jnp.asarray(valid_f.reshape(n_new)),
+        parent=jnp.asarray(parent_f.reshape(n_new)),
+        child_start=jnp.full((n_new,), -1, jnp.int32),
+        child_count=jnp.zeros((n_new,), jnp.int32),
+        leaf_ids=jnp.asarray(ids_f.reshape(n_new)),
+    )
+    med_flat = jnp.asarray(med_pts.reshape(G_new * k, d))
+    mv_flat = jnp.asarray(med_valid.reshape(G_new * k))
+    cs_flat = jnp.asarray(starts.reshape(G_new * k).astype(np.int32))
+    cc_flat = jnp.asarray(counts.reshape(G_new * k).astype(np.int32))
+
+    # --- regrow the hierarchy above the leaf --------------------------------
+    if G_new == 1:  # the medoids of the single group *are* the top level
+        raw_levels = [leaf_dict]
+        top = dict(
+            points=med_flat, valid=mv_flat,
+            parent=jnp.full((G_new * k,), -1, jnp.int32),
+            child_start=cs_flat, child_count=cc_flat,
+        )
+        upper_td: list = []
+    else:
+        key, sub = jax.random.split(key)
+        raw_levels, upper_td, top = msa._cluster_levels(
+            med_flat, mv_flat, cs_flat, cc_flat, sub,
+            dist=dist, gl=gl, k=k, method=method, max_swaps=max_swaps,
+            swap_tol=swap_tol, row_chunk=row_chunk, group_chunk=group_chunk,
+            bg=bg, force_pallas=force_pallas, prev_levels=[leaf_dict],
+        )
+    data = msa.finalize_index(raw_levels, top)
+
+    # Exact leaf TD (sum of point -> own-medoid distances): one rowwise pass
+    # instead of trusting stale per-group numbers through the reshuffle.
+    leaf_new = data.levels[0]
+    l1_pts = data.levels[1].points
+    safe_par = jnp.clip(leaf_new.parent, 0, l1_pts.shape[0] - 1)
+    td0 = jnp.sum(
+        jnp.where(
+            leaf_new.valid,
+            dist.point(leaf_new.points, jnp.take(l1_pts, safe_par, axis=0)),
+            0.0,
+        )
+    )
+    sizes = [int(np.asarray(lv.valid).sum()) for lv in data.levels]
+    tds = [float(td0)] + [float(np.asarray(t)) for t in upper_td] + [0.0]
+    stats = msa.BuildStats(
+        level_sizes=tuple(sizes), level_td=tuple(tds), n_levels=len(sizes)
+    )
+    changed_rows = np.repeat(affected, gl)
+    return data, stats, changed_rows

@@ -1,0 +1,202 @@
+"""Delta buffer — capacity-bounded fp32 append tier for recent upserts
+(DESIGN.md §3.7).
+
+Writes never touch the frozen index either: an upsert appends the vector
+here, and at insert time the point is *leaf-routed* through the already-jitted
+``nsa.descend_beam`` at beam=1 (plus one fused ``ops.rank_gathered`` k=1) so
+its destination group is known before compaction ever runs — routing costs
+one navigation descent per write, amortised over write batches, and makes
+compaction a per-group (not whole-index) rebuild.
+
+Search over the buffer is a brute-force kernel scan: one
+``ops.pairwise_distance`` call over the fixed-capacity array (inactive slots
+mask to ``distances.BIG``) streamed in ``row_chunk`` column slabs, followed
+by a top-k — exact by construction, so a fresh upsert is immediately and
+perfectly visible. The buffer's ``[B, k]`` result merges with the main
+index's through :func:`merge_topk` — the same concat + select a single
+butterfly round performs between shard partners, which is exactly how the
+delta leg folds into the sharded merge tree.
+
+The arrays live host-side (writes are cheap row stores) with a lazily
+refreshed device mirror, so the scan hits a stable jit cache: capacity is
+static, mutations only change array *values*.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_lib
+from repro.core.distances import BIG
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+class DeltaScan(NamedTuple):
+    dists: Array  # f32[B, k'] ascending; BIG for missing
+    ids: Array  # int32[B, k']; -1 for missing
+
+
+@functools.partial(jax.jit, static_argnames=("dist", "k", "kernel"))
+def _scan(Q, vectors, ids, active, *, dist, k, kernel):
+    D = kops.pairwise_distance(
+        Q, vectors, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
+        row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
+    )
+    D = jnp.where(active[None, :], D, BIG)
+    neg, pos = jax.lax.top_k(-D, k)
+    d = -neg
+    out_ids = jnp.where(d < BIG / 2, jnp.take(ids, pos), -1)
+    return DeltaScan(dists=d, ids=out_ids)
+
+
+def merge_topk(d_a, i_a, d_b, i_b, k: int):
+    """Two-way top-k merge of ``[..., k_a]`` / ``[..., k_b]`` result legs —
+    one concat + select, the per-round primitive of the butterfly merge
+    collective (``distributed.topk_merge_butterfly``) applied locally."""
+    cd = jnp.concatenate([d_a, d_b], axis=-1)
+    ci = jnp.concatenate([i_a, i_b], axis=-1)
+    if cd.shape[-1] <= k:
+        order = jnp.argsort(cd, axis=-1)
+        pad = k - cd.shape[-1]
+        d = jnp.take_along_axis(cd, order, axis=-1)
+        i = jnp.take_along_axis(ci, order, axis=-1)
+        if pad:
+            widths = [(0, 0)] * (cd.ndim - 1) + [(0, pad)]
+            d = jnp.pad(d, widths, constant_values=BIG)
+            i = jnp.pad(i, widths, constant_values=-1)
+        return d, i
+    neg, idx = jax.lax.top_k(-cd, k)
+    return -neg, jnp.take_along_axis(ci, idx, axis=-1)
+
+
+class DeltaBuffer:
+    """Fixed-capacity append buffer: vectors + ids + routed leaf slots."""
+
+    def __init__(self, capacity: int, d: int):
+        if capacity < 1:
+            raise ValueError(f"delta capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.d = int(d)
+        self.vectors = np.zeros((self.capacity, self.d), np.float32)
+        self.ids = np.full(self.capacity, -1, np.int32)
+        self.leaf_slot = np.full(self.capacity, -1, np.int32)  # routed dest
+        self.active = np.zeros(self.capacity, bool)
+        self.size = 0  # append cursor (monotone until compaction resets)
+        self._dev = None  # cached (vectors, ids, active) device mirror
+
+    # -- mutation -------------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active[: self.size].sum())
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.size
+
+    def fill_ratio(self) -> float:
+        """Append-cursor fill fraction (the compaction trigger metric —
+        deactivated slots still consume capacity until compaction)."""
+        return self.size / self.capacity
+
+    def append(self, vectors, ids, leaf_slots) -> np.ndarray:
+        """Append routed rows; returns their buffer positions. Raises when
+        the remaining capacity cannot hold the batch (callers compact)."""
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        leaf_slots = np.asarray(leaf_slots, np.int32).reshape(-1)
+        m = vectors.shape[0]
+        if vectors.shape != (m, self.d):
+            raise ValueError(
+                f"delta append expects [m, {self.d}] vectors, got "
+                f"{vectors.shape}"
+            )
+        if not (m == ids.shape[0] == leaf_slots.shape[0]):
+            raise ValueError("vectors / ids / leaf_slots length mismatch")
+        if m > self.free:
+            raise RuntimeError(
+                f"delta buffer full ({self.size}/{self.capacity} used, "
+                f"{m} requested); compact the index to drain it"
+            )
+        pos = np.arange(self.size, self.size + m)
+        self.vectors[pos] = vectors
+        self.ids[pos] = ids
+        self.leaf_slot[pos] = leaf_slots
+        self.active[pos] = True
+        self.size += m
+        self._dev = None
+        return pos
+
+    def deactivate_ids(self, ids) -> int:
+        """Mask out live entries whose id is in ``ids`` (delete / re-upsert
+        of a buffered point). Returns the number deactivated."""
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        if self.size == 0 or ids.size == 0:
+            return 0
+        hit = self.active[: self.size] & np.isin(self.ids[: self.size], ids)
+        n = int(hit.sum())
+        if n:
+            self.active[: self.size][hit] = False
+            self._dev = None
+        return n
+
+    def contains_id(self, id_) -> bool:
+        return bool(
+            (self.active[: self.size] & (self.ids[: self.size] == id_)).any()
+        )
+
+    def live_entries(self):
+        """(vectors, ids, leaf_slots) of the active rows, insertion order —
+        the compaction input."""
+        live = self.active[: self.size]
+        return (
+            self.vectors[: self.size][live],
+            self.ids[: self.size][live],
+            self.leaf_slot[: self.size][live],
+        )
+
+    # -- search ---------------------------------------------------------------
+
+    def scan(
+        self,
+        Q: Array,  # [B, d]
+        dist,
+        *,
+        k: int,
+        kernel: Optional[kops.KernelConfig] = None,
+    ) -> DeltaScan:
+        """Exact brute-force scan of the buffer: ``[B, min(k, capacity)]``
+        ascending (dists, ids); inactive slots rank ``BIG`` / -1."""
+        dist = dist_lib.get(dist)
+        if self._dev is None:
+            self._dev = (
+                jnp.asarray(self.vectors),
+                jnp.asarray(self.ids),
+                jnp.asarray(self.active),
+            )
+        vecs, ids, active = self._dev
+        return _scan(
+            jnp.asarray(Q, jnp.float32), vecs, ids, active,
+            dist=dist, k=min(k, self.capacity),
+            kernel=kernel or kops.DEFAULT,
+        )
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.vectors.nbytes + self.ids.nbytes + self.leaf_slot.nbytes
+            + self.active.nbytes
+        )
+
+    def __repr__(self):
+        return (
+            f"DeltaBuffer(capacity={self.capacity}, d={self.d}, "
+            f"size={self.size}, active={self.n_active})"
+        )

@@ -1,0 +1,119 @@
+"""Epoch handle — the read-copy-update glue between a mutable PDASC index
+and the serving engine (DESIGN.md §3.7).
+
+The handle owns one atomic reference to the current index epoch. Readers
+(the engine's search handler) grab ``handle.current`` once per batch and run
+the whole batch against that snapshot; writers go through
+``handle.apply_writes`` — wired as ``BatchingEngine(write_handler=...)``, so
+the engine only ever calls it *between* batches on the single worker thread.
+That serialisation is the entire consistency story:
+
+* no torn batches — a batch's queries all see one epoch (the snapshot),
+* no write/search races — upsert/delete mutate only the delta/tombstone
+  tiers, and only while no handler is running,
+* epoch swaps are one reference assignment — in-flight results computed on
+  the old epoch stay valid (the old index object is immutable once
+  published and is garbage-collected when the last reader drops it).
+
+Compaction policy lives here too: after a write batch, if the delta fill or
+tombstone ratio crossed its threshold, the handle compacts into a new epoch
+and swaps.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class EpochHandle:
+    """RCU reference to the live index + write application + swap policy."""
+
+    def __init__(
+        self,
+        idx,
+        *,
+        delta_fill: float = 0.5,
+        tombstone_ratio: float = 0.2,
+        scope: str = "affected",
+        compact_kwargs: Optional[dict] = None,
+    ):
+        self._current = idx
+        self.delta_fill = float(delta_fill)
+        self.tombstone_ratio = float(tombstone_ratio)
+        self.scope = scope
+        self.compact_kwargs = dict(compact_kwargs or {})
+        self.swaps = 0
+        # Guards the reference swap itself (reads of self._current are
+        # single assignments — atomic under the GIL — but tests / multiple
+        # writers may drive apply_writes concurrently).
+        self._write_lock = threading.Lock()
+
+    @property
+    def current(self):
+        """The live epoch. Read it ONCE per batch and keep the snapshot."""
+        return self._current
+
+    # -- engine glue ----------------------------------------------------------
+
+    def apply_writes(self, ops):
+        """``BatchingEngine`` write handler: ``ops`` is ``[(kind, payload),
+        ...]`` in arrival order (kind "upsert" -> payload ``(vectors, ids)``
+        or bare vectors; kind "delete" -> payload ids). Applied to the live
+        epoch, then the swap policy runs once. Returns one result per op
+        (assigned ids for upserts, deleted counts for deletes) — a failing
+        op contributes its *exception* instead, so ops already durably
+        applied earlier in the run are never reported as failed (the engine
+        raises the per-op error from that request's ``wait()``)."""
+        with self._write_lock:
+            idx = self._current
+            out = []
+            for kind, payload in ops:
+                try:
+                    if kind == "upsert":
+                        if isinstance(payload, tuple):
+                            vectors, ids = payload
+                        else:
+                            vectors, ids = payload, None
+                        if idx.delta is not None and idx.delta.free < len(
+                            _rows(vectors)
+                        ):
+                            idx = self._swap(idx)  # pre-emptive: make room
+                        out.append(idx.upsert(vectors, ids=ids))
+                    elif kind == "delete":
+                        out.append(idx.delete(payload))
+                    else:
+                        raise ValueError(f"unknown write kind {kind!r}")
+                except Exception as e:  # per-op isolation
+                    out.append(e)
+            if idx.needs_compaction(
+                delta_fill=self.delta_fill,
+                tombstone_ratio=self.tombstone_ratio,
+            ):
+                idx = self._swap(idx)
+            return out
+
+    def maybe_compact(self) -> bool:
+        """Run the swap policy outside the engine (tests / manual drains)."""
+        with self._write_lock:
+            idx = self._current
+            if idx.needs_compaction(
+                delta_fill=self.delta_fill,
+                tombstone_ratio=self.tombstone_ratio,
+            ):
+                self._swap(idx)
+                return True
+            return False
+
+    def _swap(self, idx):
+        new = idx.compact(scope=self.scope, **self.compact_kwargs)
+        self._current = new  # the RCU publish: one reference assignment
+        self.swaps += 1
+        return new
+
+
+def _rows(vectors):
+    import numpy as np
+
+    v = np.asarray(vectors)
+    return v.reshape(1, -1) if v.ndim == 1 else v

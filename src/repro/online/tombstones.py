@@ -1,0 +1,111 @@
+"""Tombstones — packed deletion bitmask over leaf slots (DESIGN.md §3.7).
+
+Deletes never touch the index arrays: the leaf level, the payload codes and
+the navigation prototypes all stay frozen (and jit-compiled executables stay
+valid). A delete flips one bit here; at search time the unpacked validity
+mask threads into the leaf ranking of every mode — ``ops.rank_gathered``
+(dense/beam), ``ops.scan_quantized`` (two-stage scan) and the sharded scan —
+via ``ref.fold_slot_valid``, so masked slots price at ``distances.BIG`` and
+deleted ids vanish from all results.
+
+Storage is 1 bit per leaf slot (``uint8`` words on host). The device-side
+bool mask (1 byte/slot — XLA has no packed bool) is materialised lazily and
+cached; any mutation invalidates the cache, so a serving epoch re-uploads
+the mask at most once per write batch, not per query.
+
+A prototype at levels >= 1 may be a *copy* of a deleted point — that is by
+design: prototypes are navigation structure, not results, and keeping them
+is exactly what lets the hot tier stay frozen. Compaction
+(``online.compact``) eventually rebuilds the affected groups and retires
+the tombstones.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class TombstoneSet:
+    """Packed per-slot deletion bits + a cached device validity mask."""
+
+    def __init__(self, n_slots: int, bits: Optional[np.ndarray] = None):
+        self.n_slots = int(n_slots)
+        n_words = -(-self.n_slots // 8)
+        if bits is None:
+            bits = np.zeros(n_words, np.uint8)
+        else:
+            bits = np.asarray(bits, np.uint8)
+            if bits.shape != (n_words,):
+                raise ValueError(
+                    f"tombstone bitmap shape {bits.shape} != ({n_words},) "
+                    f"for {self.n_slots} slots"
+                )
+        self._bits = bits
+        self.count = int(np.unpackbits(bits, count=self.n_slots, bitorder="little").sum())
+        self._mask_cache = None  # jnp bool[n_slots], True = live
+
+    # -- mutation -------------------------------------------------------------
+
+    def add(self, slots) -> int:
+        """Mark leaf slots deleted. Returns the number of *newly* dead
+        slots (re-deleting is a no-op, not an error)."""
+        slots = np.unique(np.asarray(slots, np.int64).reshape(-1))
+        if slots.size == 0:
+            return 0
+        if slots.min() < 0 or slots.max() >= self.n_slots:
+            raise IndexError(
+                f"tombstone slot out of range [0, {self.n_slots})"
+            )
+        words, bit = slots >> 3, (slots & 7).astype(np.uint8)
+        masks = np.left_shift(np.uint8(1), bit)
+        already = (self._bits[words] & masks) != 0
+        fresh = int((~already).sum())
+        if fresh:
+            np.bitwise_or.at(self._bits, words, masks)
+            self.count += fresh
+            self._mask_cache = None
+        return fresh
+
+    # -- queries --------------------------------------------------------------
+
+    def contains(self, slots) -> np.ndarray:
+        slots = np.asarray(slots, np.int64)
+        return (self._bits[slots >> 3] >> (slots & 7).astype(np.uint8)) & 1 != 0
+
+    def ratio(self, n_valid: int) -> float:
+        """Dead fraction of the (originally valid) leaf population — the
+        compaction trigger metric."""
+        return self.count / max(int(n_valid), 1)
+
+    def valid_mask(self):
+        """Device bool[n_slots] validity mask (True = live), cached until
+        the next mutation. This is the array threaded as ``slot_valid``
+        through the search modes."""
+        if self._mask_cache is None:
+            dead = np.unpackbits(self._bits, count=self.n_slots,
+                                  bitorder="little").astype(bool)
+            self._mask_cache = jnp.asarray(~dead)
+        return self._mask_cache
+
+    def dead_slots(self) -> np.ndarray:
+        """All tombstoned slot indices (compaction input)."""
+        return np.nonzero(
+            np.unpackbits(self._bits, count=self.n_slots, bitorder="little")
+        )[0]
+
+    # -- persistence ----------------------------------------------------------
+
+    @property
+    def bits(self) -> np.ndarray:
+        """The packed bitmap (index save format v3)."""
+        return self._bits
+
+    @property
+    def nbytes(self) -> int:
+        return int(self._bits.nbytes)
+
+    def __repr__(self):
+        return f"TombstoneSet(n_slots={self.n_slots}, dead={self.count})"

@@ -14,6 +14,16 @@ instead of disk. Prefetching is best-effort: snapshots that arrive while
 the helper is busy are coalesced to the latest one, and exceptions are
 swallowed (a cold cache is a latency miss, not an error).
 
+``write_handler`` hooks the online substrate (DESIGN.md §3.7):
+``submit_upsert`` / ``submit_delete`` enqueue *write* requests into the
+same FIFO, and the worker hands consecutive runs of them to the handler
+**between** search batches — writes and searches never interleave inside a
+batch, and a search submitted after a write is batched after it (read-your-
+writes). Because the single worker applies writes while no handler call is
+in flight, an ``online.EpochHandle`` write handler can mutate the delta /
+tombstone tiers and swap index epochs with no torn (mixed-epoch) batch ever
+observable.
+
 Used by ``launch/serve.py`` for two endpoints:
   * PDASC k-NN queries  (handler = distributed NSA search)
   * recsys CTR scoring  (handler = recsys serve step)
@@ -21,6 +31,7 @@ Used by ``launch/serve.py`` for two endpoints:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import queue
@@ -39,13 +50,17 @@ _SHUTDOWN = object()
 class Request:
     payload: Any  # one query row (pytree of arrays, leading dim absent)
     id: int = 0
+    kind: str = "search"  # "search" | "upsert" | "delete"
     enqueued_at: float = 0.0
     _event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Any = None
+    error: Optional[BaseException] = None
 
     def wait(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.id} timed out")
+        if self.error is not None:
+            raise self.error
         return self.result
 
 
@@ -60,13 +75,18 @@ class BatchingEngine:
         max_wait_ms: float = 5.0,
         pad_payload: Optional[Any] = None,
         prefetch_fn: Optional[Callable[[list], None]] = None,
+        write_handler: Optional[Callable[[list], None]] = None,
     ):
         self.handler = handler
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
         self.pad_payload = pad_payload
         self.prefetch_fn = prefetch_fn
+        self.write_handler = write_handler
         self._q: queue.Queue = queue.Queue()
+        # Lookahead buffer: _take_batch stops a batch at a kind boundary and
+        # parks the first request of the next batch here (worker-only).
+        self._pending: collections.deque = collections.deque()
         self._ids = itertools.count()
         self._stop = threading.Event()
         # Serialises submit()'s closed-check+enqueue against close()'s
@@ -74,7 +94,7 @@ class BatchingEngine:
         # the worker drained it, leaving a request whose wait() never fires.
         self._submit_lock = threading.Lock()
         self.stats = dict(batches=0, requests=0, occupancy_sum=0.0,
-                          prefetches=0)
+                          prefetches=0, writes=0, write_batches=0)
         self._prefetch_q: Optional[queue.Queue] = None
         self._prefetch_thread = None
         if prefetch_fn is not None:
@@ -89,6 +109,27 @@ class BatchingEngine:
         self._thread.start()
 
     def submit(self, payload) -> Request:
+        return self._enqueue(payload, "search")
+
+    def submit_upsert(self, payload) -> Request:
+        """Enqueue an upsert (payload: vectors, or ``(vectors, ids)``).
+        Applied by ``write_handler`` between batches; ``wait()`` returns the
+        handler's per-op result (the assigned ids for an ``EpochHandle``)."""
+        return self._enqueue_write(payload, "upsert")
+
+    def submit_delete(self, ids) -> Request:
+        """Enqueue a delete-by-ids write (see :meth:`submit_upsert`)."""
+        return self._enqueue_write(ids, "delete")
+
+    def _enqueue_write(self, payload, kind: str) -> Request:
+        if self.write_handler is None:
+            raise RuntimeError(
+                f"submit_{kind}() needs a write_handler (e.g. "
+                f"online.EpochHandle.apply_writes)"
+            )
+        return self._enqueue(payload, kind)
+
+    def _enqueue(self, payload, kind: str) -> Request:
         with self._submit_lock:
             if self._stop.is_set():
                 # Raise at the call site instead of enqueueing a request
@@ -97,30 +138,62 @@ class BatchingEngine:
                 raise RuntimeError(
                     "BatchingEngine is closed; submit() rejected"
                 )
-            req = Request(payload=payload, id=next(self._ids),
+            req = Request(payload=payload, id=next(self._ids), kind=kind,
                           enqueued_at=time.time())
             self._q.put(req)
         return req
 
     def _take_batch(self) -> list[Request]:
         # Block until traffic arrives — an idle worker parks on the queue
-        # instead of spinning a poll loop; close() unblocks it via a sentinel.
-        first = self._q.get()
+        # instead of spinning a poll loop; close() unblocks it via a
+        # sentinel. Batches are kind-homogeneous: a batch ends at a
+        # search/write boundary and the boundary request parks in _pending
+        # (FIFO preserved — a search enqueued after a write runs after it).
+        if self._pending:
+            first = self._pending.popleft()
+        else:
+            first = self._q.get()
         if first is _SHUTDOWN:
             return []
         batch = [first]
+        if first.kind != "search":
+            # Writes batch without a deadline: take whatever writes are
+            # already queued (arrival order) and apply them immediately.
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is _SHUTDOWN or item.kind == "search":
+                    self._pending.append(item)
+                    break
+                batch.append(item)
+            return batch
         deadline = first.enqueued_at + self.max_wait
         while len(batch) < self.batch_size:
             remaining = deadline - time.time()
             if remaining <= 0:
-                break
-            try:
-                item = self._q.get(timeout=remaining)
-            except queue.Empty:
-                break
+                # deadline already expired (a backlog piled up behind a slow
+                # write run / compaction swap): still drain what is already
+                # queued — those requests cost nothing to include, and
+                # serving the backlog as single-query batches would crater
+                # throughput exactly when batching matters most
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+            else:
+                try:
+                    item = self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
             if item is _SHUTDOWN:
                 # close() raced the fill: serve what we have; the worker
                 # loop re-checks _stop (already set) and exits after.
+                break
+            if item.kind != "search":
+                # a write arrived: close this batch, apply the write next
+                self._pending.append(item)
                 break
             batch.append(item)
         return batch
@@ -143,7 +216,7 @@ class BatchingEngine:
             return
         with self._q.mutex:
             snapshot = [r.payload for r in self._q.queue
-                        if r is not _SHUTDOWN]
+                        if r is not _SHUTDOWN and r.kind == "search"]
         if not snapshot:
             return
         try:
@@ -163,13 +236,54 @@ class BatchingEngine:
             except queue.Full:
                 pass
 
+    def _apply_writes(self, batch: list[Request]) -> None:
+        """Hand a run of write requests to the handler *between* batches —
+        the only place the index may mutate or swap epochs, so no search
+        batch ever straddles one. Per-op results may be exceptions (a
+        handler like ``EpochHandle.apply_writes`` isolates op failures so an
+        already-applied write is never reported as failed); a handler-level
+        exception fails the whole run. Either way the worker survives and
+        each request's wait() returns or re-raises accordingly."""
+        ops = [(r.kind, r.payload) for r in batch]
+        results = None
+        err = None
+        try:
+            results = self.write_handler(ops)
+            if results is not None:
+                # normalise inside the try: a generator / wrong-length
+                # return is a handler bug to report, never a dead worker
+                # or a silent result=None for every waiter
+                results = list(results)
+                if len(results) != len(batch):
+                    raise RuntimeError(
+                        f"write_handler returned {len(results)} results "
+                        f"for {len(batch)} ops"
+                    )
+        except BaseException as e:  # noqa: BLE001 — reported via wait()
+            err = e
+        for i, r in enumerate(batch):
+            if err is not None:
+                r.error = err
+            elif results is not None:
+                if isinstance(results[i], BaseException):
+                    r.error = results[i]
+                else:
+                    r.result = results[i]
+            r._event.set()
+        self.stats["writes"] += len(batch)
+        self.stats["write_batches"] += 1
+
     def _worker(self):
         # After close() the worker drains requests already enqueued (they
         # hold waiting callers) before exiting; _take_batch cannot block
         # here because a non-empty queue returns promptly.
-        while not self._stop.is_set() or not self._q.empty():
+        while (not self._stop.is_set() or not self._q.empty()
+               or self._pending):
             batch = self._take_batch()
             if not batch:
+                continue
+            if batch[0].kind != "search":
+                self._apply_writes(batch)
                 continue
             if self._prefetch_q is not None:
                 self._kick_prefetch()
@@ -177,7 +291,19 @@ class BatchingEngine:
             pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
             rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
             stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
-            results = self.handler(stacked, n)
+            try:
+                results = self.handler(stacked, n)
+            except BaseException as e:  # noqa: BLE001 — a handler failure
+                # fails this batch (each wait() re-raises), never the worker:
+                # a dead worker would silently hang every queued and future
+                # request until TimeoutError
+                for r in batch:
+                    r.error = e
+                    r._event.set()
+                self.stats["batches"] += 1
+                self.stats["requests"] += n
+                self.stats["occupancy_sum"] += n / self.batch_size
+                continue
             for i, r in enumerate(batch):
                 r.result = jax.tree.map(lambda a: np.asarray(a)[i], results)
                 r._event.set()

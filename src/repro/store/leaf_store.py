@@ -76,6 +76,21 @@ def dequantize(codes: Array, scales: Array, block: int) -> Array:
     return codes.astype(jnp.float32) * jnp.take(scales, rows)[:, None]
 
 
+def _exact_backing(pts: np.ndarray, path: Optional[str]):
+    """Back an exact fp32 payload: raw-bytes file + read-only memmap when
+    ``path`` is given (the out-of-core form), the host array otherwise.
+    Shared by :meth:`LeafStore.create` and :meth:`LeafStore.rebuild` so the
+    on-disk format cannot drift between build-time and compaction-time
+    files."""
+    if path is None:
+        return pts
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(pts.tobytes())
+    return np.memmap(path, dtype=np.float32, mode="r", shape=pts.shape)
+
+
 class ExactSource:
     """Out-of-core exact fp32 payload: granule-wise fetch + LRU cache.
 
@@ -101,6 +116,11 @@ class ExactSource:
     @property
     def on_disk(self) -> bool:
         return isinstance(self._arr, np.memmap)
+
+    @property
+    def path(self) -> Optional[str]:
+        """Backing file of a memmapped source (None for host arrays)."""
+        return os.fspath(self._arr.filename) if self.on_disk else None
 
     @property
     def nbytes(self) -> int:
@@ -159,6 +179,7 @@ class LeafStore:
     codes: Optional[Array]  # [n, d] int8/fp16 on device; None for fp32
     scales: Optional[Array]  # [nb] f32 per-block scales; None for fp32
     exact: ExactSource  # exact fp32 payload (host or memmap)
+    last_rebuild: Optional[dict] = None  # ``rebuild`` diagnostics
 
     @classmethod
     def create(
@@ -179,21 +200,73 @@ class LeafStore:
         if backend not in BACKENDS:
             raise ValueError(f"unknown store backend {backend!r}; use {BACKENDS}")
         pts = np.asarray(points, np.float32)
-        if path is not None:
-            d = os.path.dirname(os.path.abspath(path)) or "."
-            os.makedirs(d, exist_ok=True)
-            with open(path, "wb") as f:
-                f.write(pts.tobytes())
-            arr = np.memmap(path, dtype=np.float32, mode="r", shape=pts.shape)
-        else:
-            arr = pts
-        exact = ExactSource(arr, block, cache_granules=cache_granules)
+        exact = ExactSource(_exact_backing(pts, path), block,
+                            cache_granules=cache_granules)
         if backend == "fp32":
             return cls(backend=backend, block=block, codes=None, scales=None,
                        exact=exact)
         codes, scales = quantize(pts, backend, block)
         return cls(backend=backend, block=block, codes=codes, scales=scales,
                    exact=exact)
+
+    def rebuild(
+        self,
+        points,
+        changed,
+        *,
+        path: Optional[str] = None,
+        cache_granules: int = 256,
+    ) -> "LeafStore":
+        """Re-create the store over an updated payload (epoch-swap
+        compaction, DESIGN.md §3.7), re-quantising only the blocks that
+        overlap changed rows.
+
+        ``points``: the new leaf payload ``[n', d]`` (rows may have been
+        appended — payload append rides the same path). ``changed``:
+        bool[n'] marking rows whose content or position differs from the
+        old payload; blocks consisting purely of unchanged rows reuse the
+        resident codes + scales verbatim (quantisation is per ``block`` of
+        rows, so an untouched block is bit-stable). ``path`` backs the new
+        epoch's exact payload with a fresh memmap file — never reuse the
+        old epoch's file: RCU readers may still be fetching granules from
+        it.
+        """
+        pts = np.asarray(points, np.float32)
+        n, d = pts.shape
+        changed = np.asarray(changed, bool)
+        if changed.shape != (n,):
+            raise ValueError(f"changed mask shape {changed.shape} != ({n},)")
+        exact = ExactSource(_exact_backing(pts, path), self.block,
+                            cache_granules=cache_granules)
+        if self.backend == "fp32":
+            return LeafStore(backend=self.backend, block=self.block,
+                             codes=None, scales=None, exact=exact)
+        block = self.block
+        nb = -(-n // block)
+        old_codes = np.asarray(self.codes)
+        old_scales = np.asarray(self.scales)
+        codes_out = np.zeros((n, d), old_codes.dtype)
+        scales_out = np.ones(nb, np.float32)
+        requant = 0
+        for b in range(nb):
+            lo, hi = b * block, min((b + 1) * block, n)
+            # reusable only if the old block held the identical row range
+            # (the per-block scale covers exactly these rows) and none of
+            # them changed
+            hi_old = min((b + 1) * block, self.n)
+            if hi_old == hi and not changed[lo:hi].any():
+                codes_out[lo:hi] = old_codes[lo:hi]
+                scales_out[b] = old_scales[b]
+                continue
+            c, s = quantize(pts[lo:hi], self.backend, block)
+            codes_out[lo:hi] = np.asarray(c)
+            scales_out[b] = float(np.asarray(s)[0])
+            requant += 1
+        store = LeafStore(backend=self.backend, block=block,
+                          codes=jnp.asarray(codes_out),
+                          scales=jnp.asarray(scales_out), exact=exact)
+        store.last_rebuild = dict(blocks=nb, requantized=requant)
+        return store
 
     # -- geometry / accounting ------------------------------------------------
 

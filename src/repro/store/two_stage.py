@@ -71,6 +71,7 @@ def search_two_stage(
     leaf_radius_filter: bool = False,
     kernel: Optional[kops.KernelConfig] = None,
     prefetch: bool = True,
+    slot_valid=None,
 ) -> SearchResult:
     """Two-stage NSA over a tiered leaf store. ``Q``: [B, d] (or [d]).
 
@@ -84,6 +85,10 @@ def search_two_stage(
         bit-identical to ``search_beam``).
       prefetch: overlap stage 1 with warming the granule cache for the
         candidate rows.
+      slot_valid: optional bool[n_0] tombstone mask over leaf slots
+        (DESIGN.md §3.7). Deleted slots rank ``BIG`` in the quantised scan,
+        so they never reach (or survive) the exact rerank; the ∞/fp32
+        fallback threads the same mask through ``search_beam``.
     """
     dist = dist_lib.get(dist)
     kernel = kernel or kops.DEFAULT
@@ -115,6 +120,7 @@ def search_two_stage(
             full, Qb, dist=dist, k=k, r=r, beam=beam,
             max_children=tuple(max_children),
             leaf_radius_filter=leaf_radius_filter, kernel=kernel,
+            slot_valid=slot_valid,
         )
         return jax.tree.map(lambda a: a[0], res) if squeeze else res
 
@@ -141,7 +147,8 @@ def search_two_stage(
 
     d_scan, slot = kops.scan_quantized(
         Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
-        k=R, block=store.block, bq=kernel.bq, bn=kernel.bn,
+        k=R, block=store.block, slot_valid=slot_valid,
+        bq=kernel.bq, bn=kernel.bn,
         force_pallas=kernel.force_pallas,
     )
     surv_idx = jnp.take_along_axis(cand_idx, slot, axis=1)  # [B, R]

@@ -119,3 +119,117 @@ def test_pairwise_chunked_matches():
         chunked = dl.pairwise_chunked(name, X, Y, chunk=128)
         np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Registration lifecycle (re-import safety) + persistence identity
+# ---------------------------------------------------------------------------
+
+
+def test_register_identical_entry_is_idempotent():
+    """Re-registering a structurally identical entry (module re-import,
+    pytest --forked, notebook kernel restarts) must be a no-op."""
+    euclid = dl.get("euclidean")
+    clone = dl.Distance(
+        name="euclidean",
+        point=euclid.point,
+        pairwise=euclid.pairwise,
+        gram_form=True,
+    )
+    assert dl.register(clone) is euclid  # the registry keeps its entry
+    assert dl.get("euclidean") is euclid
+
+
+def test_register_conflicting_entry_raises_and_overwrite_escapes():
+    probe = dl.Distance(
+        name="_test_probe", point=lambda x, y: jnp.float32(0.0),
+        pairwise=lambda X, Y: jnp.zeros((X.shape[0], Y.shape[0])),
+    )
+    try:
+        dl.register(probe)
+        other = dl.Distance(
+            name="_test_probe", point=lambda x, y: jnp.float32(1.0),
+            pairwise=lambda X, Y: jnp.ones((X.shape[0], Y.shape[0])),
+        )
+        with pytest.raises(ValueError, match="different definition"):
+            dl.register(other)
+        assert dl.register(other, overwrite=True) is other
+        assert dl.get("_test_probe") is other
+    finally:
+        dl._REGISTRY.pop("_test_probe", None)
+
+
+def test_distance_name_roundtrips_through_persistence(tmp_path):
+    """save/load carries the distance *name*; the loaded index resolves it
+    back to the live registry entry."""
+    from repro.core.index import PDASCIndex
+
+    data = np.random.default_rng(0).normal(size=(96, 6)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=16, distance="cosine",
+                           radius_quantile=0.9)
+    p = str(tmp_path / "cosidx")
+    idx.save(p)
+    back = PDASCIndex.load(p)
+    assert back.distance is dl.get("cosine")
+    q = data[:4]
+    np.testing.assert_array_equal(
+        np.asarray(idx.search(q, k=5).ids), np.asarray(back.search(q, k=5).ids)
+    )
+
+
+def test_adhoc_distance_save_raises_clearly(tmp_path):
+    """An unregistered ad-hoc distance must fail at save() with guidance —
+    not as a KeyError surprise at load time."""
+    from repro.core.index import PDASCIndex
+
+    data = np.random.default_rng(0).normal(size=(96, 6)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=16, distance=dl.minkowski(2.5),
+                           radius_quantile=0.9)
+    with pytest.raises(ValueError, match="not in the registry"):
+        idx.save(str(tmp_path / "adhoc"))
+    # registering it makes the same index saveable and round-trippable
+    try:
+        dl.register(idx.distance)
+        idx.save(str(tmp_path / "adhoc"))
+        back = PDASCIndex.load(str(tmp_path / "adhoc"))
+        assert back.distance.name == "minkowski_2.5"
+    finally:
+        dl._REGISTRY.pop("minkowski_2.5", None)
+
+
+def test_register_closure_factory_with_different_captures_raises():
+    """Two closures from the same source line capturing different values
+    are different distances — structural identity must see the cells."""
+
+    def factory(w):
+        return dl.Distance(
+            name="_test_weighted",
+            point=lambda x, y: w * jnp.sum(jnp.abs(x - y), axis=-1),
+            pairwise=lambda X, Y: w * jnp.sum(
+                jnp.abs(X[:, None, :] - Y[None, :, :]), axis=-1
+            ),
+            is_metric=False,
+        )
+
+    try:
+        first = dl.register(factory(1.0))
+        # identical capture: idempotent (the module re-import case)
+        assert dl.register(factory(1.0)) is first
+        with pytest.raises(ValueError, match="different definition"):
+            dl.register(factory(2.0))
+    finally:
+        dl._REGISTRY.pop("_test_weighted", None)
+
+
+def test_reimport_of_builtin_registry_is_idempotent():
+    """A fresh import of the distances module (new function objects,
+    including the closure-based haversine/jaccard pairwise) must re-register
+    every builtin without error."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "repro.core.distances", dl.__file__
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)  # module body re-runs every register()
+    assert set(mod.names()) == set(dl.names())

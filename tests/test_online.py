@@ -1,0 +1,643 @@
+"""Online mutability substrate guards (DESIGN.md §3.7).
+
+The three acceptance properties of ISSUE 4:
+
+(a) deleted ids never appear in results, for every search mode
+    (dense / beam / two_stage locally, sharded in a fake-device subprocess)
+    — seeded sweeps plus a hypothesis property test;
+(b) after interleaved upserts/deletes, recall@10 vs a from-scratch rebuild
+    on the live set degrades <= 0.02 pre-compaction, and compaction restores
+    *identical result sets* with the from-scratch build;
+(c) epoch swaps under a concurrent ``BatchingEngine`` search stream never
+    produce a torn (mixed-epoch) result — a sentinel point upserted into the
+    delta tier must stay visible through every compaction swap, because the
+    swap is one atomic reference assignment (the delta is never cleared
+    before its points are resident in the new epoch).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from conftest import run_in_devices
+
+from repro.core import distances as dist_lib
+from repro.core.index import PDASCIndex
+from repro.online import EpochHandle, live_dataset, merge_topk
+from repro.serving import BatchingEngine
+
+RNG = np.random.default_rng(7)
+
+
+def _mk_index(n=400, d=8, gl=64, store=None, seed=0, store_block=64, **kw):
+    data = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=gl, distance="euclidean",
+                           radius_quantile=0.9, store=store,
+                           store_block=store_block, **kw)
+    return data, idx
+
+
+def _ids_of(res):
+    return np.asarray(res.ids)
+
+
+def _brute_topk(Q, vecs, ids, k):
+    D = np.linalg.norm(Q[:, None, :] - vecs[None, :, :], axis=-1)
+    order = np.argsort(D, axis=1)[:, :k]
+    return ids[order]
+
+
+# ---------------------------------------------------------------------------
+# (a) deleted ids vanish from every mode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dense", "beam", "two_stage"])
+def test_deleted_ids_never_returned(mode):
+    data, idx = _mk_index(store="int8" if mode == "two_stage" else None)
+    dead = RNG.choice(400, size=60, replace=False)
+    removed = idx.delete(dead)
+    assert removed == 60
+    q = data[RNG.choice(400, size=16, replace=False)]
+    res = idx.search(q, k=10, mode=mode, beam=16, rerank_width=16)
+    assert not (set(dead.tolist()) & set(_ids_of(res).ravel().tolist()))
+
+
+def test_masked_dense_equals_bruteforce_over_live_set():
+    """With a huge radius the masked dense mode is exact over the live set —
+    the strongest form of 'deleted ids vanish'."""
+    data, idx = _mk_index()
+    dead = RNG.choice(400, size=100, replace=False)
+    idx.delete(dead)
+    alive = np.setdiff1d(np.arange(400), dead)
+    q = RNG.normal(size=(8, 8)).astype(np.float32)
+    res = idx.search(q, k=10, mode="dense", r=1e9)
+    gt = _brute_topk(q, data[alive], alive, 10)
+    np.testing.assert_array_equal(
+        np.sort(_ids_of(res), axis=1), np.sort(gt, axis=1)
+    )
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**16),
+    n_dead=st.integers(1, 80),
+    mode=st.sampled_from(["dense", "beam", "two_stage"]),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_property_deleted_ids_never_returned(seed, n_dead, mode):
+    data, idx = _mk_index(n=256, gl=32,
+                          store="int8" if mode == "two_stage" else None)
+    rng = np.random.default_rng(seed)
+    dead = rng.choice(256, size=n_dead, replace=False)
+    idx.delete(dead)
+    q = data[rng.choice(256, size=8, replace=False)]
+    res = idx.search(q, k=10, mode=mode, beam=8, rerank_width=16)
+    assert not (set(dead.tolist()) & set(_ids_of(res).ravel().tolist()))
+
+
+def test_deleted_ids_never_returned_sharded():
+    """(a) for the sharded path: per-shard tombstone masks routed by id."""
+    out = run_in_devices("""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import distributed as dd
+
+P = 4
+n, d, per = 512, 8, 128
+data = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+mesh = Mesh(np.array(jax.devices()[:P]), ("data",))
+sharded = dd.build_sharded(data, mesh, gl=32, distance="euclidean",
+                           group_chunk=0)
+dead = np.random.default_rng(1).choice(n, size=64, replace=False)
+routed = dd.route_writes(dead, P, per)
+leaf_ids = np.asarray(sharded.leaf_ids)
+sv = np.ones(leaf_ids.shape, bool)
+for shard, rows in routed:
+    sv[shard] = dd.local_slot_valid(leaf_ids[shard], rows)
+q = data[:16]
+res = dd.search_sharded(sharded, q, mesh, dist="euclidean", k=10, r=1e9,
+                        mode="dense", slot_valid=jnp.asarray(sv))
+ids = np.asarray(res.ids)
+assert not (set(dead.tolist()) & set(ids.ravel().tolist())), "deleted id returned"
+# exactness: big radius ==> brute force over the live rows
+alive = np.setdiff1d(np.arange(n), dead)
+D = np.linalg.norm(q[:, None, :] - data[None, alive, :], axis=-1)
+gt = alive[np.argsort(D, axis=1)[:, :10]]
+assert np.array_equal(np.sort(ids, 1), np.sort(gt, 1)), "sharded masked != brute force"
+print("SHARDED_OK")
+""", n_devices=4)
+    assert "SHARDED_OK" in out
+
+
+def test_route_writes_bounds():
+    from repro.core import distributed as dd
+
+    routed = dd.route_writes([0, 127, 128, 300], 4, 128)
+    got = {s: rows.tolist() for s, rows in routed}
+    assert got == {0: [0, 127], 1: [0], 2: [44]}
+    with pytest.raises(ValueError):
+        dd.route_writes([512], 4, 128)
+
+
+# ---------------------------------------------------------------------------
+# upsert semantics
+# ---------------------------------------------------------------------------
+
+
+def test_upsert_immediately_visible_all_modes():
+    data, idx = _mk_index(store="int8")
+    # five well-separated points far from the data cloud
+    new = (40.0 + 5.0 * np.arange(5, dtype=np.float32)[:, None]
+           + np.zeros((5, 8), np.float32))
+    ids = idx.upsert(new)
+    assert ids.tolist() == [400, 401, 402, 403, 404]
+    for mode in ("dense", "beam", "two_stage"):
+        res = idx.search(new, k=3, mode=mode, r=1e9, beam=16, rerank_width=8)
+        assert _ids_of(res)[:, 0].tolist() == ids.tolist(), mode
+        # delta distances are exact (brute-force scan), self-distance == 0
+        assert np.allclose(np.asarray(res.dists)[:, 0], 0.0, atol=1e-5)
+
+
+def test_upsert_replaces_existing_id():
+    data, idx = _mk_index()
+    moved = np.full((1, 8), 25.0, np.float32)
+    idx.upsert(moved, ids=[7])
+    # old location: id 7 must not surface there any more
+    res_old = idx.search(data[7][None], k=10, r=1e9)
+    assert 7 not in _ids_of(res_old).ravel().tolist()
+    res_new = idx.search(moved, k=1, r=1e9)
+    assert _ids_of(res_new).ravel()[0] == 7
+    # re-upserting the same id again retires the buffered copy too
+    moved2 = np.full((1, 8), -25.0, np.float32)
+    idx.upsert(moved2, ids=[7])
+    res3 = idx.search(moved, k=1, r=1e9)
+    assert _ids_of(res3).ravel()[0] != 7
+    assert idx.n_points == 400  # replace never grows the live count
+
+
+def test_delete_then_upsert_and_delta_delete():
+    data, idx = _mk_index()
+    assert idx.delete([3, 3, 9999]) == 1  # dupes/unknown are no-ops
+    ids = idx.upsert(RNG.normal(size=(2, 8)).astype(np.float32))
+    assert idx.delete(ids) == 2
+    res = idx.search(data[:4], k=10, r=1e9)
+    got = set(_ids_of(res).ravel().tolist())
+    assert 3 not in got and not (set(ids.tolist()) & got)
+
+
+def test_merge_topk_pads_small_pools():
+    d, i = merge_topk(
+        jnp.asarray([[1.0, 3.0]]), jnp.asarray([[10, 30]]),
+        jnp.asarray([[2.0]]), jnp.asarray([[20]]), k=5,
+    )
+    assert np.asarray(i)[0, :3].tolist() == [10, 20, 30]
+    assert np.asarray(i)[0, 3:].tolist() == [-1, -1]
+
+
+# ---------------------------------------------------------------------------
+# validation satellites
+# ---------------------------------------------------------------------------
+
+
+def test_build_validates_needs_dim_and_finiteness():
+    pts3 = np.zeros((64, 3), np.float32)
+    with pytest.raises(ValueError, match="haversine.*d=2"):
+        PDASCIndex.build(pts3, gl=16, distance="haversine")
+    bad = np.zeros((64, 4), np.float32)
+    bad[5, 2] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        PDASCIndex.build(bad, gl=16, distance="euclidean")
+
+
+def test_upsert_validates_inputs():
+    pts2 = np.random.default_rng(0).uniform(-1, 1, (64, 2)).astype(np.float32)
+    idx = PDASCIndex.build(pts2, gl=16, distance="haversine",
+                           radius_quantile=0.9)
+    with pytest.raises(ValueError, match="haversine.*d=2"):
+        idx.upsert(np.zeros((1, 3), np.float32))
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.upsert(np.array([[np.inf, 0.0]], np.float32))
+    with pytest.raises(ValueError, match="duplicate ids"):
+        idx.upsert(np.zeros((2, 2), np.float32), ids=[5, 5])
+
+
+def test_delta_capacity_bound():
+    data, idx = _mk_index(n=128, gl=32)
+    idx.enable_mutations(delta_capacity=4)
+    idx.upsert(RNG.normal(size=(3, 8)).astype(np.float32))
+    with pytest.raises(RuntimeError, match="delta buffer full"):
+        idx.upsert(RNG.normal(size=(2, 8)).astype(np.float32))
+    assert idx.needs_compaction()  # fill ratio crossed the default trigger
+    idx2 = idx.compact()
+    assert idx2.delta.free == idx2.delta.capacity == 4
+    idx2.upsert(RNG.normal(size=(2, 8)).astype(np.float32))  # room again
+
+
+# ---------------------------------------------------------------------------
+# (b) churn recall + compaction parity
+# ---------------------------------------------------------------------------
+
+
+def _interleaved_churn(idx, data, n_ops, rng, upsert_frac=0.65):
+    live_extra = []
+    for _ in range(n_ops):
+        if rng.random() < upsert_frac or idx.n_points < 50:
+            v = data[rng.integers(len(data))] + rng.normal(
+                0, 0.05, data.shape[1]
+            ).astype(np.float32)
+            live_extra.extend(idx.upsert(v[None]).tolist())
+        else:
+            resident = np.asarray(idx.data.leaf_ids)
+            resident = resident[resident >= 0]
+            victim = (live_extra.pop() if live_extra and rng.random() < 0.5
+                      else int(resident[rng.integers(len(resident))]))
+            idx.delete([victim])
+
+
+def test_churn_recall_and_compaction_parity():
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(1200, 16)).astype(np.float32)
+    queries = rng.normal(size=(64, 16)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=64, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.enable_mutations(delta_capacity=512)
+    _interleaved_churn(idx, data, n_ops=150, rng=rng)
+
+    live_vecs, live_ids = live_dataset(idx)
+    gt = _brute_topk(queries, live_vecs, live_ids, 10)
+    fresh = PDASCIndex.build(live_vecs, gl=64, distance="euclidean",
+                             radius_quantile=0.9)
+
+    def recall(ids, gt):
+        return np.mean([
+            len(set(r[r >= 0].tolist()) & set(g.tolist())) / 10
+            for r, g in zip(ids, gt)
+        ])
+
+    r = idx.default_radius
+    res_mut = idx.search(queries, k=10, mode="beam", beam=16, r=r)
+    res_fresh = fresh.search(queries, k=10, mode="beam", beam=16, r=r)
+    rec_mut = recall(_ids_of(res_mut), gt)
+    rf = _ids_of(res_fresh)  # rows into live_vecs -> original ids
+    rf_mapped = np.where(
+        rf >= 0, live_ids[np.clip(rf, 0, len(live_ids) - 1)], -1
+    )
+    rec_fresh = recall(rf_mapped, gt)
+    assert rec_mut >= rec_fresh - 0.02, (rec_mut, rec_fresh)
+
+    # compaction parity: exact (full) search over the compacted index and
+    # over the from-scratch build return identical result sets
+    comp = idx.compact(scope="affected")
+    assert comp.epoch == idx.epoch + 1
+    assert comp.delta.n_active == 0 and comp.tombstones.count == 0
+    assert comp.n_points == len(live_ids)
+    res_c = comp.search(queries, k=10, mode="dense", r=1e9)
+    np.testing.assert_array_equal(np.sort(_ids_of(res_c), axis=1),
+                                  np.sort(gt, axis=1))
+    # and the recall at serving beam does not degrade vs the fresh build
+    res_cb = comp.search(queries, k=10, mode="beam", beam=16, r=r)
+    assert recall(_ids_of(res_cb), gt) >= rec_fresh - 0.02
+
+
+def test_compaction_spill_and_empty_groups():
+    """Arrivals overflowing their routed group spill into appended groups;
+    fully-deleted groups compact away cleanly."""
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(128, 8)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=32, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.enable_mutations(delta_capacity=256)
+    # kill group 0 entirely (slots 0..31 hold some padding-free residents)
+    slot_ids = np.asarray(idx.data.leaf_ids)[:32]
+    idx.delete(slot_ids[slot_ids >= 0])
+    # flood one corner of space so one group overflows into spill groups
+    flood = rng.normal(0, 0.01, size=(80, 8)).astype(np.float32) + 10.0
+    ids = idx.upsert(flood)
+    comp = idx.compact(scope="affected")
+    lv, li = live_dataset(idx)
+    assert comp.n_points == len(li)
+    # spill really happened: the leaf level grew beyond the original slots
+    assert comp.data.levels[0].points.shape[0] > 128
+    # every live point is present exactly once in the compacted leaf level
+    leaf_ids_c = np.asarray(comp.data.leaf_ids)
+    live_c = leaf_ids_c[np.asarray(comp.data.levels[0].valid)]
+    assert sorted(live_c.tolist()) == sorted(li.tolist())
+    # queries inside the flood cloud resolve to flood ids only (the flood
+    # points are near-coincident, so id-exact comparison against a float64
+    # oracle would be a float32 tie-ordering lottery — subset is the stable
+    # property), and the killed ids stay gone
+    q = flood[:8]
+    res = comp.search(q, k=5, mode="dense", r=1e9)
+    got = set(_ids_of(res).ravel().tolist())
+    assert got <= set(ids.tolist())
+    assert not (set(slot_ids.tolist()) & got)
+
+
+def test_compaction_partial_requant_reuses_frozen_blocks():
+    data, idx = _mk_index(n=512, gl=64, store="int8")
+    # touch exactly one group: delete a single resident
+    idx.delete([int(np.asarray(idx.data.leaf_ids)[0])])
+    comp = idx.compact(scope="affected")
+    st = comp.store.last_rebuild
+    assert st is not None and st["requantized"] < st["blocks"]
+    # full scope requantises everything
+    idx2 = _mk_index(n=512, gl=64, store="int8")[1]
+    idx2.delete([int(np.asarray(idx2.data.leaf_ids)[0])])
+    comp2 = idx2.compact(scope="full")
+    st2 = comp2.store.last_rebuild
+    assert st2["requantized"] == st2["blocks"]
+
+
+def test_compact_full_matches_affected_result_sets():
+    rng = np.random.default_rng(11)
+    data = rng.normal(size=(600, 8)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=64, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.upsert(rng.normal(size=(20, 8)).astype(np.float32))
+    idx.delete(rng.choice(600, 40, replace=False))
+    a = idx.compact(scope="affected")
+    f = idx.compact(scope="full")
+    q = rng.normal(size=(16, 8)).astype(np.float32)
+    ra = a.search(q, k=10, mode="dense", r=1e9)
+    rf = f.search(q, k=10, mode="dense", r=1e9)
+    np.testing.assert_array_equal(np.sort(_ids_of(ra), 1),
+                                  np.sort(_ids_of(rf), 1))
+
+
+def test_memory_bytes_reports_online_tiers():
+    data, idx = _mk_index()
+    m0 = idx.memory_bytes()
+    assert m0["delta"] == 0 and m0["tombstones"] == 0
+    idx.enable_mutations(delta_capacity=100)
+    m1 = idx.memory_bytes()
+    assert m1["delta"] >= 100 * 8 * 4  # capacity x d fp32 at minimum
+    assert m1["tombstones"] >= idx.data.levels[0].points.shape[0] // 8
+    assert m1["total_resident"] == (m1["navigation"] + m1["payload"]
+                                    + m1["delta"] + m1["tombstones"])
+
+
+def test_save_load_v3_roundtrip(tmp_path):
+    data, idx = _mk_index()
+    new = RNG.normal(size=(4, 8)).astype(np.float32) + 30.0
+    ids = idx.upsert(new)
+    idx.delete([1, 2, 3])
+    p = str(tmp_path / "idx")
+    idx.save(p)
+    import json
+    assert json.load(open(p + ".json"))["version"] == 3
+    back = PDASCIndex.load(p)
+    assert back.epoch == idx.epoch
+    assert back.delta.n_active == idx.delta.n_active
+    assert back.tombstones.count == idx.tombstones.count
+    q = np.concatenate([data[:4], new], axis=0)
+    ra = idx.search(q, k=10, r=1e9)
+    rb = back.search(q, k=10, r=1e9)
+    np.testing.assert_array_equal(_ids_of(ra), _ids_of(rb))
+    comp = back.compact()  # a loaded mid-epoch index compacts fine
+    assert comp.n_points == back.n_points
+
+
+def test_frozen_index_still_saves_v2(tmp_path):
+    data, idx = _mk_index(n=128, gl=32)
+    p = str(tmp_path / "idx")
+    idx.save(p)
+    import json
+    assert json.load(open(p + ".json"))["version"] == 2
+
+
+# ---------------------------------------------------------------------------
+# (c) epoch swap under a concurrent search stream — no torn results
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_swap_never_tears_under_concurrent_stream():
+    import threading
+
+    rng = np.random.default_rng(13)
+    data = rng.normal(size=(300, 8)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=32, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.enable_mutations(delta_capacity=24)
+    handle = EpochHandle(idx, delta_fill=0.5, tombstone_ratio=0.1,
+                         scope="affected")
+
+    sentinel = np.full((1, 8), 50.0, np.float32)
+    sid = int(idx.upsert(sentinel)[0])  # lives in the delta tier initially
+
+    def handler(batch, n_valid):
+        cur = handle.current  # ONE snapshot per batch
+        res = cur.search(jnp.asarray(batch), k=3, mode="dense", r=1e9)
+        return res.dists, res.ids
+
+    engine = BatchingEngine(handler, batch_size=4, max_wait_ms=1.0,
+                            pad_payload=np.zeros(8, np.float32),
+                            write_handler=handle.apply_writes)
+    try:
+        engine.submit(sentinel[0]).wait(timeout=120)  # warmup compile
+
+        failures = []
+        done = threading.Event()
+
+        def searcher():
+            while not done.is_set():
+                req = engine.submit(sentinel[0])
+                _, ids = req.wait(timeout=60)
+                if int(np.asarray(ids)[0]) != sid:
+                    failures.append(np.asarray(ids).tolist())
+                    return
+
+        threads = [threading.Thread(target=searcher) for _ in range(2)]
+        for t in threads:
+            t.start()
+        # write pressure: repeatedly cross the compaction thresholds so the
+        # handle swaps epochs several times mid-stream
+        upserted = []
+        for i in range(60):
+            if upserted and i % 3 == 0:
+                engine.submit_delete(np.array([upserted.pop(0)]))
+            else:
+                v = data[rng.integers(300)] + rng.normal(0, 0.05, 8).astype(
+                    np.float32
+                )
+                r = engine.submit_upsert(v)
+                upserted.extend(int(x) for x in r.wait(timeout=60))
+        done.set()
+        for t in threads:
+            t.join(timeout=60)
+    finally:
+        done.set()
+        engine.close()
+    assert not failures, f"torn result: sentinel {sid} missing in {failures}"
+    assert handle.swaps >= 1, "test never exercised an epoch swap"
+    # the sentinel survived every compaction into the resident tier
+    final = handle.current
+    res = final.search(sentinel, k=1, mode="dense", r=1e9)
+    assert int(_ids_of(res).ravel()[0]) == sid
+
+
+def test_engine_write_ordering_read_your_writes():
+    """A search submitted after a write must observe it (FIFO: the write
+    batch applies before the later search batch)."""
+    rng = np.random.default_rng(17)
+    data = rng.normal(size=(128, 8)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=32, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.enable_mutations(delta_capacity=64)
+    handle = EpochHandle(idx)
+
+    def handler(batch, n_valid):
+        res = handle.current.search(jnp.asarray(batch), k=1, mode="dense",
+                                    r=1e9)
+        return res.ids
+
+    engine = BatchingEngine(handler, batch_size=2, max_wait_ms=1.0,
+                            pad_payload=np.zeros(8, np.float32),
+                            write_handler=handle.apply_writes)
+    try:
+        target = np.full((8,), -60.0, np.float32)
+        engine.submit(target).wait(timeout=120)  # warmup
+        w = engine.submit_upsert(target)
+        s = engine.submit(target)
+        new_id = int(w.wait(timeout=60)[0])
+        got = int(np.asarray(s.wait(timeout=60)).ravel()[0])
+        assert got == new_id
+    finally:
+        engine.close()
+
+
+def test_engine_rejects_writes_without_handler():
+    engine = BatchingEngine(lambda b, n: b, batch_size=2)
+    try:
+        with pytest.raises(RuntimeError, match="write_handler"):
+            engine.submit_upsert(np.zeros(4))
+        with pytest.raises(RuntimeError, match="write_handler"):
+            engine.submit_delete([1])
+    finally:
+        engine.close()
+
+
+def test_engine_write_errors_surface_on_wait():
+    idx = _mk_index(n=128, gl=32)[1]
+    idx.enable_mutations(delta_capacity=64)
+    handle = EpochHandle(idx)
+
+    engine = BatchingEngine(lambda b, n: b, batch_size=2,
+                            write_handler=handle.apply_writes)
+    try:
+        bad = engine.submit_upsert(np.array([[np.nan] * 8], np.float32))
+        with pytest.raises(ValueError, match="non-finite"):
+            bad.wait(timeout=60)
+        # the worker survives a failed write: later writes still apply
+        ok = engine.submit_upsert(np.ones((1, 8), np.float32))
+        assert len(ok.wait(timeout=60)) == 1
+    finally:
+        engine.close()
+
+
+def test_compaction_preserves_released_memmap_payload(tmp_path):
+    """Epoch swap must not silently rehydrate the out-of-core payload: the
+    new epoch gets a fresh per-epoch memmap file (never the old epoch's,
+    whose granules RCU readers may still fetch) and stays released."""
+    rng = np.random.default_rng(23)
+    data = rng.normal(size=(256, 8)).astype(np.float32)
+    path = str(tmp_path / "payload.bin")
+    idx = PDASCIndex.build(data, gl=32, distance="euclidean",
+                           radius_quantile=0.9, store="int8",
+                           store_block=64, store_path=path)
+    idx.release_dense_payload()
+    far = np.stack([np.full(8, 30.0, np.float32),
+                    np.full(8, 36.0, np.float32)])
+    ids = idx.upsert(far)
+    idx.delete([5])
+    comp = idx.compact(scope="affected")
+    assert comp.store.exact.on_disk
+    assert comp.store.exact.path != idx.store.exact.path
+    assert comp.store.exact.path.endswith(".epoch1")
+    assert comp._payload_released  # memory budget survives the swap
+    assert comp.memory_bytes()["out_of_core"] > 0
+    res = comp.search(far, k=3, mode="two_stage", beam=16, rerank_width=8)
+    assert _ids_of(res)[:, 0].tolist() == ids.tolist()
+    assert 5 not in set(_ids_of(res).ravel().tolist())
+    # a second swap chains: .epoch2, old file untouched
+    comp.upsert(np.full((1, 8), -30.0, np.float32))
+    comp2 = comp.compact(scope="affected")
+    assert comp2.store.exact.path.endswith(".epoch2")
+    assert os.path.exists(idx.store.exact.path)
+
+
+def test_delta_leg_honours_leaf_radius_filter():
+    data, idx = _mk_index()
+    far = np.full((1, 8), 35.0, np.float32)
+    fid = int(idx.upsert(far)[0])
+    q = far[0] + 0.5  # within 1.5 of the upsert, far from everything else
+    res = idx.search(q[None], k=3, r=2.0, leaf_radius_filter=True)
+    assert _ids_of(res)[0, 0] == fid
+    res2 = idx.search(q[None], k=3, r=0.5, leaf_radius_filter=True)
+    assert fid not in set(_ids_of(res2).ravel().tolist())
+
+
+def test_freed_ids_never_reissued_across_compaction(tmp_path):
+    data, idx = _mk_index(n=128, gl=32)
+    a = int(idx.upsert(np.full((1, 8), 20.0, np.float32))[0])  # id 128
+    idx.delete([a])
+    comp = idx.compact()
+    b = int(comp.upsert(np.full((1, 8), 21.0, np.float32))[0])
+    assert b > a, "freed id was re-issued after compaction"
+    # and across persistence
+    p = str(tmp_path / "idx")
+    comp.delete([b])
+    comp.save(p)
+    back = PDASCIndex.load(p)
+    c = int(back.upsert(np.full((1, 8), 22.0, np.float32))[0])
+    assert c > b, "freed id was re-issued after save/load"
+
+
+def test_apply_writes_isolates_per_op_errors():
+    """One bad op in a write run must not mask the results of ops already
+    durably applied in the same run."""
+    _, idx = _mk_index(n=128, gl=32)
+    idx.enable_mutations(delta_capacity=64)
+    handle = EpochHandle(idx)
+    good = np.full((1, 8), 15.0, np.float32)
+    bad = np.array([[np.nan] * 8], np.float32)
+    out = handle.apply_writes([
+        ("upsert", good), ("upsert", bad), ("delete", np.array([0])),
+    ])
+    assert len(out) == 3
+    assert not isinstance(out[0], BaseException) and len(out[0]) == 1
+    assert isinstance(out[1], ValueError)
+    assert out[2] == 1
+    # the good upsert really is live
+    res = handle.current.search(good, k=1, r=1e9)
+    assert int(_ids_of(res).ravel()[0]) == int(out[0][0])
+
+
+def test_search_handler_failure_does_not_kill_worker():
+    """A handler exception fails that batch (wait() re-raises) and the
+    worker keeps serving — it must never die and hang the queue."""
+    calls = {"n": 0}
+
+    def handler(batch, n_valid):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient handler failure")
+        return batch
+
+    engine = BatchingEngine(handler, batch_size=2, max_wait_ms=1.0,
+                            pad_payload=np.zeros(4, np.float32))
+    try:
+        bad = engine.submit(np.ones(4, np.float32))
+        with pytest.raises(RuntimeError, match="transient"):
+            bad.wait(timeout=60)
+        ok = engine.submit(np.full(4, 2.0, np.float32))
+        np.testing.assert_array_equal(ok.wait(timeout=60),
+                                      np.full(4, 2.0, np.float32))
+    finally:
+        engine.close()
