@@ -39,6 +39,7 @@ from repro.baselines import exact_knn
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.online import live_dataset
+from repro.query import Query
 
 
 def _recall_mapped(res_ids, live_ids, gt):
@@ -66,19 +67,19 @@ def run(smoke: bool = False, seed: int = 0):
 
     # frozen-baseline search throughput, measured at the same 16-query
     # micro-batches the churn loop uses (per-dispatch overhead comparable)
-    res = idx.search(test[:16], k=k, mode="beam", beam=beam)  # compile
+    q_beam = Query(k=k, execution="beam", beam=beam)
+    res = idx.plan(q_beam)(test[:16])  # compile
     np.asarray(res.ids)
     t0 = time.perf_counter()
     for lo in range(0, n_queries, 16):
-        np.asarray(idx.search(test[lo:lo + 16], k=k, mode="beam",
-                              beam=beam).ids)
+        np.asarray(idx.plan(q_beam)(test[lo:lo + 16]).ids)
     qps_frozen = (n_queries // 16) * 16 / (time.perf_counter() - t0)
 
     # warm the churn-path executables (masked search + delta scan + merge)
     # outside the timed loop, then reset the online tiers
     warm_ids = idx.upsert(train[:1] + 0.01)
     idx.delete([int(np.asarray(idx.data.leaf_ids)[0])])
-    np.asarray(idx.search(test[:16], k=k, mode="beam", beam=beam).ids)
+    np.asarray(idx.plan(q_beam)(test[:16]).ids)
     idx.delete(warm_ids)
 
     # --- interleaved churn stream -------------------------------------------
@@ -109,7 +110,7 @@ def run(smoke: bool = False, seed: int = 0):
         if i % 8 == 0:  # interleave searches with the write stream
             qs = test[rng.integers(0, n_queries, 16)]
             t0 = time.perf_counter()
-            out = idx.search(qs, k=k, mode="beam", beam=beam)
+            out = idx.plan(q_beam)(qs)
             ids = np.asarray(out.ids)
             t_search += time.perf_counter() - t0
             searches += 16
@@ -124,11 +125,10 @@ def run(smoke: bool = False, seed: int = 0):
     gt = live_ids[np.asarray(gt_rows)]
     fresh = PDASCIndex.build(live_vecs, gl=gl, distance="euclidean",
                              radius_quantile=0.35)
-    rec_mut = _recall(np.asarray(idx.search(test, k=k, mode="beam",
-                                            beam=beam, r=r).ids), gt)
+    q_beam_r = Query(k=k, execution="beam", beam=beam, radius=float(r))
+    rec_mut = _recall(np.asarray(idx.plan(q_beam_r)(test).ids), gt)
     rec_fresh = _recall_mapped(
-        np.asarray(fresh.search(test, k=k, mode="beam", beam=beam, r=r).ids),
-        live_ids, gt,
+        np.asarray(fresh.plan(q_beam_r)(test).ids), live_ids, gt,
     )
     pre_delta = rec_fresh - rec_mut
     assert pre_delta <= 0.02, (
@@ -149,13 +149,12 @@ def run(smoke: bool = False, seed: int = 0):
     t_full = time.perf_counter() - t0
     requant = comp.store.last_rebuild if comp.store is not None else None
     # exact search over the compacted epoch == exact ground truth
-    res_c = np.asarray(comp.search(test, k=k, mode="dense", r=1e9).ids)
+    res_c = np.asarray(
+        comp.plan(Query(k=k, execution="dense", radius=1e9))(test).ids)
     np.testing.assert_array_equal(np.sort(res_c, axis=1), np.sort(gt, axis=1))
-    rec_comp = _recall(np.asarray(comp.search(test, k=k, mode="beam",
-                                              beam=beam, r=r).ids), gt)
+    rec_comp = _recall(np.asarray(comp.plan(q_beam_r)(test).ids), gt)
     rec_comp_full = _recall(
-        np.asarray(comp_full.search(test, k=k, mode="beam", beam=beam,
-                                    r=r).ids), gt,
+        np.asarray(comp_full.plan(q_beam_r)(test).ids), gt,
     )
 
     rows = [dict(

@@ -16,6 +16,7 @@ from repro.baselines import IVFFlatIndex, NNDescentIndex, exact_knn
 from repro.baselines.ivf_flat import SUPPORTED as IVF_SUPPORTED
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
+from repro.query import Query
 
 K = 10
 
@@ -62,7 +63,7 @@ def run(full: bool = False, n_queries: int = 64, seed: int = 0):
                                    radius_quantile=rq)
             t_build = time.perf_counter() - t0
             t0 = time.perf_counter()
-            res = idx.search(test, k=K, mode="dense")
+            res = idx.plan(Query(k=K, execution="dense"))(test)
             t_search = time.perf_counter() - t0
             rows.append(dict(
                 dataset=ds, distance=distance, method="pdasc",

@@ -13,6 +13,7 @@ import numpy as np
 from repro.baselines import exact_knn
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
+from repro.query import Query
 
 
 def run(seed: int = 0, n_cand: int = 20_000, d: int = 64, n_q: int = 64,
@@ -38,10 +39,11 @@ def run(seed: int = 0, n_cand: int = 20_000, d: int = 64, n_q: int = 64,
     for distance in ("cosine", "dot"):
         idx = PDASCIndex.build(cands, gl=512, distance=distance,
                                radius_quantile=0.3)
-        res = idx.search(queries, k=k, mode="dense")  # compile
+        plan = idx.plan(Query(k=k, execution="dense"))
+        res = plan(queries)  # compile
         jax.block_until_ready(res.dists)
         t0 = time.perf_counter()
-        res = idx.search(queries, k=k, mode="dense")
+        res = plan(queries)
         jax.block_until_ready(res.dists)
         dt = time.perf_counter() - t0
         ids = np.asarray(res.ids)

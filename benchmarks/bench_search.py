@@ -11,6 +11,12 @@ story is the §Roofline dry-run).
 times ``search_beam_vmap`` (the seed baseline, a vmap of scalar ``dist.point``
 gathers) against the batched ``search_beam`` (one gather + one fused
 ``ops.rank_candidates`` per level) and reports the query-throughput speedup.
+
+Every timed call goes through the query/plan layer (``idx.plan(Query(...))``
+— the serving pattern), and the per-pipeline planner counters (plan
+compiles / cache hits / replans / executions) are recorded into
+``BENCH_search.json`` so a retracing regression shows up in the perf
+trajectory.
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.kernels import ops
 from repro.kernels.ref import knn_ref, pairwise_ref
+from repro.query import Query, plan_stats, reset_plan_stats
 
 BEAMS = (4, 16, 32, 64, 128)
 
@@ -69,12 +76,13 @@ def run_beam_comparison(idx, test, gt):
     rows = []
     Q = jnp.asarray(test)
     for beam in BEAMS:
-        res_old, us_old = _timed(
-            lambda: idx.search(Q, k=10, mode="beam_vmap", beam=beam), len(test)
-        )
-        res_new, us_new = _timed(
-            lambda: idx.search(Q, k=10, mode="beam", beam=beam), len(test)
-        )
+        # resolve through the plan cache per call (the serving pattern) so
+        # the timed number includes the cache-hit lookup and the recorded
+        # plan stats show hits alongside compiles
+        q_old = Query(k=10, execution="beam_vmap", beam=beam)
+        q_new = Query(k=10, execution="beam", beam=beam)
+        res_old, us_old = _timed(lambda: idx.plan(q_old)(Q), len(test))
+        res_new, us_new = _timed(lambda: idx.plan(q_new)(Q), len(test))
         row = dict(
             bench="beam_batched_vs_vmap", beam=beam,
             us_per_q_vmap=round(us_old, 1), us_per_q_batched=round(us_new, 1),
@@ -93,8 +101,8 @@ def run_beam_comparison(idx, test, gt):
 def run_dense(idx, test, gt):
     """Dense (faithful) NSA timing; the beam sweep lives in
     run_beam_comparison (which also reports the batched recalls)."""
-    res, us = _timed(lambda: idx.search(jnp.asarray(test), k=10, mode="dense"),
-                     len(test))
+    q = Query(k=10, execution="dense")
+    res, us = _timed(lambda: idx.plan(q)(jnp.asarray(test)), len(test))
     row = dict(bench="nsa", mode="dense", beam=-1,
                recall=_recall(np.asarray(res.ids), gt),
                us_per_q=round(us, 1),
@@ -108,7 +116,7 @@ def run_radius(train, test, gt, idx):
     for q in (0.1, 0.3, 0.5):
         idx_q = PDASCIndex.build(train, gl=256, distance="euclidean",
                                  radius_quantile=q)
-        res = idx_q.search(test, k=10, mode="dense")
+        res = idx_q.plan(Query(k=10, execution="dense"))(test)
         rows.append(dict(bench="radius", quantile=q,
                          recall=_recall(np.asarray(res.ids), gt),
                          candidates=int(np.asarray(res.n_candidates).mean())))
@@ -143,6 +151,7 @@ def run_kernel_micro(train, test):
 def run(seed: int = 0, modes=("dense", "beam", "radius", "kernel")):
     # The seed-vs-new comparison runs at serving batch size (512 queries):
     # the batched path exists to amortise per-level work over the batch.
+    reset_plan_stats()  # per-run planner counters (compiles / cache hits)
     train, test, gt, idx = _setup(
         seed, n_queries=512 if "beam" in modes else 128,
         need_index=any(m in modes for m in ("dense", "beam", "radius")),
@@ -162,6 +171,13 @@ def run(seed: int = 0, modes=("dense", "beam", "radius", "kernel")):
         rows += run_radius(train, test, gt, idx)
     if "kernel" in modes:
         rows += run_kernel_micro(train, test)
+    stats = plan_stats()
+    if stats:
+        # Planner honesty record: each timed pipeline should show ONE plan
+        # compile and executions >> compiles — a retracing regression shows
+        # up here as compiles growing with the execution count.
+        print(f"[search] plan stats: {stats}", flush=True)
+        rows.append(dict(bench="plan_stats", per_pipeline=stats))
     return rows
 
 
@@ -184,6 +200,7 @@ def main(argv=None):
 
     cmp_rows = [r for r in rows if r.get("bench") == "beam_batched_vs_vmap"]
     mem_rows = [r for r in rows if r.get("bench") == "memory"]
+    stat_rows = [r for r in rows if r.get("bench") == "plan_stats"]
     if cmp_rows:
         # Headline: the default serving beam width (PDASCIndex.search).
         headline = next((r for r in cmp_rows if r["beam"] == 32), cmp_rows[-1])
@@ -202,6 +219,10 @@ def main(argv=None):
             min_speedup=min(r["speedup"] for r in cmp_rows),
             max_speedup=max(r["speedup"] for r in cmp_rows),
             memory=mem_rows[0] if mem_rows else None,
+            # Per-pipeline plan-compile counts and plan-cache hits (the
+            # query/plan layer, DESIGN.md §3.8): compiles should stay O(one
+            # per distinct Query) while executions grow with traffic.
+            plan_stats=stat_rows[0]["per_pipeline"] if stat_rows else None,
         )
         with open(args.bench_out, "w") as f:
             json.dump(summary, f, indent=1)

@@ -36,6 +36,7 @@ from benchmarks.bench_search import _recall
 from repro.baselines import exact_knn
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
+from repro.query import Query
 
 
 def _timed(fn, n_queries: int, repeats: int = 3):
@@ -70,9 +71,8 @@ def run(smoke: bool = False, seed: int = 0):
     print(f"[store] dense memory: {mem_dense}", flush=True)
 
     rows = []
-    res_beam, us_beam = _timed(
-        lambda: idx.search(test, k=k, mode="beam", beam=beam), n_queries,
-        repeats)
+    plan_beam = idx.plan(Query(k=k, execution="beam", beam=beam))
+    res_beam, us_beam = _timed(lambda: plan_beam(test), n_queries, repeats)
     recall_beam = _recall(np.asarray(res_beam.ids), gt)
     rows.append(dict(
         bench="store", backend="fp32_dense", mode="beam",
@@ -87,15 +87,15 @@ def run(smoke: bool = False, seed: int = 0):
                           ("int8", os.path.join(tmp, "payload.bin"))):
         store = idx.attach_store(backend, block=block, path=path)
         # ∞ rerank must reproduce search_beam exactly (the acceptance gate).
-        res_inf = idx.search(test, k=k, mode="two_stage", beam=beam,
-                             rerank_width=None)
+        res_inf = idx.plan(Query(k=k, execution="two_stage", beam=beam,
+                                 rerank_width=None))(test)
         np.testing.assert_array_equal(np.asarray(res_inf.ids),
                                       np.asarray(res_beam.ids))
         np.testing.assert_array_equal(np.asarray(res_inf.dists),
                                       np.asarray(res_beam.dists))
-        res_ts, us_ts = _timed(
-            lambda: idx.search(test, k=k, mode="two_stage", beam=beam,
-                               rerank_width=rerank), n_queries, repeats)
+        plan_ts = idx.plan(Query(k=k, execution="two_stage", beam=beam,
+                                 rerank_width=rerank))
+        res_ts, us_ts = _timed(lambda: plan_ts(test), n_queries, repeats)
         recall_ts = _recall(np.asarray(res_ts.ids), gt)
         ppv = round(store.resident_bytes / n_points, 2)
         row = dict(
@@ -117,8 +117,8 @@ def run(smoke: bool = False, seed: int = 0):
     # stays attached) — the per-node memory the paper's deployment budgets.
     idx.release_dense_payload()
     mem_rel = idx.memory_bytes()
-    res_rel = idx.search(test, k=k, mode="two_stage", beam=beam,
-                         rerank_width=rerank)
+    res_rel = idx.plan(Query(k=k, execution="two_stage", beam=beam,
+                             rerank_width=rerank))(test)
     # res_ts is the int8 run (last loop iteration): releasing the dense copy
     # must not change two-stage results.
     np.testing.assert_array_equal(np.asarray(res_rel.ids),

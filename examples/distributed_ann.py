@@ -25,6 +25,7 @@ from repro.core import radius as rl  # noqa: E402
 from repro.data import make_dataset  # noqa: E402
 from repro.kernels.ref import knn_ref  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.query import Query, compile_sharded_plan  # noqa: E402
 
 
 def main():
@@ -45,9 +46,12 @@ def main():
 
     r = float(rl.estimate_radius(db, dist, quantile=0.4))
     for merge in ("butterfly", "allgather"):
-        res = dd.search_sharded(sidx, queries, mesh, db_axes=("data",),
-                                dist=dist, k=10, r=r, mode="dense",
-                                merge=merge)
+        # one declarative Query, lowered onto the mesh by the plan compiler
+        plan = compile_sharded_plan(mesh, Query(k=10, radius=r),
+                                    dist=dist, db_axes=("data",), merge=merge)
+        if merge == "butterfly":
+            print(plan.explain())
+        res = plan(sidx, queries)
         _, gt = knn_ref(queries, db, 10, "cosine")
         rec = np.mean([
             len(set(np.asarray(res.ids[i]).tolist())

@@ -1,7 +1,12 @@
 """PDASC quickstart: build a multilevel index, search with arbitrary
-distances, measure recall against exact ground truth.
+distances through the declarative Query API, measure recall against exact
+ground truth.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One index, one query surface: a ``repro.query.Query`` says *what* to
+retrieve; ``idx.plan(query)`` binds *how* (which pipeline, which kernel
+ops) from the index's capabilities — ``plan.explain()`` shows the choice.
 """
 
 import numpy as np
@@ -9,6 +14,7 @@ import numpy as np
 from repro.baselines import exact_knn
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
+from repro.query import Query
 
 
 def recall(ids, gt):
@@ -24,10 +30,12 @@ def main():
     data = make_dataset("dense_embed", n=6000, seed=0)
     train, test = data[:5900], data[5900:5950]
 
+    query = Query(k=10)  # execution="auto": the batched beam hot path
     for distance in ("euclidean", "manhattan", "chebyshev", "cosine"):
         idx = PDASCIndex.build(train, gl=256, distance=distance,
                                radius_quantile=0.35)
-        res = idx.search(test, k=10)  # beam mode (TPU-pruned) by default
+        res = idx.plan(query)(test)  # plans cache on the index: re-running
+        # an equal query reuses the compiled pipeline, zero retraces
         _, gt = exact_knn(test, train, distance=distance, k=10)
         print(f"{distance:10s} recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f} "
               f"(mean candidates scanned: {int(np.asarray(res.n_candidates).mean())} "
@@ -40,9 +48,12 @@ def main():
                            radius_quantile=0.5)
     print("\nindex structure (Municipalities surrogate):")
     print(idx.describe())
-    res = idx.search(g_test, k=10, mode="dense")
+    plan = idx.plan(Query(k=10, execution="dense"))  # the faithful pipeline
+    print("\nwhat the planner bound (plan.explain()):")
+    print(plan.explain())
+    res = plan(g_test)
     _, gt = exact_knn(g_test, g_train, distance="haversine", k=10)
-    print(f"haversine  recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
+    print(f"\nhaversine  recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
 
     # --- non-metric dissimilarity (paper future work: Jaccard) --------------
     # (weighted Jaccard on the MNIST-like surrogate: overlapping supports —
@@ -52,7 +63,7 @@ def main():
     d_train, d_test = docs[:2900], docs[2900:2950]
     idx = PDASCIndex.build(d_train, gl=128, distance="jaccard",
                            radius_quantile=0.6)
-    res = idx.search(d_test, k=10, mode="dense")
+    res = idx.plan(Query(k=10, execution="dense"))(d_test)
     _, gt = exact_knn(d_test, d_train, distance="jaccard", k=10)
     print(f"jaccard    recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
 

@@ -16,6 +16,7 @@ from repro.core.index import PDASCIndex
 from repro.data import recsys_batch
 from repro.models import recsys
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.query import Query
 
 
 def main():
@@ -60,7 +61,7 @@ def main():
                            radius_quantile=0.25)
     u = recsys.user_vector(params, user_batch, cfg)
     t0 = time.perf_counter()
-    res = idx.search(np.asarray(u), k=100, mode="dense")
+    res = idx.plan(Query(k=100, execution="dense"))(np.asarray(u))
     jax.block_until_ready(res.dists)
     t_pdasc = time.perf_counter() - t0
     overlap = np.mean([

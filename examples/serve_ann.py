@@ -4,7 +4,10 @@ index served behind the batching engine with live request traffic.
     PYTHONPATH=src python examples/serve_ann.py
 
 Thin wrapper over ``repro.launch.serve`` with a cosine text-embedding
-workload — reports p50/p99 latency, batch occupancy and recall.
+workload — reports p50/p99 latency, batch occupancy and recall. The driver
+serves a declarative ``repro.query.Query`` through the engine's
+``QueryHandler``: one plan per index epoch, reused across batches (the
+printed ``[serve] plan:`` block is that plan's ``explain()``).
 """
 
 import sys

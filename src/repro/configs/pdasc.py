@@ -59,6 +59,19 @@ class PDASCArchConfig:
                             bg=self.bg, row_chunk=self.row_chunk,
                             group_chunk=self.group_chunk)
 
+    def search_query(self, **overrides):
+        """The arch's search protocol as a declarative ``repro.query.Query``
+        (k / radius / rerank width / kernel knobs from this config;
+        ``overrides`` pick the execution preference, beam schedule, ...).
+        The launch cells and serving drivers plan from this."""
+        from repro.query import Query
+
+        base = dict(k=self.k, radius=self.radius,
+                    rerank_width=self.rerank_width,
+                    kernel=self.kernel_config())
+        base.update(overrides)
+        return Query(**base)
+
 
 def config() -> PDASCArchConfig:
     return PDASCArchConfig()

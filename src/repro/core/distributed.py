@@ -214,6 +214,71 @@ def build_sharded(
 # ---------------------------------------------------------------------------
 
 
+# Bounded: each entry pins its Mesh + compiled executable, and a long-lived
+# process may cycle meshes/knobs — eviction merely costs the old per-call
+# retrace for that config, never correctness.
+@functools.lru_cache(maxsize=64)
+def _sharded_search_fn(
+    mesh: Mesh,
+    db_axes: tuple,
+    dist,
+    k: int,
+    r,
+    mode: str,
+    beam,
+    max_children: Optional[tuple],
+    merge: str,
+    leaf_radius_filter: bool,
+    with_stats: bool,
+    kernel,
+    has_mask: bool,
+):
+    """Build (once per static config) the jitted shard_map executor behind
+    :func:`search_sharded`.
+
+    The cache is what makes repeated sharded execution retrace-free: the
+    pre-refactor code rebuilt the ``shard_map`` closure per call, so every
+    search re-traced the whole per-shard program. Keyed on every static
+    knob (all hashable — the same values the per-shard jits key on), the
+    returned callable is one ``jax.jit`` whose own cache then keys on input
+    shapes/dtypes only.
+    """
+
+    def body(index_stacked, Qr, *sv):
+        index = jax.tree.map(lambda a: a[0], index_stacked)
+        sv_local = sv[0][0] if sv else None
+        shard = _shard_index(db_axes)
+        if mode == "dense":
+            res = nsa.search_dense(
+                index, Qr, dist=dist, k=k, r=r,
+                leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
+                kernel=kernel, slot_valid=sv_local,
+            )
+        else:
+            res = nsa.search_beam(
+                index, Qr, dist=dist, k=k, r=r, beam=beam,
+                max_children=max_children, leaf_radius_filter=leaf_radius_filter,
+                kernel=kernel, slot_valid=sv_local,
+            )
+        # leaf_ids are local rows of this shard's slice; lift to global rows.
+        # NOTE: the shard's local shuffle permutes only within the shard, so
+        # global_row = shard * per_shard_n + local_row.
+        per_shard_n = jnp.int32(index_stacked.leaf_ids.shape[1])
+        gids = jnp.where(res.ids >= 0, res.ids + shard * per_shard_n, -1)
+        d_m, i_m = topk_merge(res.dists, gids, tuple(db_axes), k, method=merge)
+        nc = jax.lax.psum(res.n_candidates, tuple(db_axes))
+        return nsa.SearchResult(dists=d_m, ids=i_m, n_candidates=nc)
+
+    # Prefix specs: the index arg's single P broadcasts over its whole tree.
+    in_specs = [P(db_axes), P()]  # sharded index, replicated queries
+    if has_mask:
+        in_specs.append(P(db_axes))  # mask sharded like the index
+    out_specs = nsa.SearchResult(dists=P(), ids=P(), n_candidates=P())
+    return jax.jit(
+        shard_map(body, mesh, in_specs=tuple(in_specs), out_specs=out_specs)
+    )
+
+
 def search_sharded(
     sharded_index: msa.PDASCIndexData,
     Q: Array,
@@ -242,47 +307,25 @@ def search_sharded(
     masks its own deleted leaf slots before its local rank, so deleted ids
     never enter the merge (DESIGN.md §3.7; build per-shard masks from global
     ids with :func:`route_writes` + :func:`local_slot_valid`).
+
+    This is the execution substrate of the query layer's sharded pipeline
+    (``repro.query.compile_sharded_plan``); the executor is compiled once
+    per static configuration (:func:`_sharded_search_fn`), so repeated
+    calls — and repeated sharded-plan executions — never retrace.
     """
     dist = dist_lib.get(dist)
 
-    # Per-shard leaf slot count -> global row offset per shard.
-    n_leaf_local = sharded_index.leaf_ids.shape[1]
+    def _freeze(v):
+        return tuple(v) if isinstance(v, (list, tuple)) else v
 
-    def body(index_stacked, Qr, *sv):
-        index = jax.tree.map(lambda a: a[0], index_stacked)
-        sv_local = sv[0][0] if sv else None
-        shard = _shard_index(db_axes)
-        if mode == "dense":
-            res = nsa.search_dense(
-                index, Qr, dist=dist, k=k, r=r,
-                leaf_radius_filter=leaf_radius_filter, with_stats=with_stats,
-                kernel=kernel, slot_valid=sv_local,
-            )
-        else:
-            res = nsa.search_beam(
-                index, Qr, dist=dist, k=k, r=r, beam=beam,
-                max_children=max_children, leaf_radius_filter=leaf_radius_filter,
-                kernel=kernel, slot_valid=sv_local,
-            )
-        # leaf_ids are local rows of this shard's slice; lift to global rows.
-        # NOTE: the shard's local shuffle permutes only within the shard, so
-        # global_row = shard * per_shard_n + local_row.
-        per_shard_n = jnp.int32(n_leaf_local)
-        gids = jnp.where(res.ids >= 0, res.ids + shard * per_shard_n, -1)
-        d_m, i_m = topk_merge(res.dists, gids, tuple(db_axes), k, method=merge)
-        nc = jax.lax.psum(res.n_candidates, tuple(db_axes))
-        return nsa.SearchResult(dists=d_m, ids=i_m, n_candidates=nc)
-
-    in_specs = [
-        jax.tree.map(lambda _: P(tuple(db_axes)), sharded_index),
-        P(),  # queries replicated
-    ]
+    fn = _sharded_search_fn(
+        mesh, tuple(db_axes), dist, k, _freeze(r), mode, _freeze(beam),
+        tuple(max_children) if max_children is not None else None, merge,
+        leaf_radius_filter, with_stats, kernel, slot_valid is not None,
+    )
     args = [sharded_index, jnp.asarray(Q)]
     if slot_valid is not None:
-        in_specs.append(P(tuple(db_axes)))  # mask sharded like the index
         args.append(jnp.asarray(slot_valid))
-    out_specs = nsa.SearchResult(dists=P(), ids=P(), n_candidates=P())
-    fn = shard_map(body, mesh, in_specs=tuple(in_specs), out_specs=out_specs)
     # keep the caller's dtype: bf16 queries + bf16 index points -> bf16
     # distance math (the §Perf H3 memory-halving path)
     return fn(*args)

@@ -1,15 +1,23 @@
 """PDASCIndex — the user-facing index API.
 
-Wraps MSA build, NSA search (dense / beam / two-stage), radius estimation,
-the tiered leaf store, the online mutability substrate and save / load.
-This is the object the examples, benchmarks and the serving engine hold.
+Wraps MSA build, the declarative query/plan search surface, radius
+estimation, the tiered leaf store, the online mutability substrate and
+save / load. This is the object the examples, benchmarks and the serving
+engine hold.
 
     idx = PDASCIndex.build(data, gl=1000, distance="cosine")
     res = idx.search(queries, k=10, r=idx.default_radius)
 
+    # the declarative surface (DESIGN.md §3.8): a Query says *what*, the
+    # planner binds *how* — and plan.explain() shows the lowering
+    from repro.query import Query
+    plan = idx.plan(Query(k=10, beam=64))     # cached by (query, caps)
+    res = plan(queries)                       # repeated calls: zero retraces
+    print(plan.explain())
+
     # storage-aware serving: quantised payload tier + two-stage search
     idx = PDASCIndex.build(data, gl=1000, distance="cosine", store="int8")
-    res = idx.search(queries, k=10, mode="two_stage", rerank_width=128)
+    res = idx.plan(Query(execution="two_stage", rerank_width=128))(queries)
     idx.memory_bytes()   # per-tier (navigation vs payload) accounting
 
     # online mutability (DESIGN.md §3.7): delta-buffer upserts, tombstoned
@@ -17,6 +25,10 @@ This is the object the examples, benchmarks and the serving engine hold.
     ids = idx.upsert(new_vectors)        # visible to the next search
     idx.delete(ids[:3])                  # vanishes from every search mode
     idx = idx.compact()                  # new epoch: tiers folded back in
+
+``search(..., mode="beam")`` remains as a back-compat shim over the plan
+layer (an explicit ``mode=`` warns ``DeprecationWarning``); new code should
+hold a ``Query`` and a plan.
 """
 
 from __future__ import annotations
@@ -25,6 +37,7 @@ import dataclasses
 import json
 import os
 import tempfile
+import warnings
 from typing import Optional
 
 import jax
@@ -38,8 +51,9 @@ from repro.kernels import ops as kops
 from repro.online import compact as compact_lib
 from repro.online import delta as delta_lib
 from repro.online import tombstones as tomb_lib
+from repro.query import plan as query_plan
+from repro.query import spec as query_spec
 from repro.store import leaf_store as store_lib
-from repro.store import two_stage as two_stage_lib
 
 Array = jax.Array
 
@@ -93,6 +107,9 @@ class PDASCIndex:
     # sorted (ids, slots) arrays for the id -> live-slot lookup (lazy)
     _id_slot: Optional[tuple] = dataclasses.field(default=None, repr=False)
     _next_id: Optional[int] = dataclasses.field(default=None, repr=False)
+    # plan cache: (Query, capability fingerprint) -> SearchPlan (lazy; an
+    # epoch swap produces a new index object and therefore a fresh cache)
+    _plan_cache: Optional[dict] = dataclasses.field(default=None, repr=False)
 
     # -- construction --------------------------------------------------------
 
@@ -381,13 +398,36 @@ class PDASCIndex:
         )
         return new
 
-    def _online_dirty(self) -> bool:
-        return bool(
-            (self.delta is not None and self.delta.n_active)
-            or (self.tombstones is not None and self.tombstones.count)
-        )
+    # -- search (the declarative query/plan surface, DESIGN.md §3.8) ----------
 
-    # -- search ---------------------------------------------------------------
+    def plan(self, query=None, **overrides) -> "query_plan.SearchPlan":
+        """Compile a :class:`repro.query.Query` into an executable
+        :class:`~repro.query.plan.SearchPlan` bound to this index's current
+        capabilities (store attached? payload released? online tiers
+        dirty?). Plans are cached by ``(query, capability fingerprint)`` —
+        an equal query on an unchanged index returns the same plan object,
+        and repeated plan execution never retraces. Capability conflicts
+        (e.g. ``execution="two_stage"`` without a store) raise ValueError
+        here, at plan time.
+
+        Accepts a ``Query``, keyword overrides on top of one, or bare
+        keywords: ``idx.plan(k=5, execution="dense")``.
+        """
+        if query is None:
+            query = query_spec.Query(**overrides)
+        elif overrides:
+            query = dataclasses.replace(query, **overrides)
+        if self._plan_cache is None:
+            self._plan_cache = {}
+        caps = query_plan.capabilities(self)
+        key = (query, caps)
+        plan = self._plan_cache.get(key)
+        if plan is not None:
+            query_plan.record_cache_hit(plan.pipeline)
+            return plan
+        plan = query_plan.compile_plan(self, query)
+        self._plan_cache[key] = plan
+        return plan
 
     def search(
         self,
@@ -395,122 +435,51 @@ class PDASCIndex:
         *,
         k: int = 10,
         r: Optional[float] = None,
-        mode: str = "beam",
+        query: Optional["query_spec.Query"] = None,
+        mode: Optional[str] = None,
         beam: int | tuple = 32,
         rerank_width: Optional[int] = 128,
         leaf_radius_filter: bool = False,
         kernel: Optional[kops.KernelConfig] = None,
     ) -> nsa.SearchResult:
-        """k-ANN search. ``mode``: "beam" (batched, pruned), "dense"
-        (faithful), "two_stage" (tiered store: quantised scan -> exact
-        rerank over the top-``rerank_width``; None = ∞, bit-identical to
-        "beam") or "beam_vmap" (the seed per-query baseline, kept for
-        benchmarking). ``kernel`` carries the kernel-layer block knobs.
+        """k-ANN search — a thin build-plan-and-run wrapper over
+        :meth:`plan`. Prefer holding a :class:`repro.query.Query` (and a
+        plan) directly; this wrapper exists so ``idx.search(Q, k=10)`` stays
+        a one-liner.
 
-        With online tiers attached (DESIGN.md §3.7) every mode threads the
-        tombstone mask into its leaf ranking (deleted ids never appear) and
-        merges the delta buffer's exact scan into the result.
+        ``query``: run an explicit Query spec (all other knobs ignored).
+        ``mode``: **deprecated** back-compat shim for the pre-plan string
+        dispatcher ("beam" / "dense" / "two_stage" / "beam_vmap") — still
+        honoured, with a ``DeprecationWarning``; use
+        ``Query(execution=...)`` instead. Omitted, the planner chooses from
+        the index capabilities (the batched beam hot path, or two_stage
+        once the dense payload was released).
+
+        With online tiers attached (DESIGN.md §3.7) every pipeline threads
+        the tombstone mask into its leaf ranking (deleted ids never appear)
+        and merges the delta buffer's exact scan into the result.
         """
-        Q = jnp.asarray(queries, jnp.float32)
-        r = float(r) if r is not None else self.default_radius
-        squeeze = Q.ndim == 1
-        Qb = Q[None, :] if squeeze else Q
-        slot_valid = (
-            self.tombstones.valid_mask()
-            if self.tombstones is not None and self.tombstones.count
-            else None
-        )
-        if mode == "two_stage":
-            if self.store is None:
-                raise ValueError(
-                    "mode='two_stage' needs a leaf store: build with "
-                    "store='int8' or call attach_store()"
+        if query is None:
+            execution = "auto"
+            if mode is not None:
+                warnings.warn(
+                    "PDASCIndex.search(mode=...) is deprecated; use "
+                    "repro.query.Query(execution=...) with idx.plan() / "
+                    "idx.search(query=...)",
+                    DeprecationWarning,
+                    stacklevel=2,
                 )
-            res = two_stage_lib.search_two_stage(
-                self.data,
-                self.store,
-                Qb,
-                dist=self.distance,
+                execution = mode
+            query = query_spec.Query(
                 k=k,
-                r=r,
+                radius=float(r) if r is not None else None,
+                execution=execution,
                 beam=beam,
-                max_children=self.max_children,
                 rerank_width=rerank_width,
                 leaf_radius_filter=leaf_radius_filter,
                 kernel=kernel,
-                slot_valid=slot_valid,
             )
-        elif mode in ("dense", "beam", "beam_vmap"):
-            if self._payload_released:
-                raise ValueError(
-                    f"mode={mode!r} needs the dense leaf payload, which was "
-                    "released (release_dense_payload); use mode='two_stage'"
-                )
-            if mode == "dense":
-                res = nsa.search_dense(
-                    self.data,
-                    Qb,
-                    dist=self.distance,
-                    k=k,
-                    r=r,
-                    leaf_radius_filter=leaf_radius_filter,
-                    kernel=kernel,
-                    slot_valid=slot_valid,
-                )
-            elif mode == "beam":
-                res = nsa.search_beam(
-                    self.data,
-                    Qb,
-                    dist=self.distance,
-                    k=k,
-                    r=r,
-                    beam=beam,
-                    max_children=self.max_children,
-                    leaf_radius_filter=leaf_radius_filter,
-                    kernel=kernel,
-                    slot_valid=slot_valid,
-                )
-            else:  # beam_vmap: the frozen seed baseline
-                if self._online_dirty():
-                    raise ValueError(
-                        "mode='beam_vmap' (the seed benchmark baseline) does"
-                        " not support the online tiers; use 'beam'/'dense'/"
-                        "'two_stage' or compact() first"
-                    )
-                res = nsa.search_beam_vmap(
-                    self.data,
-                    Qb,
-                    dist=self.distance,
-                    k=k,
-                    r=r,
-                    beam=beam,
-                    max_children=self.max_children,
-                    leaf_radius_filter=leaf_radius_filter,
-                )
-        else:
-            raise ValueError(f"unknown search mode {mode!r}")
-
-        if self.delta is not None and self.delta.n_active:
-            scan = self.delta.scan(Qb, self.distance, k=k, kernel=kernel)
-            sd, si = scan.dists, scan.ids
-            if leaf_radius_filter:
-                # same leaf radius rule the resident ranking applies, so a
-                # point filters identically whether it is buffered or (post
-                # compaction) resident
-                keep = sd < r
-                sd = jnp.where(keep, sd, BIG)
-                si = jnp.where(keep, si, -1)
-            d_m, i_m = delta_lib.merge_topk(
-                res.dists, res.ids, sd, si, k
-            )
-            res = nsa.SearchResult(
-                dists=d_m, ids=i_m,
-                n_candidates=res.n_candidates
-                + jnp.int32(self.delta.n_active),
-            )
-        if squeeze:
-            res = jax.tree.map(lambda a: a[0], res)
-        return res
+        return self.plan(query)(queries)
 
     def per_level_radii(self, *, quantile: float = 0.5) -> tuple[float, ...]:
         return radius_lib.per_level_radii(

@@ -71,8 +71,9 @@ class SearchResult(NamedTuple):
 
 
 def _per_level_radii(r, n_levels: int) -> tuple:
-    """Broadcast a scalar radius to per-level radii (top..leaf order follows
-    level index). A sequence enables the paper's future-work dynamic radius."""
+    """Broadcast a scalar radius to per-level radii, indexed by level —
+    ``radii[0]`` applies at the leaf, ``radii[-1]`` at the top. A sequence
+    enables the paper's future-work dynamic radius."""
     if isinstance(r, (list, tuple)):
         if len(r) != n_levels:
             raise ValueError(f"need {n_levels} radii, got {len(r)}")

@@ -28,7 +28,8 @@ from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.kernels.ops import KernelConfig, knn
 from repro.online import EpochHandle, live_dataset
-from repro.serving import BatchingEngine
+from repro.query import Query
+from repro.serving import BatchingEngine, QueryHandler
 
 
 def _parse():
@@ -102,12 +103,13 @@ def main():
             tombstone_ratio=args.compact_tombstone_ratio,
         )
 
-    def handler(batch, n_valid):
-        cur = handle.current if handle is not None else idx
-        res = cur.search(jnp.asarray(batch), k=args.k, mode=args.mode,
-                         beam=args.beam, rerank_width=args.rerank_width,
-                         kernel=kernel)
-        return res.dists, res.ids
+    # The declarative surface (DESIGN.md §3.8): the whole serving config is
+    # one Query; the engine handler resolves the epoch snapshot per batch
+    # and reuses the cached plan until the capability fingerprint changes.
+    query = Query(k=args.k, execution=args.mode, beam=args.beam,
+                  rerank_width=args.rerank_width, kernel=kernel)
+    handler = QueryHandler(handle if handle is not None else idx, query)
+    print(f"[serve] plan:\n{handler.plan().explain()}")
 
     prefetch_fn = None
     if args.mode == "two_stage" and idx.store.exact.on_disk:

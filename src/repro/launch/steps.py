@@ -402,6 +402,7 @@ def _recsys_cell(arch_id, spec: ShapeSpec, mesh) -> Cell:
 def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
     from repro.core import distributed as dd
     from repro.core import msa
+    from repro.query import compile_sharded_plan
 
     arch = get_arch(arch_id)
     cfg = arch.config_fn()
@@ -457,6 +458,9 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
     Q = cfg.n_queries
     n_levels = len(idx_sds.levels)
 
+    # The three search variants are one declarative Query each, lowered onto
+    # the mesh by the plan compiler — the plan binds every static knob, so
+    # the step is just "execute the plan on the (traced) stacked index".
     if variant == "opt-beam":
         # §Perf H3: beam-pruned NSA gathers only the top-`beam` in-radius
         # prototypes' sibling-contiguous child blocks. Batched through the
@@ -464,14 +468,11 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
         # so the [Q, cand] distance matrix that attempt 1 materialised in
         # HBM never leaves VMEM.
         beam, mc = 32, 8
-
-        def step(index, queries):
-            return dd.search_sharded(
-                index, queries, mesh, db_axes=allA, dist=cfg.distance,
-                k=cfg.k, r=cfg.radius, mode="beam", beam=beam,
-                max_children=(0,) + (mc,) * (n_levels - 1), merge="butterfly",
-                kernel=cfg.kernel_config(),
-            )
+        plan = compile_sharded_plan(
+            mesh, cfg.search_query(execution="beam", beam=beam),
+            dist=cfg.distance, db_axes=allA,
+            max_children=(0,) + (mc,) * (n_levels - 1),
+        )
     elif variant == "opt":
         # §Perf H3 (attempt 2): keep the faithful dense-masked search but
         # compute distances in bf16 — halves every [Q, n_level] matrix and
@@ -481,19 +482,20 @@ def _pdasc_cell(arch_id, spec: ShapeSpec, mesh, variant: str = "base") -> Cell:
             lambda s: SDS(s.shape, bf16) if s.dtype == jnp.float32 else s,
             idx_sds,
         )
-
-        def step(index, queries):
-            return dd.search_sharded(
-                index, queries, mesh, db_axes=allA, dist=cfg.distance,
-                k=cfg.k, r=cfg.radius, mode="dense", merge="butterfly",
-                with_stats=False,
-            )
+        plan = compile_sharded_plan(
+            mesh,
+            cfg.search_query(execution="dense", with_stats=False,
+                             kernel=None),
+            dist=cfg.distance, db_axes=allA,
+        )
     else:
-        def step(index, queries):
-            return dd.search_sharded(
-                index, queries, mesh, db_axes=allA, dist=cfg.distance,
-                k=cfg.k, r=cfg.radius, mode="dense", merge="butterfly",
-            )
+        plan = compile_sharded_plan(
+            mesh, cfg.search_query(execution="dense", kernel=None),
+            dist=cfg.distance, db_axes=allA,
+        )
+
+    def step(index, queries):
+        return plan(index, queries)
 
     # Dense NSA evaluates every level's distances: sum_l n_l * d * 2 per query.
     level_sizes, level_n = [], per

@@ -154,12 +154,13 @@ def knn_graph(
     n = coords.shape[0]
     if method == "pdasc":
         from repro.core.index import PDASCIndex
+        from repro.query import Query
 
         kw = dict(gl=max(8, min(64, n // 4)), distance=distance)
         kw.update(pdasc_kwargs or {})
         idx = PDASCIndex.build(coords, **kw)
-        res = idx.search(coords, k=k + 1, r=idx.default_radius * 4.0,
-                         mode="dense")
+        res = idx.plan(Query(k=k + 1, execution="dense",
+                             radius=float(idx.default_radius) * 4.0))(coords)
         ids = np.asarray(res.ids)
     else:
         from repro.kernels.ops import knn

@@ -1,0 +1,41 @@
+"""Declarative query surface + compiled search plans (DESIGN.md §3.8).
+
+One index, arbitrary distances, tunable recall/cost/memory trade-offs —
+PDASC's parametrizability claim — needs exactly one query surface. A
+:class:`Query` is the *what* (k, radius, beam schedule, rerank width,
+execution preference); ``idx.plan(query)`` compiles it into the *how*: a
+:class:`SearchPlan` bound to whichever pipeline the index's capabilities
+admit (dense / beam / two_stage — or sharded over a mesh via
+:func:`compile_sharded_plan`), with the tombstone-mask threading and the
+delta-scan merge leg resolved once at plan time. Capability conflicts are
+plan-time errors; ``plan.explain()`` names the chosen pipeline, kernel ops
+and online legs; repeated execution of a plan never retraces.
+"""
+
+from repro.query.plan import (
+    Capabilities,
+    STALENESS_REPLAN,
+    SearchPlan,
+    ShardedPlan,
+    capabilities,
+    compile_plan,
+    compile_sharded_plan,
+    plan_stats,
+    reset_plan_stats,
+)
+from repro.query.spec import EXECUTIONS, Query, validate_query_batch
+
+__all__ = [
+    "Capabilities",
+    "EXECUTIONS",
+    "Query",
+    "SearchPlan",
+    "ShardedPlan",
+    "STALENESS_REPLAN",
+    "capabilities",
+    "compile_plan",
+    "compile_sharded_plan",
+    "plan_stats",
+    "reset_plan_stats",
+    "validate_query_batch",
+]

@@ -1,0 +1,455 @@
+"""The SearchPlan compiler — lower a :class:`~repro.query.spec.Query` onto
+the execution substrate an index actually has (DESIGN.md §3.8).
+
+``compile_plan(index, query)`` inspects the index's *capabilities* at plan
+time — store attached? dense payload released? online tiers dirty? — and
+binds the one pipeline that serves the query:
+
+=============  ==============================================================
+pipeline       kernel-layer lowering
+=============  ==============================================================
+``dense``      per level one ``ops.pairwise_distance`` matrix + masked top-k
+``beam``       beam descent (``ops.pairwise_distance`` top level,
+               ``ops.rank_gathered`` per inner level) + one fused
+               ``ops.rank_gathered`` leaf rank
+``two_stage``  beam descent -> ``ops.scan_quantized`` over the payload codes
+               -> exact ``ops.rank_candidates`` rerank of the survivors
+               (∞ rerank width: the same jitted ``search_beam`` over the
+               exact payload — bit-identical to ``beam``)
+``beam_vmap``  the seed per-query vmap baseline (benchmarks only)
+``sharded``    per-shard dense/beam + butterfly/allgather top-k merge over a
+               mesh (:func:`compile_sharded_plan`)
+=============  ==============================================================
+
+The online legs are resolved ONCE, at plan time: a plan compiled against a
+tombstoned index threads ``TombstoneSet.valid_mask()`` (a cached device
+array) into the leaf ranking, and a plan compiled against an active delta
+buffer appends the exact delta scan + ``merge_topk`` leg. Capability
+conflicts — ``two_stage`` without a store, ``beam_vmap`` with dirty online
+tiers, ``dense``/``beam`` after ``release_dense_payload`` — raise at plan
+time, not mid-search.
+
+Plans never retrace on re-execution: the jitted callables underneath key on
+the query's static fields, and the plan cache (``PDASCIndex.plan``) keys on
+``(query, capability fingerprint)`` so an equal query on an unchanged index
+returns the *same* plan object. A plan executed after an *in-place* tier
+mutation on its index (an upsert activating the delta buffer, a delete
+dirtying the tombstones, a released payload) detects the stale fingerprint
+and transparently re-plans through the index's cache — correctness never
+depends on the caller re-planning, it is only faster. Epoch swaps are
+different by design: compaction is RCU and publishes a NEW index object, so
+a plan bound to the old object keeps serving its (immutable, still-valid)
+old epoch; epoch currency comes from resolving the live index before
+planning, which is exactly what ``serving.QueryHandler`` /
+``online.EpochHandle`` do per batch.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as dist_lib
+from repro.core import nsa
+from repro.core.distances import BIG
+from repro.query.spec import Query, validate_query_batch
+
+Array = jax.Array
+
+# Stale-fingerprint execution outcome recorded in plan_stats() (a replanned
+# execution also counts a cache hit/compile under the index's plan cache).
+STALENESS_REPLAN = "replans"
+
+# Per-pipeline planner counters: how often a plan was compiled, served from
+# the index plan cache, re-planned because its fingerprint went stale, and
+# executed. bench_search.py records these into BENCH_search.json so a
+# retracing regression (compiles growing with executions) shows up in the
+# perf trajectory.
+_STATS: dict = collections.defaultdict(
+    lambda: dict(compiles=0, cache_hits=0, replans=0, executions=0)
+)
+
+
+def plan_stats() -> dict:
+    """Snapshot of the per-pipeline planner counters."""
+    return {p: dict(v) for p, v in sorted(_STATS.items())}
+
+
+def reset_plan_stats() -> None:
+    _STATS.clear()
+
+
+def record_cache_hit(pipeline: str) -> None:
+    _STATS[pipeline]["cache_hits"] += 1
+
+
+# ---------------------------------------------------------------------------
+# Capabilities
+# ---------------------------------------------------------------------------
+
+
+class Capabilities(NamedTuple):
+    """The index capability fingerprint a plan binds against.
+
+    Structural facts only — things that change *which program* runs (the
+    pipeline choice, the presence of the mask / delta legs), never array
+    values (those flow in at execution time: a new delete updates the cached
+    mask array without changing the fingerprint).
+    """
+
+    epoch: int
+    n_levels: int
+    store: Optional[str]  # payload-tier backend, None = dense seed path
+    payload_released: bool
+    delta_dirty: bool  # active delta entries -> the exact-scan merge leg
+    tombstones_dirty: bool  # dead slots -> the slot_valid mask threading
+
+
+def capabilities(index) -> Capabilities:
+    """Fingerprint an index's current capabilities (cheap host-side reads)."""
+    return Capabilities(
+        epoch=index.epoch,
+        n_levels=len(index.data.levels),
+        store=index.store.backend if index.store is not None else None,
+        payload_released=bool(index._payload_released),
+        delta_dirty=bool(index.delta is not None and index.delta.n_active),
+        tombstones_dirty=bool(
+            index.tombstones is not None and index.tombstones.count
+        ),
+    )
+
+
+_LOWERING = {
+    "dense": "per level one ops.pairwise_distance [B, n_l] matrix + masked "
+             "jax.lax.top_k",
+    "beam": "nsa.descend_beam (ops.pairwise_distance top level + fused "
+            "ops.rank_gathered per inner level) -> fused ops.rank_gathered "
+            "leaf rank",
+    "beam_vmap": "seed baseline: per-query vmap of dist.point gathers + "
+                 "per-level top_k",
+    "two_stage": "nsa.descend_beam -> ops.scan_quantized (native-dtype "
+                 "payload scan) -> exact ops.rank_candidates rerank of the "
+                 "top-R survivors",
+    "two_stage_inf": "∞ rerank: the same jitted nsa.search_beam over the "
+                     "exact fp32 payload (bit-identical to 'beam')",
+    "sharded": "per-shard nsa.search_{mode} under shard_map -> "
+               "distributed.topk_merge global top-k",
+}
+
+
+def _resolve_pipeline(query: Query, caps: Capabilities) -> str:
+    """Choose + validate the pipeline. Conflicts raise here — at plan time."""
+    execution = query.execution
+    if execution == "sharded":
+        raise ValueError(
+            "execution='sharded' needs a mesh layout: compile with "
+            "repro.query.compile_sharded_plan(mesh, query, ...)"
+        )
+    if execution == "auto":
+        execution = "two_stage" if caps.payload_released else "beam"
+    if execution == "two_stage":
+        if caps.store is None:
+            raise ValueError(
+                "mode='two_stage' needs a leaf store: build with "
+                "store='int8' or call attach_store()"
+            )
+    elif execution in ("dense", "beam", "beam_vmap"):
+        if caps.payload_released:
+            raise ValueError(
+                f"mode={execution!r} needs the dense leaf payload, which was "
+                "released (release_dense_payload); use mode='two_stage'"
+            )
+        if execution == "beam_vmap" and (
+            caps.delta_dirty or caps.tombstones_dirty
+        ):
+            raise ValueError(
+                "mode='beam_vmap' (the seed benchmark baseline) does not "
+                "support the online tiers; use 'beam'/'dense'/'two_stage' "
+                "or compact() first"
+            )
+    return execution
+
+
+# ---------------------------------------------------------------------------
+# SearchPlan (local pipelines)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchPlan:
+    """An executable binding of (query, index capabilities) -> pipeline.
+
+    Call it with a query batch: ``plan(Q) -> nsa.SearchResult`` (``Q``:
+    [B, d] or [d]; a 1-d query returns squeezed results, matching the
+    legacy ``search()`` contract bit-for-bit). Execution validates concrete
+    queries (``needs_dim`` / non-finite -> ValueError), threads the cached
+    tombstone mask and merges the delta leg exactly as bound at plan time,
+    and dispatches the same module-level jitted callables every time — an
+    equal plan executed twice triggers zero new traces.
+    """
+
+    index: "object"  # PDASCIndex (duck-typed; no import cycle)
+    query: Query
+    caps: Capabilities
+    pipeline: str
+    radius: object  # resolved: query.radius or the index default
+
+    # -- execution ------------------------------------------------------------
+
+    def __call__(self, queries) -> nsa.SearchResult:
+        caps = capabilities(self.index)
+        if caps != self.caps:
+            # Stale plan: this index mutated in place under us (a write
+            # dirtied / a compaction-reset cleaned a tier, the payload was
+            # released). Re-resolve through the index plan cache — a
+            # conflict with the *new* capabilities raises the same
+            # plan-time error a fresh plan() would. (An epoch *swap* never
+            # lands here: it publishes a new index object — RCU — and this
+            # plan keeps serving its still-valid old epoch.)
+            _STATS[self.pipeline][STALENESS_REPLAN] += 1
+            return self.index.plan(self.query)(queries)
+        _STATS[self.pipeline]["executions"] += 1
+        validate_query_batch(
+            queries, self.index.distance, expect_dim=self.index._dim()
+        )
+        return self._execute(queries)
+
+    def _execute(self, queries) -> nsa.SearchResult:
+        idx = self.index
+        q = self.query
+        Q = jnp.asarray(queries, jnp.float32)
+        squeeze = Q.ndim == 1
+        Qb = Q[None, :] if squeeze else Q
+        # The mask *leg* is bound at plan time (fingerprint), the mask
+        # *array* is fetched per call — TombstoneSet caches the device
+        # array, so no rebuild/re-upload happens unless a delete landed.
+        slot_valid = (
+            idx.tombstones.valid_mask() if self.caps.tombstones_dirty
+            else None
+        )
+        r = self.radius
+
+        if self.pipeline == "two_stage":
+            from repro.store import two_stage as two_stage_lib
+
+            res = two_stage_lib.search_two_stage(
+                idx.data, idx.store, Qb, dist=idx.distance, k=q.k, r=r,
+                beam=q.beam, max_children=idx.max_children,
+                rerank_width=q.rerank_width,
+                leaf_radius_filter=q.leaf_radius_filter, kernel=q.kernel,
+                slot_valid=slot_valid,
+            )
+        elif self.pipeline == "dense":
+            res = nsa.search_dense(
+                idx.data, Qb, dist=idx.distance, k=q.k, r=r,
+                leaf_radius_filter=q.leaf_radius_filter,
+                with_stats=q.with_stats, kernel=q.kernel,
+                slot_valid=slot_valid,
+            )
+        elif self.pipeline == "beam":
+            res = nsa.search_beam(
+                idx.data, Qb, dist=idx.distance, k=q.k, r=r, beam=q.beam,
+                max_children=idx.max_children,
+                leaf_radius_filter=q.leaf_radius_filter, kernel=q.kernel,
+                slot_valid=slot_valid,
+            )
+        else:  # beam_vmap: the frozen seed baseline (clean tiers, by plan)
+            res = nsa.search_beam_vmap(
+                idx.data, Qb, dist=idx.distance, k=q.k, r=r, beam=q.beam,
+                max_children=idx.max_children,
+                leaf_radius_filter=q.leaf_radius_filter,
+            )
+
+        if self.caps.delta_dirty:
+            res = self._merge_delta_leg(Qb, res)
+        if squeeze:
+            res = jax.tree.map(lambda a: a[0], res)
+        return res
+
+    def _merge_delta_leg(self, Qb: Array, res: nsa.SearchResult):
+        """The delta buffer's exact-scan leg, folded through the same local
+        two-way merge a butterfly round performs between shard partners."""
+        from repro.online import delta as delta_lib
+
+        idx = self.index
+        q = self.query
+        scan = idx.delta.scan(Qb, idx.distance, k=q.k, kernel=q.kernel)
+        sd, si = scan.dists, scan.ids
+        if q.leaf_radius_filter:
+            # same leaf radius rule the resident ranking applies, so a point
+            # filters identically whether it is buffered or (post
+            # compaction) resident
+            r0 = self.radius[0] if isinstance(self.radius, tuple) \
+                else self.radius
+            keep = sd < r0
+            sd = jnp.where(keep, sd, BIG)
+            si = jnp.where(keep, si, -1)
+        d_m, i_m = delta_lib.merge_topk(res.dists, res.ids, sd, si, q.k)
+        return nsa.SearchResult(
+            dists=d_m, ids=i_m,
+            n_candidates=res.n_candidates + jnp.int32(idx.delta.n_active),
+        )
+
+    # -- debuggability --------------------------------------------------------
+
+    def explain(self) -> str:
+        """Human-readable plan: pipeline, kernel lowering, online legs."""
+        q = self.query
+        effective = self.pipeline
+        if self.pipeline == "two_stage" and (
+            q.rerank_width is None or q.rerank_width <= 0
+            or self.caps.store == "fp32"
+        ):
+            effective = "two_stage_inf"
+        lines = [
+            f"SearchPlan[{self.pipeline}] epoch={self.caps.epoch} "
+            f"levels={self.caps.n_levels} "
+            f"store={self.caps.store or 'dense-resident'}"
+            + (" (payload released)" if self.caps.payload_released else ""),
+            f"  query: k={q.k} radius={self.radius} beam={q.beam}"
+            + (f" rerank_width={q.rerank_width}"
+               if self.pipeline == "two_stage" else "")
+            + f" leaf_radius_filter={q.leaf_radius_filter}",
+            f"  lowering: {_LOWERING[effective]}",
+            "  tombstone mask: "
+            + ("TombstoneSet.valid_mask() (cached device bool[n_0]) folded "
+               "into the leaf ranking via ref.fold_slot_valid"
+               if self.caps.tombstones_dirty else "none (no dead slots)"),
+            "  delta leg: "
+            + ("exact ops.pairwise_distance scan over the delta buffer + "
+               "merge_topk into the result"
+               if self.caps.delta_dirty else "none (delta buffer empty)"),
+        ]
+        return "\n".join(lines)
+
+
+def compile_plan(index, query: Query) -> SearchPlan:
+    """Bind ``query`` to ``index``'s current capabilities. Raises ValueError
+    on capability conflicts (see :func:`_resolve_pipeline`). Callers usually
+    go through ``PDASCIndex.plan`` (the cached surface)."""
+    caps = capabilities(index)
+    pipeline = _resolve_pipeline(query, caps)
+    radius = query.radius if query.radius is not None else index.default_radius
+    plan = SearchPlan(
+        index=index, query=query, caps=caps, pipeline=pipeline, radius=radius
+    )
+    _STATS[pipeline]["compiles"] += 1
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Sharded pipeline (plans over a mesh)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedPlan:
+    """A :class:`Query` lowered onto a device mesh.
+
+    The sharded layout carries no ``PDASCIndex`` object — the stacked
+    per-shard index arrays are runtime inputs (they may be traced, e.g.
+    inside a dry-run cell) — so the plan binds everything *static*: mesh,
+    database axes, distance, radius, per-shard mode, merge collective and
+    kernel knobs. Call with the stacked index:
+
+        plan = compile_sharded_plan(mesh, query, dist="cosine", ...)
+        res = plan(sharded_index, Q)                 # replicated [B, k]
+        res = plan(sharded_index, Q, slot_valid=sv)  # + per-shard tombstones
+
+    Execution is one ``distributed.search_sharded`` dispatch — per-shard
+    search under ``shard_map`` plus the global top-k merge collective.
+    """
+
+    query: Query
+    mesh: object
+    db_axes: tuple
+    dist: dist_lib.Distance
+    radius: object
+    shard_mode: str  # per-shard pipeline: "dense" | "beam"
+    max_children: Optional[tuple]
+    merge: str
+    pipeline: str = "sharded"
+
+    def __call__(self, sharded_index, Q, *, slot_valid=None):
+        _STATS[self.pipeline]["executions"] += 1
+        validate_query_batch(Q, self.dist)
+        q = self.query
+        from repro.core import distributed as dd
+
+        return dd.search_sharded(
+            sharded_index, Q, self.mesh, db_axes=self.db_axes,
+            dist=self.dist, k=q.k, r=self.radius, mode=self.shard_mode,
+            beam=q.beam, max_children=self.max_children, merge=self.merge,
+            leaf_radius_filter=q.leaf_radius_filter,
+            with_stats=q.with_stats, kernel=q.kernel, slot_valid=slot_valid,
+        )
+
+    def explain(self) -> str:
+        axes = "x".join(
+            f"{a}={self.mesh.shape[a]}" for a in self.db_axes
+        )
+        lines = [
+            f"ShardedPlan[sharded/{self.shard_mode}] mesh axes ({axes}), "
+            f"merge={self.merge}",
+            f"  query: k={self.query.k} radius={self.radius} "
+            f"beam={self.query.beam} "
+            f"leaf_radius_filter={self.query.leaf_radius_filter}",
+            f"  per-shard lowering: {_LOWERING[self.shard_mode]}",
+            f"  merge: distributed.topk_merge_{self.merge} over "
+            f"{tuple(self.db_axes)} (global ids = shard offset + local rows)",
+            "  tombstone mask: per-shard slot_valid slices (passed at call "
+            "time; route_writes/local_slot_valid build them)",
+        ]
+        return "\n".join(lines)
+
+
+def compile_sharded_plan(
+    mesh,
+    query: Query,
+    *,
+    dist,
+    db_axes: Sequence[str] = ("data",),
+    max_children: Optional[tuple] = None,
+    merge: str = "butterfly",
+    default_radius: Optional[float] = None,
+) -> ShardedPlan:
+    """Compile a :class:`Query` into a plan over a sharded deployment.
+
+    ``query.execution`` selects the per-shard pipeline: ``"dense"`` or
+    ``"beam"`` (``"auto"``/``"sharded"`` default to dense — the faithful
+    per-shard mode). ``"beam"`` requires ``max_children`` (the static
+    per-level child bound of the stacked sub-indexes). ``query.radius=None``
+    falls back to ``default_radius``; a plan must know its radius statically.
+    """
+    shard_mode = query.execution
+    if shard_mode in ("auto", "sharded"):
+        shard_mode = "dense"
+    if shard_mode not in ("dense", "beam"):
+        raise ValueError(
+            f"sharded plans run per-shard 'dense' or 'beam', not "
+            f"{query.execution!r} (two_stage shards through "
+            f"distributed.scan_quantized_sharded)"
+        )
+    if shard_mode == "beam" and max_children is None:
+        raise ValueError(
+            "per-shard 'beam' needs max_children (the static per-level "
+            "child bound of the stacked sub-indexes)"
+        )
+    radius = query.radius if query.radius is not None else default_radius
+    if radius is None:
+        raise ValueError(
+            "sharded plans need a radius: set Query.radius or pass "
+            "default_radius="
+        )
+    plan = ShardedPlan(
+        query=query, mesh=mesh, db_axes=tuple(db_axes),
+        dist=dist_lib.get(dist), radius=radius, shard_mode=shard_mode,
+        max_children=tuple(max_children) if max_children is not None
+        else None, merge=merge,
+    )
+    _STATS[plan.pipeline]["compiles"] += 1
+    return plan

@@ -1,5 +1,5 @@
 """Serving layer: batched request engine for ANN search and LM decode."""
 
-from repro.serving.engine import BatchingEngine, Request
+from repro.serving.engine import BatchingEngine, QueryHandler, Request
 
-__all__ = ["BatchingEngine", "Request"]
+__all__ = ["BatchingEngine", "QueryHandler", "Request"]

@@ -24,8 +24,13 @@ in flight, an ``online.EpochHandle`` write handler can mutate the delta /
 tombstone tiers and swap index epochs with no torn (mixed-epoch) batch ever
 observable.
 
+``QueryHandler`` adapts a declarative ``repro.query.Query`` into a search
+handler (DESIGN.md §3.8): it resolves the live index epoch once per batch
+and executes the index's cached plan, so re-planning happens only when the
+capability fingerprint changes (e.g. an epoch swap).
+
 Used by ``launch/serve.py`` for two endpoints:
-  * PDASC k-NN queries  (handler = distributed NSA search)
+  * PDASC k-NN queries  (handler = QueryHandler over the live index)
   * recsys CTR scoring  (handler = recsys serve step)
 """
 
@@ -329,3 +334,41 @@ class BatchingEngine:
     def mean_occupancy(self) -> float:
         b = self.stats["batches"]
         return self.stats["occupancy_sum"] / b if b else 0.0
+
+
+class QueryHandler:
+    """Serve a declarative ``repro.query.Query`` as the engine's search
+    handler (DESIGN.md §3.8).
+
+    ``source`` is where the live index comes from: a ``PDASCIndex``, an
+    ``online.EpochHandle`` (anything with a ``.current`` epoch reference),
+    or a zero-arg callable returning the index. Each batch resolves the
+    epoch snapshot **once** and executes ``idx.plan(query)`` — the
+    per-index plan cache keys on the capability fingerprint, so the plan is
+    reused across batches and re-planning happens only when capabilities
+    actually change (an epoch swap publishes a new index object with a
+    fresh cache; a write dirtying a tier flips the fingerprint). Steady
+    state is one cached plan, zero retraces.
+    """
+
+    def __init__(self, source, query):
+        self.query = query
+        if hasattr(source, "current"):  # EpochHandle-like (RCU reference)
+            self._resolve = lambda: source.current
+        elif callable(source) and not hasattr(source, "plan"):
+            self._resolve = source
+        else:  # a bare (frozen or manually-mutated) index
+            self._resolve = lambda: source
+
+    @property
+    def current(self):
+        """The index snapshot the next batch would serve against."""
+        return self._resolve()
+
+    def plan(self):
+        """The plan the next batch would execute (for ``explain()``)."""
+        return self.current.plan(self.query)
+
+    def __call__(self, batch, n_valid):
+        res = self.current.plan(self.query)(batch)
+        return res.dists, res.ids

@@ -1,0 +1,448 @@
+"""Query/plan layer (DESIGN.md §3.8).
+
+Covers:
+  (a) plan-vs-legacy parity: ``idx.plan(q)(Q)`` is bit-identical to the
+      pre-redesign ``search()`` dispatcher (a literal port below is the
+      oracle) for every pipeline — dense / beam / beam_vmap / two_stage —
+      with and without dirty online tiers, and ``search_sharded`` parity in
+      a fake-device subprocess;
+  (b) retrace honesty: executing the same plan (and the same legacy
+      ``search()`` call) twice triggers zero new jit traces;
+  (c) plan caching: equal ``(query, fingerprint)`` returns the same plan
+      object; stale plans transparently re-plan after capability changes;
+  (d) plan-time capability conflicts, search-time query validation, the
+      ``mode=`` back-compat shim (warns DeprecationWarning, still correct),
+      the tombstones' cached device mask, and the engine's QueryHandler.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_devices
+from repro.core import nsa
+from repro.core.distances import BIG
+from repro.core.index import PDASCIndex
+from repro.online import delta as delta_lib
+from repro.query import (
+    Query,
+    capabilities,
+    compile_sharded_plan,
+    plan_stats,
+    reset_plan_stats,
+)
+from repro.serving import BatchingEngine, QueryHandler
+from repro.store import two_stage as two_stage_lib
+
+
+# ---------------------------------------------------------------------------
+# The parity oracle: a literal port of the pre-plan search() dispatcher
+# ---------------------------------------------------------------------------
+
+
+def legacy_search(idx, queries, *, k=10, r=None, mode="beam", beam=32,
+                  rerank_width=128, leaf_radius_filter=False, kernel=None):
+    """The pre-redesign ``PDASCIndex.search`` body, verbatim — the oracle
+    every plan pipeline must match bit-for-bit."""
+    Q = jnp.asarray(queries, jnp.float32)
+    r = float(r) if r is not None else idx.default_radius
+    squeeze = Q.ndim == 1
+    Qb = Q[None, :] if squeeze else Q
+    slot_valid = (
+        idx.tombstones.valid_mask()
+        if idx.tombstones is not None and idx.tombstones.count
+        else None
+    )
+    if mode == "two_stage":
+        res = two_stage_lib.search_two_stage(
+            idx.data, idx.store, Qb, dist=idx.distance, k=k, r=r, beam=beam,
+            max_children=idx.max_children, rerank_width=rerank_width,
+            leaf_radius_filter=leaf_radius_filter, kernel=kernel,
+            slot_valid=slot_valid,
+        )
+    elif mode == "dense":
+        res = nsa.search_dense(
+            idx.data, Qb, dist=idx.distance, k=k, r=r,
+            leaf_radius_filter=leaf_radius_filter, kernel=kernel,
+            slot_valid=slot_valid,
+        )
+    elif mode == "beam":
+        res = nsa.search_beam(
+            idx.data, Qb, dist=idx.distance, k=k, r=r, beam=beam,
+            max_children=idx.max_children,
+            leaf_radius_filter=leaf_radius_filter, kernel=kernel,
+            slot_valid=slot_valid,
+        )
+    else:
+        res = nsa.search_beam_vmap(
+            idx.data, Qb, dist=idx.distance, k=k, r=r, beam=beam,
+            max_children=idx.max_children,
+            leaf_radius_filter=leaf_radius_filter,
+        )
+    if idx.delta is not None and idx.delta.n_active:
+        scan = idx.delta.scan(Qb, idx.distance, k=k, kernel=kernel)
+        sd, si = scan.dists, scan.ids
+        if leaf_radius_filter:
+            keep = sd < r
+            sd = jnp.where(keep, sd, BIG)
+            si = jnp.where(keep, si, -1)
+        d_m, i_m = delta_lib.merge_topk(res.dists, res.ids, sd, si, k)
+        res = nsa.SearchResult(
+            dists=d_m, ids=i_m,
+            n_candidates=res.n_candidates + jnp.int32(idx.delta.n_active),
+        )
+    if squeeze:
+        res = jax.tree.map(lambda a: a[0], res)
+    return res
+
+
+def _build(n=720, d=12, gl=48, store=None, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=gl, distance="euclidean",
+                           radius_quantile=0.6, store=store, store_block=64)
+    return idx, data
+
+
+def _dirty(idx, data, seed=1):
+    """Make the online tiers dirty: a few upserts + deletes of residents."""
+    rng = np.random.default_rng(seed)
+    idx.upsert(data[:4] + rng.normal(0, 0.01, (4, data.shape[1]))
+               .astype(np.float32))
+    resident = np.asarray(idx.data.leaf_ids)
+    idx.delete(resident[resident >= 0][:5])
+    assert idx.delta.n_active and idx.tombstones.count
+    return idx
+
+
+def _assert_bit_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(
+        np.asarray(a.n_candidates), np.asarray(b.n_candidates)
+    )
+
+
+# ---------------------------------------------------------------------------
+# (a) plan-vs-legacy parity, clean + dirty online tiers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dirty", [False, True], ids=["clean", "dirty"])
+@pytest.mark.parametrize("mode", ["dense", "beam", "beam_vmap", "two_stage"])
+def test_plan_matches_legacy_pipelines(mode, dirty):
+    if mode == "beam_vmap" and dirty:
+        pytest.skip("beam_vmap rejects dirty tiers (tested separately)")
+    idx, data = _build(store="int8" if mode == "two_stage" else None)
+    if dirty:
+        _dirty(idx, data)
+    Q = data[:9] + 0.05
+    kw = dict(rerank_width=32) if mode == "two_stage" else {}
+    expect = legacy_search(idx, Q, k=7, mode=mode, beam=16, **kw)
+    got = idx.plan(Query(k=7, execution=mode, beam=16, **kw))(Q)
+    _assert_bit_identical(got, expect)
+    # 1-d query keeps the squeezed-result contract
+    e1 = legacy_search(idx, Q[0], k=7, mode=mode, beam=16, **kw)
+    g1 = idx.plan(Query(k=7, execution=mode, beam=16, **kw))(Q[0])
+    assert g1.dists.shape == e1.dists.shape == (7,)
+    _assert_bit_identical(g1, e1)
+
+
+def test_plan_two_stage_infinite_rerank_matches_beam():
+    """∞ rerank through the plan layer keeps the bit-identity guarantee."""
+    idx, data = _build(store="int8")
+    Q = data[:6]
+    inf = idx.plan(Query(k=5, execution="two_stage", rerank_width=None))(Q)
+    beam = idx.plan(Query(k=5, execution="beam"))(Q)
+    _assert_bit_identical(inf, beam)
+
+
+def test_mode_shim_warns_and_is_bit_identical():
+    idx, data = _build()
+    Q = data[:5]
+    with pytest.warns(DeprecationWarning, match="mode=.*deprecated"):
+        legacy = idx.search(Q, k=4, mode="dense")
+    via_plan = idx.plan(Query(k=4, execution="dense"))(Q)
+    _assert_bit_identical(legacy, via_plan)
+
+
+def test_default_search_path_does_not_warn():
+    idx, data = _build()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = idx.search(data[:3], k=3)  # no mode= -> no shim warning
+        res2 = idx.search(data[:3], k=3, query=Query(k=3))
+    _assert_bit_identical(res, res2)
+
+
+# ---------------------------------------------------------------------------
+# (b) retrace honesty
+# ---------------------------------------------------------------------------
+
+
+def _trace_counts():
+    """Cache sizes of every module-level jitted search entry point (the
+    delta scan included — the dirty-tier merge leg must not retrace)."""
+    fns = [nsa.search_dense, nsa.search_beam, nsa.search_beam_vmap,
+           nsa.descend_beam, delta_lib._scan]
+    return [fn._cache_size() for fn in fns]
+
+
+@pytest.mark.parametrize("mode", ["dense", "beam", "two_stage"])
+@pytest.mark.parametrize("dirty", [False, True], ids=["clean", "dirty"])
+def test_repeated_execution_never_retraces(mode, dirty):
+    idx, data = _build(store="int8" if mode == "two_stage" else None)
+    if dirty:
+        _dirty(idx, data)
+    Q = data[:8]
+    q = Query(k=5, execution=mode, beam=16)
+    plan = idx.plan(q)
+    plan(Q)  # first execution: traces compile
+    before = _trace_counts()
+    for _ in range(3):
+        plan(Q)  # same plan
+        idx.plan(q)(Q)  # re-planned equal query (cache hit)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            idx.search(Q, k=5, mode=mode, beam=16)  # legacy shim
+    assert _trace_counts() == before, (
+        f"re-executing an unchanged plan retraced: {before} -> "
+        f"{_trace_counts()}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# (c) plan caching + staleness
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_identity_and_stats():
+    idx, data = _build()
+    reset_plan_stats()
+    p1 = idx.plan(Query(k=5))
+    p2 = idx.plan(Query(k=5))
+    assert p1 is p2
+    assert idx.plan(Query(k=6)) is not p1
+    stats = plan_stats()["beam"]
+    assert stats["compiles"] == 2 and stats["cache_hits"] == 1
+    p1(data[:4])
+    assert plan_stats()["beam"]["executions"] == 1
+
+
+def test_stale_plan_transparently_replans():
+    idx, data = _build()
+    plan = idx.plan(Query(k=5))
+    clean = plan(data[:4])
+    caps_before = capabilities(idx)
+    _dirty(idx, data)
+    assert capabilities(idx) != caps_before
+    fresh = idx.plan(Query(k=5))
+    assert fresh is not plan  # new fingerprint -> new plan
+    # the stale plan still answers correctly (it re-resolves through the
+    # index's plan cache) — including the new delta entries
+    stale_res = plan(data[:4])
+    _assert_bit_identical(stale_res, fresh(data[:4]))
+    assert not np.array_equal(np.asarray(stale_res.ids),
+                              np.asarray(clean.ids))
+
+
+def test_plan_survives_compaction_epoch_swap():
+    idx, data = _build(store="int8")
+    _dirty(idx, data)
+    new = idx.compact(scope="full")
+    assert new.epoch == idx.epoch + 1
+    # fresh epoch object: fresh plan cache, plans bind the new fingerprint
+    p_old, p_new = idx.plan(Query(k=4)), new.plan(Query(k=4))
+    assert p_old is not p_new
+    assert p_new.caps.epoch == idx.epoch + 1
+    res = p_new(data[:4])
+    assert np.asarray(res.ids).shape == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# (d) plan-time conflicts, validation, explain, mask caching, serving
+# ---------------------------------------------------------------------------
+
+
+def test_capability_conflicts_are_plan_time_errors():
+    idx, data = _build()
+    with pytest.raises(ValueError, match="two_stage.*leaf store"):
+        idx.plan(Query(execution="two_stage"))
+    _dirty(idx, data)
+    with pytest.raises(ValueError, match="beam_vmap.*online"):
+        idx.plan(Query(execution="beam_vmap"))
+    with pytest.raises(ValueError, match="mesh"):
+        idx.plan(Query(execution="sharded"))
+
+    rel, _ = _build(store="int8", seed=3)
+    rel.release_dense_payload()
+    for ex in ("dense", "beam", "beam_vmap"):
+        with pytest.raises(ValueError, match="dense leaf payload"):
+            rel.plan(Query(execution=ex))
+    # auto on a released index binds two_stage instead of erroring
+    assert rel.plan(Query()).pipeline == "two_stage"
+
+
+def test_query_spec_validation():
+    with pytest.raises(ValueError, match="unknown search mode"):
+        Query(execution="bogus")
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        Query(k=0)
+    # schedules normalise to hashable tuples
+    q = Query(beam=[4, 8, 16], radius=[1, 2, 3])
+    assert q.beam == (4, 8, 16) and q.radius == (1.0, 2.0, 3.0)
+    hash(q)
+
+
+def test_search_time_query_validation():
+    idx, data = _build()
+    bad = data[:3].copy()
+    bad[1, 0] = np.nan
+    plan = idx.plan(Query(k=3))
+    with pytest.raises(ValueError, match="non-finite"):
+        plan(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.search(bad, k=3)
+    with pytest.raises(ValueError, match="does not match the index"):
+        plan(data[:3, :-1])
+    with pytest.raises(ValueError, match=r"\[d\] or \[B, d\]"):
+        plan(data[:4].reshape(2, 2, -1))
+    # device arrays: metadata checks still apply, but the non-finite data
+    # scan is host-input-only (it would force a blocking device->host
+    # transfer per call on the serving hot path)
+    with pytest.raises(ValueError, match="does not match the index"):
+        plan(jnp.asarray(data[:3, :-1]))
+    plan(jnp.asarray(bad))  # trusted: committed device arrays skip the scan
+
+    # needs_dim distances name themselves in the error
+    geo = np.stack([np.random.default_rng(0).uniform(-1, 1, 200),
+                    np.random.default_rng(1).uniform(-1, 1, 200)], 1)
+    gidx = PDASCIndex.build(geo.astype(np.float32), gl=24,
+                            distance="haversine", radius_quantile=0.6)
+    with pytest.raises(ValueError, match="haversine.*d=2"):
+        gidx.plan(Query(k=3))(np.zeros((2, 5), np.float32))
+
+
+def test_explain_names_pipeline_and_legs():
+    idx, data = _build(store="int8")
+    text = idx.plan(Query(k=5, execution="two_stage")).explain()
+    assert "two_stage" in text and "scan_quantized" in text
+    assert "none (no dead slots)" in text and "delta buffer empty" in text
+    _dirty(idx, data)
+    text = idx.plan(Query(k=5, execution="beam")).explain()
+    assert "rank_gathered" in text
+    assert "valid_mask" in text and "merge_topk" in text
+
+
+def test_tombstone_valid_mask_device_cache():
+    """Satellite: the unpacked device mask is cached on the TombstoneSet —
+    repeated searches between deletes reuse one array; a new delete (and
+    only a mutation) invalidates it."""
+    idx, data = _build()
+    _dirty(idx, data)
+    ts = idx.tombstones
+    m1 = ts.valid_mask()
+    assert ts.valid_mask() is m1  # cached device array, no re-upload
+    idx.plan(Query(k=3))(data[:2])
+    assert ts.valid_mask() is m1  # searching does not invalidate
+    resident = np.asarray(idx.data.leaf_ids)
+    idx.delete(resident[resident >= 0][10:11])
+    m2 = ts.valid_mask()
+    assert m2 is not m1  # mutation invalidated the cache
+    assert ts.valid_mask() is m2
+    # re-deleting an already-dead slot is a no-op: cache stays valid
+    before = ts.count
+    idx.delete(resident[resident >= 0][10:11])
+    assert ts.count == before and ts.valid_mask() is m2
+
+
+def test_engine_query_handler_reuses_plans_and_sees_writes():
+    from repro.online import EpochHandle
+
+    rng = np.random.default_rng(11)
+    data = rng.normal(size=(160, 8)).astype(np.float32)
+    idx = PDASCIndex.build(data, gl=32, distance="euclidean",
+                           radius_quantile=0.9)
+    idx.enable_mutations(delta_capacity=64)
+    handle = EpochHandle(idx)
+    handler = QueryHandler(handle, Query(k=1, execution="dense", radius=1e9))
+    engine = BatchingEngine(handler, batch_size=2, max_wait_ms=1.0,
+                            pad_payload=np.zeros(8, np.float32),
+                            write_handler=handle.apply_writes)
+    try:
+        target = np.full((8,), -42.0, np.float32)
+        engine.submit(data[0]).wait(timeout=120)  # warmup
+        plan_before = handler.plan()
+        engine.submit(data[1]).wait(timeout=60)
+        # steady state: same capability fingerprint -> the same plan object
+        assert handler.plan() is plan_before
+        w = engine.submit_upsert(target)
+        s = engine.submit(target)
+        new_id = int(w.wait(timeout=60)[0])
+        ids = np.asarray(s.wait(timeout=60)[1]).ravel()
+        assert int(ids[0]) == new_id  # read-your-writes through the plan
+        # the write flipped the fingerprint -> the handler re-planned
+        assert handler.plan() is not plan_before
+    finally:
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded pipeline (fake-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_plan_parity_and_retrace():
+    out = run_in_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed as dd, distances as dl, msa
+from repro.launch.mesh import make_mesh
+from repro.query import Query, compile_sharded_plan
+
+mesh = make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(2)
+db = jnp.asarray(rng.normal(size=(1280, 10)).astype(np.float32))
+Q = jnp.asarray(rng.normal(size=(12, 10)).astype(np.float32))
+dist = dl.get("euclidean")
+sidx = dd.build_sharded(db, mesh, db_axes=("data",), gl=40,
+                        distance="euclidean")
+mcs = msa.max_children(jax.tree.map(lambda a: a[0], sidx))
+r = 6.0
+
+for shard_mode, kw in (("dense", {}), ("beam", dict(max_children=mcs))):
+    plan = compile_sharded_plan(
+        mesh, Query(k=10, radius=r, execution=shard_mode, beam=16),
+        dist="euclidean", db_axes=("data",), **kw)
+    res = plan(sidx, Q)
+    legacy = dd.search_sharded(
+        sidx, Q, mesh, db_axes=("data",), dist=dist, k=10, r=r,
+        mode=shard_mode, beam=16, **kw)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(legacy.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(legacy.dists))
+
+# dirty-tier (tombstoned) sharded parity: mask the first two rows of shard 0
+sv = np.ones((4, sidx.leaf_ids.shape[1]), bool)
+leaf0 = np.asarray(sidx.leaf_ids[0])
+dead_rows = leaf0[leaf0 >= 0][:2]
+sv[0] = dd.local_slot_valid(leaf0, dead_rows)
+plan = compile_sharded_plan(mesh, Query(k=10, radius=r, execution="dense"),
+                            dist="euclidean", db_axes=("data",))
+res_m = plan(sidx, Q, slot_valid=sv)
+legacy_m = dd.search_sharded(sidx, Q, mesh, db_axes=("data",), dist=dist,
+                             k=10, r=r, mode="dense", slot_valid=sv)
+np.testing.assert_array_equal(np.asarray(res_m.ids), np.asarray(legacy_m.ids))
+dead_global = set((dead_rows + 0 * sidx.leaf_ids.shape[1]).tolist())
+assert not (dead_global & set(np.asarray(res_m.ids).ravel().tolist()))
+
+# retrace honesty: repeated plan execution reuses one cached executor
+misses = dd._sharded_search_fn.cache_info().misses
+for _ in range(3):
+    plan(sidx, Q, slot_valid=sv)
+assert dd._sharded_search_fn.cache_info().misses == misses
+print("SHARDED_PLAN_OK")
+""")
+    assert "SHARDED_PLAN_OK" in out
