@@ -1,0 +1,166 @@
+"""Kernel block-size autotuner benchmark (``BENCH_kernels.json``).
+
+For each kernel op (pairwise / knn / rank / scan / swap) at a representative
+serving shape it runs the autotuner sweep (``repro.kernels.autotune.tune``):
+every VMEM-feasible candidate tiling from the backend's grid is timed
+(warmup + median-of-k) and scored ``median_us * (1 + padding_waste)``; the
+winner is persisted into the versioned on-disk cache that
+``KernelConfig(auto=True)`` resolves from at dispatch time.
+
+Recorded per op: the full sweep (knobs, us, waste, score), the hand-set
+default's row, the winner, and the winner-vs-default speedup. The
+acceptance bar — the winner's score never exceeds the default's — is
+structural (the default is always a sweep member and the winner is the
+argmin) and asserted here so a scoring regression cannot ship silently.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke]
+        [--out experiments/kernels.json] [--bench-out BENCH_kernels.json]
+
+``--smoke`` sweeps tiny shapes with one rep into a throwaway cache
+(correctness of the tune -> cache -> resolve loop, no stable numbers) so CI
+can catch autotuner regressions after the tier-1 suite, matching the other
+``--smoke`` bench steps. On CPU all timing runs the interpret-mode kernels —
+relative tile rankings are indicative, the TPU story is the dry-run roofline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.kernels import autotune
+from repro.kernels import ops as kops
+
+# (op, form, dtype-key, shape) — serving-representative shapes: the
+# dense_embed bench config (n=7800, d=100, gl=256) for the search ops, the
+# packed payload formats for the scan, the group-length axis for the swap.
+SWEEPS = [
+    ("pairwise", "l2", "float32", (512, 2048, 100)),
+    ("pairwise", "l1", "float32", (256, 512, 64)),
+    ("knn", "l2", "float32", (128, 2048, 100)),
+    ("rank", "l2", "float32", (128, 512, 100)),
+    ("scan", "l2", "int8", (128, 512, 100)),
+    ("scan", "l2", "int4", (128, 512, 100)),
+    ("scan", "l2", "binary", (128, 512, 100)),
+    ("swap", "none", "float32", (1024,)),
+]
+
+SMOKE_SWEEPS = [
+    ("pairwise", "l2", "float32", (64, 96, 32)),
+    ("knn", "l2", "float32", (32, 128, 16)),
+    ("rank", "l2", "float32", (16, 64, 16)),
+    ("scan", "l2", "int4", (16, 64, 16)),
+    ("swap", "none", "float32", (96,)),
+]
+
+
+def run(smoke: bool = False):
+    sweeps = SMOKE_SWEEPS if smoke else SWEEPS
+    reps, warmup = (1, 0) if smoke else (5, 2)
+    rows = []
+    for op, form, dtype, shape in sweeps:
+        t0 = time.perf_counter()
+        r = autotune.tune(op, form=form, dtype=dtype, shape=shape,
+                          reps=reps, warmup=warmup, force=True)
+        wall = time.perf_counter() - t0
+        winner_row = next(
+            s for s in r["sweep"] if s["knobs"] == r["winner"]
+        )
+        default_row = next(
+            s for s in r["sweep"] if s["knobs"] == r["default"]
+        )
+        # Structural acceptance: the default is a sweep member and the
+        # winner is the score argmin, so this can only fire on a scoring /
+        # grid bug — exactly what it is here to catch.
+        assert winner_row["score"] <= default_row["score"], (
+            "tuned winner scored worse than the hand-set default",
+            op, form, dtype, shape, winner_row, default_row,
+        )
+        row = dict(
+            bench="kernel_autotune", op=op, form=form, dtype=dtype,
+            shape=list(shape), candidates=len(r["sweep"]),
+            default=r["default"], default_us=round(r["default_us"], 1),
+            winner=r["winner"], winner_us=round(r["winner_us"], 1),
+            speedup_vs_default=round(
+                r["default_us"] / max(r["winner_us"], 1e-9), 2
+            ),
+            default_waste=round(default_row["waste"], 4),
+            winner_waste=round(winner_row["waste"], 4),
+            sweep=r["sweep"],
+            tune_wall_s=round(wall, 2),
+        )
+        rows.append(row)
+        print(f"[kernels] {op}/{form}/{dtype}{tuple(shape)}: "
+              f"default {row['default']} {row['default_us']}us -> "
+              f"winner {row['winner']} {row['winner_us']}us "
+              f"({row['speedup_vs_default']}x, {row['candidates']} "
+              f"candidates)", flush=True)
+
+    # Round-trip the resolution chain the serving path uses: the winners
+    # just recorded must be what KernelConfig(auto=True) resolves.
+    for row in rows:
+        op, form, dtype, shape = (row["op"], row["form"], row["dtype"],
+                                  tuple(row["shape"]))
+        resolved = kops.resolve_blocks(
+            op, form, dtype, shape, kops.KernelConfig(auto=True)
+        )
+        for knob, val in row["winner"].items():
+            assert resolved[knob] == val, (
+                "auto=True did not resolve the tuned winner",
+                op, knob, val, resolved,
+            )
+    print(f"[kernels] auto=True resolves all {len(rows)} recorded winners "
+          f"(cache: {autotune.cache_path()}, gen {autotune.generation()})",
+          flush=True)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes, one rep, throwaway cache (CI)")
+    p.add_argument("--out", default="experiments/kernels.json")
+    p.add_argument("--bench-out", default="BENCH_kernels.json")
+    args = p.parse_args(argv)
+
+    if args.smoke:
+        # never pollute the user's winner cache from a CI smoke run
+        tmp = tempfile.mkdtemp(prefix="repro-tune-smoke-")
+        autotune.set_cache_path(os.path.join(tmp, "tune.json"))
+
+    rows = run(smoke=args.smoke)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not args.smoke:
+        payload = dict(
+            bench="kernel_block_autotuner",
+            backend=jax.default_backend(),
+            cache_version=autotune.CACHE_VERSION,
+            baseline="hand-set per-op block defaults (tiling.OP_DEFAULTS), "
+                     "shrink-to-shape + VMEM-budget fitted",
+            new="per-(backend, op, form, dtype, shape-bucket) tuned winner "
+                "from the timed sweep, persisted and resolved by "
+                "KernelConfig(auto=True)",
+            score="median_us * (1 + padding_waste)",
+            rows=rows,
+            headline=[
+                dict(op=r["op"], form=r["form"], dtype=r["dtype"],
+                     winner=r["winner"],
+                     speedup_vs_default=r["speedup_vs_default"])
+                for r in rows
+            ],
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[kernels] wrote {args.bench_out}: "
+              f"{[r['speedup_vs_default'] for r in rows]}x vs defaults")
+
+
+if __name__ == "__main__":
+    main()

@@ -171,6 +171,25 @@ def run(seed: int = 0, modes=("dense", "beam", "radius", "kernel")):
         rows += run_radius(train, test, gt, idx)
     if "kernel" in modes:
         rows += run_kernel_micro(train, test)
+        # Default-vs-tuned kernel configs at the bench shapes: the blocks
+        # the dispatch resolves untouched vs under KernelConfig(auto=True)
+        # (identical until bench_kernels.py populates the tuner cache).
+        d_dim = train.shape[1]
+        kern_auto = ops.KernelConfig(auto=True)
+        cfg_rows = {
+            op: dict(
+                default=ops.resolve_blocks(op, "l2", "float32", shape),
+                tuned=ops.resolve_blocks(op, "l2", "float32", shape,
+                                         kern_auto),
+            )
+            for op, shape in (
+                ("pairwise", (len(test), len(train), d_dim)),
+                ("knn", (len(test), len(train), d_dim)),
+                ("rank", (len(test), 512, d_dim)),
+            )
+        }
+        rows.append(dict(bench="kernel_configs", configs=cfg_rows))
+        print(f"[search] kernel configs: {cfg_rows}", flush=True)
     stats = plan_stats()
     if stats:
         # Planner honesty record: each timed pipeline should show ONE plan
@@ -201,6 +220,7 @@ def main(argv=None):
     cmp_rows = [r for r in rows if r.get("bench") == "beam_batched_vs_vmap"]
     mem_rows = [r for r in rows if r.get("bench") == "memory"]
     stat_rows = [r for r in rows if r.get("bench") == "plan_stats"]
+    cfg_rows = [r for r in rows if r.get("bench") == "kernel_configs"]
     if cmp_rows:
         # Headline: the default serving beam width (PDASCIndex.search).
         headline = next((r for r in cmp_rows if r["beam"] == 32), cmp_rows[-1])
@@ -223,6 +243,9 @@ def main(argv=None):
             # query/plan layer, DESIGN.md §3.8): compiles should stay O(one
             # per distinct Query) while executions grow with traffic.
             plan_stats=stat_rows[0]["per_pipeline"] if stat_rows else None,
+            # blocks the dispatch resolves by default vs KernelConfig(auto=
+            # True) against the current tuner cache (bench_kernels.py)
+            kernel_configs=cfg_rows[0]["configs"] if cfg_rows else None,
         )
         with open(args.bench_out, "w") as f:
             json.dump(summary, f, indent=1)

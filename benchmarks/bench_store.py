@@ -1,7 +1,8 @@
 """Storage substrate benchmark: tiered leaf store vs the dense resident path.
 
 For the reference config (dense_embed, gl=256, euclidean, k=10, beam=32) it
-records, per payload backend (dense fp32 / fp16 / int8):
+records, per payload backend (dense fp32 / fp16 / int8 / packed int4 /
+packed binary):
 
   * recall@10 against exact ground truth,
   * us/query (two-stage search includes the host-side granule fetch — that
@@ -10,8 +11,12 @@ records, per payload backend (dense fp32 / fp16 / int8):
 
 into ``BENCH_store.json``, and asserts the headline acceptance bars: the
 int8 payload tier at <= 0.30x the dense resident bytes/vector with recall@10
-within 1% of ``search_beam``, and ``rerank_width=None`` (∞) bit-identical to
-``search_beam``.
+within 1% of ``search_beam``; the packed int4 tier at <= 0.5x the *int8*
+resident bytes with recall@10 within 0.02 of the int8 two-stage run (the
+rerank absorbing the extra quantisation loss); and ``rerank_width=None``
+(∞) bit-identical to ``search_beam``. The default-vs-tuned kernel configs
+the scan would use (``KernelConfig(auto=True)``, kernels/autotune.py) are
+recorded alongside.
 
     PYTHONPATH=src python -m benchmarks.bench_store [--smoke]
         [--out experiments/store.json] [--bench-out BENCH_store.json]
@@ -36,6 +41,7 @@ from benchmarks.bench_search import _recall
 from repro.baselines import exact_knn
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
+from repro.kernels import ops as kops
 from repro.query import Query
 
 
@@ -84,7 +90,9 @@ def run(smoke: bool = False, seed: int = 0):
 
     tmp = tempfile.mkdtemp()
     for backend, path in (("fp16", None),
-                          ("int8", os.path.join(tmp, "payload.bin"))):
+                          ("int8", os.path.join(tmp, "payload.bin")),
+                          ("int4", None),
+                          ("binary", None)):
         store = idx.attach_store(backend, block=block, path=path)
         # ∞ rerank must reproduce search_beam exactly (the acceptance gate).
         res_inf = idx.plan(Query(k=k, execution="two_stage", beam=beam,
@@ -98,12 +106,19 @@ def run(smoke: bool = False, seed: int = 0):
         res_ts, us_ts = _timed(lambda: plan_ts(test), n_queries, repeats)
         recall_ts = _recall(np.asarray(res_ts.ids), gt)
         ppv = round(store.resident_bytes / n_points, 2)
+        # codes alone (no per-block scales): the packed-format comparison
+        # bar — the 4B/block scale overhead is identical across backends.
+        codes_ppv = round(
+            store.codes.size * store.codes.dtype.itemsize / n_points, 2
+        )
         row = dict(
             bench="store", backend=backend, mode="two_stage",
             rerank_width=rerank, block=block,
             on_disk=store.exact.on_disk,
+            code_format=store.code_format,
             recall=recall_ts, us_per_q=round(us_ts, 1),
             payload_bytes_per_vector=ppv,
+            code_bytes_per_vector=codes_ppv,
             payload_ratio=round(ppv / dense_ppv, 4),
             recall_delta_vs_beam=round(recall_ts - recall_beam, 4),
         )
@@ -126,11 +141,41 @@ def run(smoke: bool = False, seed: int = 0):
     rows.append(dict(bench="memory_released", **mem_rel))
     print(f"[store] released memory: {mem_rel}", flush=True)
 
+    # Default-vs-tuned kernel configs for the stage-1 scan per code dtype:
+    # what the scan dispatch would use untouched vs under
+    # KernelConfig(auto=True) (identical until a tuner cache is populated —
+    # benchmarks/bench_kernels.py writes one).
+    d_dim = train.shape[1]
+    scan_shape = (n_queries, 512, d_dim)
+    cfg_rows = {
+        dtype_key: dict(
+            default=kops.resolve_blocks("scan", "l2", dtype_key, scan_shape),
+            tuned=kops.resolve_blocks("scan", "l2", dtype_key, scan_shape,
+                                      kops.KernelConfig(auto=True)),
+        )
+        for dtype_key in ("int8", "int4", "binary")
+    }
+    rows.append(dict(bench="kernel_configs", op="scan",
+                     shape=list(scan_shape), configs=cfg_rows))
+    print(f"[store] scan kernel configs: {cfg_rows}", flush=True)
+
     int8_row = next(r for r in rows if r.get("backend") == "int8")
     assert int8_row["payload_ratio"] <= 0.30, (
         "int8 payload tier above the 0.30x resident bytes bar", int8_row)
     assert abs(int8_row["recall_delta_vs_beam"]) <= 0.01, (
         "int8 two-stage recall drifted >1% from search_beam", int8_row)
+    # Packed int4 bars: half the int8 code bytes (exact: two codes/byte),
+    # recall within 0.02 of the int8 two-stage run — the exact rerank
+    # absorbing the coarser scan. Binary has no recall bar (sign-only scan
+    # is a recall/memory trade the numbers document, not gate).
+    int4_row = next(r for r in rows if r.get("backend") == "int4")
+    # +0.01B slack: both sides are rounded to 2 decimals for the report, and
+    # exactly-half values can round across the bar (50.665 -> 50.67).
+    assert int4_row["code_bytes_per_vector"] <= (
+        0.5 * int8_row["code_bytes_per_vector"] + 0.01
+    ), ("int4 payload code bytes above half of int8", int4_row, int8_row)
+    assert abs(int4_row["recall"] - int8_row["recall"]) <= 0.02, (
+        "int4 two-stage recall drifted >0.02 from int8", int4_row, int8_row)
     return rows
 
 
@@ -149,6 +194,7 @@ def main(argv=None):
         json.dump(rows, f, indent=1)
     if not args.smoke:
         int8_row = next(r for r in rows if r.get("backend") == "int8")
+        int4_row = next(r for r in rows if r.get("backend") == "int4")
         payload = dict(
             bench="tiered_leaf_store_vs_dense_resident",
             backend=jax.default_backend(),
@@ -163,6 +209,13 @@ def main(argv=None):
             rows=rows,
             headline_payload_ratio=int8_row["payload_ratio"],
             headline_recall_delta=int8_row["recall_delta_vs_beam"],
+            headline_int4_code_ratio_vs_int8=round(
+                int4_row["code_bytes_per_vector"]
+                / int8_row["code_bytes_per_vector"], 4
+            ),
+            headline_int4_recall_delta_vs_int8=round(
+                int4_row["recall"] - int8_row["recall"], 4
+            ),
         )
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=1)

@@ -48,18 +48,19 @@ def table(rows, mesh: str = "single") -> str:
         mem = r.get("memory_analysis", {})
         peak = mem.get("temp_size_in_bytes", 0) + mem.get(
             "argument_size_in_bytes", 0)
-        out.append(
+        # One row built cell-by-cell — only the MODEL/HLO ratio cell is
+        # conditional. (The old code made the *whole row pair* the
+        # conditional's operands, so the two copies had to be kept in sync
+        # by hand and a drifted branch silently emitted a truncated row.)
+        row = (
             f"| {r['arch']} | {r['shape']} | {r['kind']} "
             f"| {_fmt_s(rf['compute_s'])} | {_fmt_s(rf['memory_s'])} "
             f"| {_fmt_s(rf['collective_s'])} "
             f"| {rf['bottleneck'].replace('_s', '')} "
-            f"| {ratio:.2f} " if ratio else
-            f"| {r['arch']} | {r['shape']} | {r['kind']} "
-            f"| {_fmt_s(rf['compute_s'])} | {_fmt_s(rf['memory_s'])} "
-            f"| {_fmt_s(rf['collective_s'])} "
-            f"| {rf['bottleneck'].replace('_s', '')} | - "
         )
-        out[-1] += f"| {peak / 2**30:.2f}GiB |"
+        row += f"| {ratio:.2f} " if ratio else "| - "
+        row += f"| {peak / 2**30:.2f}GiB |"
+        out.append(row)
     return "\n".join(out)
 
 

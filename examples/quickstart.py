@@ -7,6 +7,13 @@ ground truth.
 One index, one query surface: a ``repro.query.Query`` says *what* to
 retrieve; ``idx.plan(query)`` binds *how* (which pipeline, which kernel
 ops) from the index's capabilities — ``plan.explain()`` shows the choice.
+
+Kernel block sizes default to hand-set per-op tiles. After a one-off
+autotune sweep (``PYTHONPATH=src python -m benchmarks.bench_kernels``,
+which persists per-shape winners to ``~/.cache/repro/kernel_tune.json``),
+pass ``Query(k=10, kernel=ops.KernelConfig(auto=True))`` and every plan
+resolves the tuned blocks instead — explicitly-set knobs still win, and
+plans re-compile automatically when the cache is retuned (DESIGN.md §3.9).
 """
 
 import numpy as np

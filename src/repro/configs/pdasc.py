@@ -36,6 +36,10 @@ class PDASCArchConfig:
     bg: int = _KD.bg
     row_chunk: int = _KD.row_chunk
     group_chunk: int = _KD.group_chunk
+    # auto=True resolves knobs left at their defaults from the persisted
+    # block-size tuner cache (kernels/autotune.py); explicitly set fields
+    # (and explicit per-call knobs) always win over tuned winners.
+    auto: bool = _KD.auto
     # Build-algorithm knob (not a block size, so not in KernelConfig): the
     # eager-swap per-sweep relative improvement cutoff (0 = full convergence).
     swap_tol: float = 1e-3
@@ -55,9 +59,16 @@ class PDASCArchConfig:
     compact_tombstone_ratio: float = 0.2
 
     def kernel_config(self) -> KernelConfig:
-        return KernelConfig(bm=self.bm, bn=self.bn, bd=self.bd, bq=self.bq,
-                            bg=self.bg, row_chunk=self.row_chunk,
-                            group_chunk=self.group_chunk)
+        # Built field-wise from KernelConfig's own field list so a knob added
+        # to KernelConfig (mirrored here as a same-named config field) can
+        # never silently fall out of the arch config's kernel threading —
+        # tests/test_configs.py asserts the mirror stays complete.
+        mirrored = {
+            f: getattr(self, f)
+            for f in KernelConfig._fields
+            if hasattr(self, f)
+        }
+        return KernelConfig()._replace(**mirrored)
 
     def search_query(self, **overrides):
         """The arch's search protocol as a declarative ``repro.query.Query``

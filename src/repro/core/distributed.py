@@ -347,7 +347,9 @@ def shard_payload(store, mesh: Mesh, *, db_axes: Sequence[str] = ("data",)):
     ``shard_map`` over ``db_axes`` (:func:`scan_quantized_sharded`).
     """
     if store.backend == "fp32" or store.codes is None:
-        raise ValueError("shard_payload needs a quantised store (int8/fp16)")
+        raise ValueError(
+            "shard_payload needs a quantised store (int8/fp16/int4/binary)"
+        )
     Pn = _axes_size(mesh, db_axes)
     n, d = store.codes.shape
     if n % Pn:
@@ -380,6 +382,7 @@ def scan_quantized_sharded(
     merge: str = "butterfly",
     kernel: Optional[kops.KernelConfig] = None,
     slot_valid: Optional[Array] = None,
+    code_format: str = "dense",
 ):
     """Distributed stage-1 scan: each node scans the candidates it owns.
 
@@ -390,7 +393,10 @@ def scan_quantized_sharded(
     slots [B, k])`` replicated, ``slots`` being *global* leaf rows (-1 for
     missing) — the input of the exact rerank fetch. ``slot_valid``:
     optional ``[P, per]`` tombstone mask sharded with the codes — each node
-    drops its own deleted rows before the scan.
+    drops its own deleted rows before the scan. ``code_format``: the store's
+    packed-code layout (``"dense"`` | ``"int4"`` | ``"binary"``,
+    ``LeafStore.code_format``) — shards carry packed containers and unpack
+    per-tile exactly like the local scan.
     """
     kernel = kernel or kops.DEFAULT
     per = codes.shape[1]
@@ -403,8 +409,7 @@ def scan_quantized_sharded(
         d, slot = kops.scan_quantized(
             Qr, codes_l[0], scales_l[0], ci_local, local_ok, distance,
             k=k, block=block, slot_valid=sv[0][0] if sv else None,
-            bq=kernel.bq, bn=kernel.bn,
-            force_pallas=kernel.force_pallas,
+            code_format=code_format, config=kernel,
         )
         gslots = jnp.take_along_axis(ci, slot, axis=1)
         gslots = jnp.where(d < kref.BIG / 2, gslots, -1)

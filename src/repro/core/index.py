@@ -59,7 +59,9 @@ Array = jax.Array
 
 _FORMAT_VERSION = 2  # v2: tiered leaf store (payload codes + scales)
 _MUTABLE_VERSION = 3  # v3: v2 + online tiers (delta buffer, tombstones)
-_SUPPORTED_VERSIONS = (1, 2, 3)  # v1 artifacts load with a dense fp32 payload
+_PACKED_VERSION = 4  # v4: packed payload codes (int4 / binary backends)
+# v1 artifacts load with a dense fp32 payload; older versions load unchanged.
+_SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 DEFAULT_DELTA_CAPACITY = 4096
 
@@ -207,7 +209,7 @@ class PDASCIndex:
         if self.store is None or self.store.backend == "fp32":
             raise ValueError(
                 "release_dense_payload needs a quantised store "
-                "(attach_store('int8'|'fp16') first)"
+                "(attach_store('int8'|'fp16'|'int4'|'binary') first)"
             )
         if self._payload_released:
             return
@@ -280,15 +282,13 @@ class PDASCIndex:
             leaf = self.data.levels[0]
             d, slot = kops.rank_gathered(
                 Qb, leaf.points, leaf.sq_norm, cand_idx, cand_ok,
-                self.distance, k=1, bq=kernel.bq, bn=kernel.bn,
-                force_pallas=kernel.force_pallas,
+                self.distance, k=1, config=kernel,
             )
         else:  # payload released: route against the quantised codes
             d, slot = kops.scan_quantized(
                 Qb, self.store.codes, self.store.scales, cand_idx, cand_ok,
                 self.distance, k=1, block=self.store.block,
-                bq=kernel.bq, bn=kernel.bn,
-                force_pallas=kernel.force_pallas,
+                code_format=self.store.code_format, config=kernel,
             )
         slots = np.asarray(jnp.take_along_axis(cand_idx, slot, axis=1)[:, 0])
         found = np.asarray(d[:, 0]) < BIG / 2
@@ -637,6 +637,12 @@ class PDASCIndex:
                 arrays["delta_active"] = delta.active[: delta.size]
             if self.tombstones is not None:
                 arrays["tombstone_bits"] = self.tombstones.bits
+        if store_meta is not None and store_meta["backend"] in (
+            "int4", "binary",
+        ):
+            # packed containers ([n, ceil(d/2)] int8 / [n, ceil(d/8)] uint8)
+            # are unreadable by pre-v4 builds, which expect dc == d
+            version = _PACKED_VERSION
         meta = dict(
             version=version,
             distance=self.distance.name,
@@ -674,7 +680,8 @@ class PDASCIndex:
                 f"unsupported index format version {version!r} in "
                 f"{path + '.json'}; this build reads versions "
                 f"{_SUPPORTED_VERSIONS} (1 = dense fp32 payload, 2 = tiered "
-                f"leaf store, 3 = + online tiers)"
+                f"leaf store, 3 = + online tiers, 4 = packed int4/binary "
+                f"payload codes)"
             )
         z = np.load(path + ".npz")
         levels = []

@@ -109,16 +109,7 @@ def _search_dense_batch(
     L = len(levels) - 1
 
     def pw(pts):
-        return kops.pairwise_distance(
-            Q,
-            pts,
-            dist,
-            bm=kernel.bm,
-            bn=kernel.bn,
-            bd=kernel.bd,
-            row_chunk=kernel.row_chunk,
-            force_pallas=kernel.force_pallas,
-        )
+        return kops.pairwise_distance(Q, pts, dist, config=kernel)
 
     top = levels[L]
     D = pw(top.points)  # [B, n_L]
@@ -239,10 +230,7 @@ def _descend_beam(
     # shared candidate set) followed by one top-k.
     top = levels[L]
     n_top = top.points.shape[0]
-    D_top = kops.pairwise_distance(
-        Q, top.points, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
-        row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
-    )
+    D_top = kops.pairwise_distance(Q, top.points, dist, config=kernel)
     D_top = jnp.where(top.valid[None, :], D_top, BIG)
     cand_idx = None  # top-level slots are their own indices
     cand_ok = None
@@ -258,7 +246,7 @@ def _descend_beam(
             beam = min(beams[l], W)
             d_sel, slot = kops.rank_gathered(  # [B, beam] fused rank
                 Q, lv.points, lv.sq_norm, cand_idx, cand_ok, dist, k=beam,
-                bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+                config=kernel,
             )
             sel_idx = jnp.take_along_axis(cand_idx, slot, axis=1)
         sel_ok = (d_sel < radii[l]) & (d_sel < BIG / 2)
@@ -362,10 +350,7 @@ def _search_beam_batch(
     leaf = levels[0]
     if L == 0:  # degenerate single-level index: the leaf is the top
         W = leaf.points.shape[0]
-        D_top = kops.pairwise_distance(
-            Q, leaf.points, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
-            row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
-        )
+        D_top = kops.pairwise_distance(Q, leaf.points, dist, config=kernel)
         live = (leaf.valid if slot_valid is None
                 else leaf.valid & slot_valid)
         D_top = jnp.where(live[None, :], D_top, BIG)
@@ -382,7 +367,7 @@ def _search_beam_batch(
         k_eff = min(k, W)
         dists, slot = kops.rank_gathered(  # fused leaf ranking
             Q, leaf.points, leaf.sq_norm, cand_idx, ok, dist, k=k_eff,
-            bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+            config=kernel,
         )
         slots = jnp.take_along_axis(cand_idx, slot, axis=1)
     # Candidates counted are those *examined* (the pruning metric). The fused

@@ -1,0 +1,418 @@
+"""Block-size autotuner with a persistent winner cache (DESIGN.md §3.9).
+
+The kernel wrappers take block-size knobs (``KernelConfig``); the right
+values depend on backend, dtype, distance form and problem shape. This
+module learns them:
+
+* **candidate grids** are generated dtype-aware — blocks land on the
+  backend's (sublane, lane) multiples (``kernels/tiling.py``), are pruned
+  by the per-op VMEM estimators (the same roofline ceilings
+  ``benchmarks/roofline_report.py`` tabulates), and always contain the
+  hand-set per-op default, so the cached winner can never lose to it;
+* **timing** runs the real Pallas wrapper (compiled on TPU, interpret mode
+  on CPU — modest grids keep that tractable) with warmup iterations and a
+  median-of-k measurement, then scores ``median_us * (1 + pad_waste)`` so
+  ragged shapes penalise overhanging tiles;
+* **winners** persist in a versioned JSON cache keyed
+  ``(backend, op, form, dtype, shape-bucket)`` — shapes bucket to
+  power-of-two ceilings so one sweep covers a neighbourhood. Corrupt or
+  stale-version cache files are ignored with a warning, never an error.
+
+Resolution happens at ``ops`` dispatch time: ``KernelConfig(auto=True)``
+makes un-set knobs resolve through :func:`lookup` (a host-side dict read —
+safe under jit tracing; explicit knobs always win). Tuning itself is
+explicit — :func:`tune` is called by ``benchmarks/bench_kernels.py`` and
+tests, never implicitly from a hot path. Every cache mutation bumps a
+:func:`generation` counter; the plan compiler folds it into the capability
+fingerprint, so cached plans transparently re-plan (and re-stamp their
+kernel config) when the tuned winners change.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import kmedoids as _kmk
+from repro.kernels import pairwise as _pw
+from repro.kernels import quantized as _qk
+from repro.kernels import ref as _ref
+from repro.kernels import tiling
+from repro.kernels import topk as _tk
+
+CACHE_VERSION = 1
+_ENV_PATH = "REPRO_TUNE_CACHE"
+
+OPS = ("pairwise", "knn", "rank", "scan", "swap")
+
+_state: dict = {"path": None, "entries": None, "gen": 0}
+
+
+# ---------------------------------------------------------------------------
+# Winner cache (versioned on-disk JSON)
+# ---------------------------------------------------------------------------
+
+
+def cache_path() -> str:
+    """The winner-cache file: ``set_cache_path`` > $REPRO_TUNE_CACHE >
+    ``~/.cache/repro/kernel_tune.json``."""
+    if _state["path"] is not None:
+        return _state["path"]
+    env = os.environ.get(_ENV_PATH)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "kernel_tune.json"
+    )
+
+
+def set_cache_path(path: Optional[str]) -> None:
+    """Point the tuner at a cache file (None = default), dropping the
+    in-memory snapshot. Bumps the generation: plans fingerprinting the
+    tuner state re-plan against the new cache."""
+    _state["path"] = path
+    _state["entries"] = None
+    _state["gen"] += 1
+
+
+def generation() -> int:
+    """Monotonic counter bumped on every cache mutation (record / repoint).
+    Folded into the plan-capability fingerprint (``query/plan.py``)."""
+    return _state["gen"]
+
+
+def _entries() -> dict:
+    if _state["entries"] is None:
+        entries: dict = {}
+        path = cache_path()
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    blob = json.load(f)
+                if not isinstance(blob, dict) or "version" not in blob:
+                    raise ValueError("not a tuner cache blob")
+                if blob["version"] != CACHE_VERSION:
+                    warnings.warn(
+                        f"kernel-tune cache {path} has version "
+                        f"{blob['version']!r} != {CACHE_VERSION}; ignoring it"
+                    )
+                else:
+                    entries = {
+                        k: v for k, v in blob.get("entries", {}).items()
+                        if isinstance(v, dict) and isinstance(
+                            v.get("knobs"), dict)
+                    }
+            except (ValueError, OSError) as e:
+                warnings.warn(f"ignoring corrupt kernel-tune cache {path}: {e}")
+        _state["entries"] = entries
+    return _state["entries"]
+
+
+def _save() -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": CACHE_VERSION, "entries": _entries()}, f,
+                  indent=1, sort_keys=True)
+    os.replace(tmp, path)  # atomic publish: readers never see a torn file
+
+
+def shape_bucket(shape) -> tuple:
+    """Power-of-two ceiling per axis: one sweep covers a shape neighbourhood
+    (128 -> 128, 129 -> 256, 1 -> 1)."""
+    return tuple(
+        1 if int(x) <= 1 else 1 << (int(x) - 1).bit_length() for x in shape
+    )
+
+
+def cache_key(op: str, form: str, dtype: str, shape,
+              backend: Optional[str] = None) -> str:
+    backend = backend or jax.default_backend()
+    bucket = "x".join(str(v) for v in shape_bucket(shape))
+    return f"{backend}|{op}|{form}|{dtype}|{bucket}"
+
+
+def lookup(*, op: str, form: str, dtype: str, shape,
+           backend: Optional[str] = None) -> Optional[dict]:
+    """Cached winner knobs for a key, or None. Host-side dict read — safe to
+    call at ops dispatch time, including under a jit trace."""
+    entry = _entries().get(cache_key(op, form, dtype, shape, backend))
+    return dict(entry["knobs"]) if entry else None
+
+
+def record(*, op: str, form: str, dtype: str, shape, knobs: dict, us: float,
+           backend: Optional[str] = None) -> None:
+    """Persist a winner and bump the generation."""
+    entries = _entries()
+    entries[cache_key(op, form, dtype, shape, backend)] = dict(
+        knobs={k: int(v) for k, v in knobs.items()}, us=float(us)
+    )
+    _save()
+    _state["gen"] += 1
+
+
+# ---------------------------------------------------------------------------
+# Candidate grids (dtype-aware, VMEM-pruned)
+# ---------------------------------------------------------------------------
+
+
+def _grid_axes(op: str, backend: str) -> dict:
+    """Raw per-knob candidate values. TPU gets the fuller sweep; CPU keeps
+    grids modest (interpret-mode timing is slow)."""
+    tpu = backend == "tpu"
+    if op == "pairwise":
+        return dict(
+            bm=[32, 64, 128] + ([256] if tpu else []),
+            bn=[64, 128, 256] + ([512] if tpu else []),
+            bd=[64, 128, 256],
+        )
+    if op == "knn":
+        return dict(bq=[8, 32, 128], bn=[128, 256, 512] + ([1024] if tpu else []))
+    if op in ("rank", "scan"):
+        return dict(bq=[4, 8, 16] + ([32] if tpu else []), bn=[64, 128, 256])
+    if op == "swap":
+        return dict(bg=[32, 64, 128, 256])
+    raise ValueError(f"unknown op {op!r}; tunable ops: {OPS}")
+
+
+def _effective(op: str, knobs: dict, shape, dtype_bytes: int, k: int) -> dict:
+    """The knobs a kernel wrapper will actually run after its shrink/fit
+    pass — used to dedupe grid members that collapse to the same tiles on
+    this shape."""
+    sub = {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
+    e = dict(knobs)
+    if op == "pairwise":
+        m, n, d = shape
+        e["bm"] = tiling.shrink(e["bm"], m, sub)
+        e["bn"] = tiling.shrink(e["bn"], n, tiling.LANE)
+        e["bd"] = tiling.shrink(e["bd"], d, tiling.LANE)
+    elif op == "knn":
+        q, n, d = shape[0], shape[1], shape[2]
+        e["bq"] = tiling.shrink(e["bq"], q, sub)
+        e["bn"] = tiling.shrink(e["bn"], n, tiling.LANE)
+    elif op in ("rank", "scan"):
+        b, w = shape[0], shape[1]
+        e["bq"] = tiling.shrink(e["bq"], b, 8)
+        e["bn"] = tiling.shrink(e["bn"], w, tiling.LANE)
+    elif op == "swap":
+        e["bg"] = tiling.shrink(e["bg"], shape[0], 8)
+    return e
+
+
+def _vmem_ok(op: str, form: str, knobs: dict, shape, dtype_bytes: int,
+             k: int) -> bool:
+    if op == "pairwise":
+        est = tiling.vmem_pairwise(form, knobs["bm"], knobs["bn"], knobs["bd"],
+                                   dtype_bytes)
+    elif op == "knn":
+        est = tiling.vmem_knn(knobs["bq"], knobs["bn"], shape[2], k,
+                              dtype_bytes)
+    elif op in ("rank", "scan"):
+        est = tiling.vmem_rank(knobs["bq"], knobs["bn"], shape[2], k,
+                               dtype_bytes)
+    else:  # swap
+        est = tiling.vmem_swap(knobs["bg"], shape[0], k)
+    return est <= tiling.VMEM_BUDGET
+
+
+def candidate_grid(op: str, form: str, dtype: str, shape, *,
+                   backend: Optional[str] = None, k: int = 8) -> list:
+    """Dtype-aware, VMEM-pruned, shape-deduped candidate knob sets.
+
+    Always contains the hand-set per-op default (``tiling.OP_DEFAULTS``) —
+    the sweep winner is a min over a set including it, so a tuned pick can
+    never be slower than the default on the sweep's own measurements.
+    """
+    backend = backend or jax.default_backend()
+    dtype_bytes = _dtype_bytes(dtype)
+    axes = _grid_axes(op, backend)
+    names = list(axes)
+    # Default first: dedup keeps the first member of each effective-tile
+    # class, and the sweep must always contain the hand-set default row.
+    raw = [dict(tiling.OP_DEFAULTS[op])]
+    raw += [dict(zip(names, vals))
+            for vals in _product([axes[n] for n in names])]
+    seen, out = set(), []
+    for knobs in raw:
+        eff = _effective(op, knobs, shape, dtype_bytes, k)
+        key = tuple(sorted(eff.items()))
+        if key in seen:
+            continue
+        if not _vmem_ok(op, form, eff, shape, dtype_bytes, k):
+            # keep the default even if the estimator flags it (it is the
+            # baseline the acceptance bar compares against)
+            if knobs != tiling.OP_DEFAULTS[op]:
+                continue
+        seen.add(key)
+        out.append(knobs)
+    return out
+
+
+def _product(lists):
+    out = [[]]
+    for vals in lists:
+        out = [cur + [v] for cur in out for v in vals]
+    return out
+
+
+def _dtype_bytes(dtype: str) -> int:
+    if dtype in ("int4", "binary", "int8", "uint8"):
+        return 1
+    if dtype in ("float16", "bfloat16"):
+        return 2
+    return 4
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+
+
+def _make_inputs(op: str, form: str, dtype: str, shape, k: int):
+    """Deterministic synthetic inputs for one op at one (dtype, shape)."""
+    rng = np.random.default_rng(0xC0FFEE)
+    f32 = np.float32
+    if op == "pairwise":
+        m, n, d = shape
+        in_dt = jnp.bfloat16 if dtype == "bfloat16" else dtype
+        X = jnp.asarray(rng.normal(size=(m, d)).astype(f32)).astype(in_dt)
+        Y = jnp.asarray(rng.normal(size=(n, d)).astype(f32)).astype(in_dt)
+        return (X, Y)
+    if op == "knn":
+        q, n, d = shape
+        Q = jnp.asarray(rng.normal(size=(q, d)).astype(f32))
+        DB = jnp.asarray(rng.normal(size=(n, d)).astype(f32))
+        return (Q, DB)
+    if op in ("rank", "scan"):
+        b, w, d = shape
+        Q = jnp.asarray(rng.normal(size=(b, d)).astype(f32))
+        ok = jnp.asarray(rng.random((b, w)) < 0.9)
+        if op == "rank":
+            C = jnp.asarray(rng.normal(size=(b, w, d)).astype(f32))
+            return (Q, C, ok)
+        vals = rng.normal(size=(b, w, d)).astype(f32)
+        scales = jnp.full((b, w), 0.05, f32)
+        if dtype == "int4":
+            codes = _ref.pack_int4(jnp.asarray(
+                np.clip(np.round(vals / 0.05), -7, 7).astype(np.int32)))
+        elif dtype == "binary":
+            codes = _ref.pack_binary(jnp.asarray(vals))
+        elif dtype == "float16":
+            codes = jnp.asarray(vals, jnp.float16)
+            scales = jnp.ones((b, w), f32)
+        else:  # int8
+            codes = jnp.asarray(
+                np.clip(np.round(vals / 0.05), -127, 127).astype(np.int8))
+        return (Q, codes, scales, ok)
+    if op == "swap":
+        g = shape[0]
+        D = np.abs(rng.normal(size=(g, g))).astype(f32)
+        D = D + D.T
+        np.fill_diagonal(D, 0.0)
+        idx = rng.permutation(g)[:k]
+        dm = D[:, idx]
+        part = np.argpartition(dm, 1, axis=1)
+        d1 = dm[np.arange(g), part[:, 0]]
+        d2 = dm[np.arange(g), part[:, 1]]
+        return (jnp.asarray(D), jnp.asarray(d1), jnp.asarray(d2),
+                jnp.asarray(part[:, 0].astype(np.int32)),
+                jnp.ones((g,), bool))
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _run(op: str, form: str, inputs, knobs: dict, k: int, interpret: bool):
+    if op == "pairwise":
+        return _pw.pairwise_pallas(*inputs, form=form, interpret=interpret,
+                                   **knobs)
+    if op == "knn":
+        return _tk.knn_pallas(*inputs, form=form, k=k, interpret=interpret,
+                              **knobs)
+    if op == "rank":
+        return _tk.rank_pallas(*inputs, form=form, k=k, interpret=interpret,
+                               **knobs)
+    if op == "scan":
+        return _qk.scan_pallas(*inputs, form=form, k=k, interpret=interpret,
+                               **knobs)
+    if op == "swap":
+        return _kmk.swap_deltas_pallas(*inputs, k=k, interpret=interpret,
+                                       **knobs)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def time_knobs(op: str, form: str, dtype: str, shape, knobs: dict, *,
+               k: int = 8, reps: int = 3, warmup: int = 1,
+               interpret: Optional[bool] = None) -> float:
+    """Median wall time (us) of one knob set: warmup (includes the compile),
+    then median over ``reps`` blocked executions."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if op == "scan" and dtype in ("int4", "binary"):
+        knobs = dict(knobs, fmt=dtype)
+    inputs = _make_inputs(op, form, dtype, shape, k)
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(_run(op, form, inputs, knobs, k, interpret))
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(_run(op, form, inputs, knobs, k, interpret))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _blocked_shape(op: str, shape) -> tuple:
+    """The axes a knob set grids over (for the pad-waste penalty)."""
+    if op == "pairwise":
+        return shape  # (m, n, d) gridded by (bm, bn, bd)
+    return shape[:2] if len(shape) >= 2 else shape
+
+
+def _blocked_knobs(op: str, knobs: dict) -> tuple:
+    order = {"pairwise": ("bm", "bn", "bd"), "knn": ("bq", "bn"),
+             "rank": ("bq", "bn"), "scan": ("bq", "bn"), "swap": ("bg",)}
+    return tuple(knobs[n] for n in order[op])
+
+
+def tune(op: str, *, form: str = "l2", dtype: str = "float32", shape,
+         k: int = 8, backend: Optional[str] = None, reps: int = 3,
+         warmup: int = 1, force: bool = False, measure=None) -> dict:
+    """Sweep the candidate grid for one key and cache the winner.
+
+    Returns ``dict(winner, winner_us, default, default_us, sweep, cached)``.
+    A cache hit (and ``force=False``) returns without timing anything —
+    that is the round-trip determinism contract. ``measure`` injects a
+    timing function (tests); default is :func:`time_knobs`.
+    """
+    backend = backend or jax.default_backend()
+    cached = lookup(op=op, form=form, dtype=dtype, shape=shape,
+                    backend=backend)
+    if cached is not None and not force:
+        entry = _entries()[cache_key(op, form, dtype, shape, backend)]
+        return dict(winner=cached, winner_us=entry.get("us"), default=None,
+                    default_us=None, sweep=[], cached=True)
+
+    measure = measure or (lambda knobs: time_knobs(
+        op, form, dtype, shape, knobs, k=k, reps=reps, warmup=warmup))
+    default = dict(tiling.OP_DEFAULTS[op])
+    sweep = []
+    waste_axes = _blocked_shape(op, shape)
+    for knobs in candidate_grid(op, form, dtype, shape, backend=backend, k=k):
+        us = float(measure(knobs))
+        eff = _effective(op, knobs, shape, _dtype_bytes(dtype), k)
+        waste = tiling.pad_waste(waste_axes, _blocked_knobs(op, eff))
+        sweep.append(dict(knobs=knobs, us=us, waste=round(waste, 4),
+                          score=us * (1.0 + waste)))
+    best = min(sweep, key=lambda r: r["score"])
+    default_row = next(r for r in sweep if r["knobs"] == default)
+    record(op=op, form=form, dtype=dtype, shape=shape, knobs=best["knobs"],
+           us=best["us"], backend=backend)
+    return dict(winner=dict(best["knobs"]), winner_us=best["us"],
+                default=default, default_us=default_row["us"], sweep=sweep,
+                cached=False)

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tiling
+
 Array = jax.Array
 
 
@@ -91,6 +93,12 @@ def swap_deltas_pallas(
     g = D.shape[0]
     if D.shape != (g, g):
         raise ValueError(f"D must be square, got {D.shape}")
+    # Backend-real tiling: shrink a row tile overhanging the point axis and
+    # halve it until the [bg, gc] gain/removal tiles fit the VMEM budget.
+    bg = tiling.shrink(bg, g, tiling.sublane(jnp.float32))
+    bg = tiling.fit_budget(
+        bg, lambda x: tiling.vmem_swap(x, g, k), floor=min(bg, 8)
+    )
     gr = _ceil_to(g, bg)  # row (point) axis
     gc = _ceil_to(g, 128)  # candidate axis (lane width)
     kp = _ceil_to(k, 8)  # slot axis (f32 sublane width)

@@ -9,7 +9,9 @@ evaluation and ranking step — DESIGN.md §3.3):
   swap_deltas(D, d1, d2, n1, valid, k)    -> [k, g]  (k-medoids swap sweep)
   scan_quantized(Q, codes, scales, idx, ok, distance, k)
                                           -> (dists[b, k], slots[b, k])
-                                             (quantised payload-tier scan)
+                                             (quantised payload-tier scan;
+                                             dense int8/fp16 or packed
+                                             int4/binary codes)
 
 ``distance`` may be a kernel form (``ref.FORMS``), a registry name
 (``repro.core.distances``), or a ``Distance`` object. Dispatch:
@@ -25,7 +27,18 @@ evaluation and ranking step — DESIGN.md §3.3):
 ``KernelConfig`` bundles the block-size knobs (``bm/bn/bd`` for the pairwise
 grid, ``bq`` for the query tile of the fused rank/knn kernels, ``row_chunk``
 for the CPU streaming fallbacks) so callers can thread one hashable object
-through jit'd search functions.
+through jit'd search functions. Block resolution per op (DESIGN.md §3.9):
+
+  explicit call knob  >  non-default ``KernelConfig`` field  >
+  autotuned winner (``auto=True``, ``kernels/autotune.py`` cache lookup)  >
+  ``KernelConfig`` field  >  per-op hand-set default (``tiling.OP_DEFAULTS``)
+
+so explicit knobs always win, a threaded config behaves exactly as before,
+and ``KernelConfig(auto=True)`` transparently picks tuned blocks for the
+fields left at their defaults. The lookup is a host-side dict read — safe at
+trace time; ``tuned_gen`` (stamped by the plan compiler from
+``autotune.generation()``) makes a jitted search retrace when the winners
+change, since the config is a static argument.
 """
 
 from __future__ import annotations
@@ -35,10 +48,12 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels import kmedoids as _kmk
 from repro.kernels import pairwise as _pw
 from repro.kernels import quantized as _qk
 from repro.kernels import ref as _ref
+from repro.kernels import tiling as _tiling
 from repro.kernels import topk as _tk
 
 Array = jax.Array
@@ -49,12 +64,14 @@ class KernelConfig(NamedTuple):
 
     bm: int = 128  # pairwise: query-rows tile
     bn: int = 128  # pairwise / rank / knn: candidate-cols tile
-    bd: int = 256  # pairwise: feature-dim tile (VPU forms clamp to 64)
+    bd: int = 256  # pairwise: feature-dim tile (VMEM-budget fit per dtype)
     bq: int = 8  # rank / knn: query tile of the fused top-k kernels
     bg: int = 128  # swap sweep: point-rows tile of the fused sweep kernel
     row_chunk: int = 1024  # CPU fallback streaming chunk (bounds cube memory)
     group_chunk: int = 8  # MSA build: groups clustered per streamed slab
     force_pallas: bool = False  # run Pallas interpret=True off-TPU (tests)
+    auto: bool = False  # resolve default-valued knobs from the tuner cache
+    tuned_gen: int = -1  # autotune generation stamped by the plan compiler
 
 
 DEFAULT = KernelConfig()
@@ -74,16 +91,59 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _fp(force_pallas: Optional[bool], config: Optional[KernelConfig]) -> bool:
+    if force_pallas is not None:
+        return force_pallas
+    return config.force_pallas if config is not None else False
+
+
+def resolve_blocks(
+    op: str,
+    form: Optional[str],
+    dtype: str,
+    shape,
+    config: Optional[KernelConfig] = None,
+    **explicit,
+) -> dict:
+    """Resolve one op's block knobs (the precedence chain in the module doc).
+
+    ``explicit`` carries the per-call knob arguments (None = unset). A
+    config field counts as explicitly set when it differs from the
+    ``KernelConfig`` class default — the documented heuristic that lets
+    ``auto=True`` fill only the knobs the caller left alone.
+    """
+    tuned = None
+    if config is not None and config.auto:
+        tuned = _at.lookup(op=op, form=form or "none", dtype=dtype,
+                           shape=shape)
+    out = {}
+    for knob, hand_default in _tiling.OP_DEFAULTS[op].items():
+        exp = explicit.get(knob)
+        if exp is not None:
+            out[knob] = int(exp)
+        elif config is not None and \
+                getattr(config, knob) != getattr(DEFAULT, knob):
+            out[knob] = getattr(config, knob)
+        elif tuned is not None and knob in tuned:
+            out[knob] = int(tuned[knob])
+        elif config is not None:
+            out[knob] = getattr(config, knob)
+        else:
+            out[knob] = hand_default
+    return out
+
+
 def pairwise_distance(
     X: Array,
     Y: Array,
     distance="l2",
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bd: int = 256,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bd: Optional[int] = None,
     row_chunk: Optional[int] = None,
-    force_pallas: bool = False,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> Array:
     """[m, d] x [n, d] -> [m, n] distances via the best available path.
 
@@ -92,6 +152,9 @@ def pairwise_distance(
     (both axes chunked) instead of being materialised whole. The Pallas
     paths tile through VMEM and never build the cube regardless.
     """
+    fp = _fp(force_pallas, config)
+    if row_chunk is None and config is not None:
+        row_chunk = config.row_chunk
     form = resolve_form(distance)
     if form is None:
         from repro.core import distances as dist_lib  # registry fallback
@@ -100,9 +163,13 @@ def pairwise_distance(
             distance, X, Y, chunk=row_chunk or 4096
         )
     m, n = X.shape[0], Y.shape[0]
-    if _on_tpu() or force_pallas:
+    if _on_tpu() or fp:
+        knobs = resolve_blocks(
+            "pairwise", form, str(X.dtype), (m, n, X.shape[1]), config,
+            bm=bm, bn=bn, bd=bd,
+        )
         out = _pw.pairwise_pallas(
-            X, Y, form=form, bm=bm, bn=bn, bd=bd, interpret=not _on_tpu()
+            X, Y, form=form, interpret=not _on_tpu(), **knobs
         )
         return out[:m, :n]
     if form in _ref.VPU_FORMS and row_chunk and (m > row_chunk or n > row_chunk):
@@ -116,11 +183,13 @@ def knn(
     distance="l2",
     *,
     k: int = 10,
-    bq: int = 128,
-    bn: int = 512,
-    force_pallas: bool = False,
+    bq: Optional[int] = None,
+    bn: Optional[int] = None,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array]:
     """Fused brute-force k-NN (ascending dists, int32 ids)."""
+    fp = _fp(force_pallas, config)
     form = resolve_form(distance)
     if form is None:
         from repro.core import distances as dist_lib
@@ -128,9 +197,13 @@ def knn(
         D = dist_lib.pairwise_chunked(distance, Q, DB)
         neg, ids = jax.lax.top_k(-D, k)
         return -neg, ids.astype(jnp.int32)
-    if _on_tpu() or force_pallas:
+    if _on_tpu() or fp:
+        knobs = resolve_blocks(
+            "knn", form, str(Q.dtype),
+            (Q.shape[0], DB.shape[0], Q.shape[1]), config, bq=bq, bn=bn,
+        )
         return _tk.knn_pallas(
-            Q, DB, form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu()
+            Q, DB, form=form, k=k, interpret=not _on_tpu(), **knobs
         )
     return _ref.knn_ref(Q, DB, k, form)
 
@@ -143,9 +216,10 @@ def rank_candidates(
     *,
     k: int,
     c_sq_norms: Optional[Array] = None,
-    bq: int = 8,
-    bn: int = 256,
-    force_pallas: bool = False,
+    bq: Optional[int] = None,
+    bn: Optional[int] = None,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array]:
     """Fused masked ranking of per-query gathered candidates.
 
@@ -159,6 +233,7 @@ def rank_candidates(
     index-side cache (``PDASCLevel.sq_norm``). For the norm-consuming forms
     this saves a full reduction pass over the [b, w, d] candidate cube.
     """
+    fp = _fp(force_pallas, config)
     form = resolve_form(distance)
     if form is None:
         from repro.core import distances as dist_lib
@@ -168,10 +243,13 @@ def rank_candidates(
         D = jnp.where(ok, D, dist_lib.BIG)
         neg, slots = jax.lax.top_k(-D, k)
         return -neg, slots.astype(jnp.int32)
-    if _on_tpu() or force_pallas:
+    if _on_tpu() or fp:
+        knobs = resolve_blocks(
+            "rank", form, str(C.dtype), C.shape, config, bq=bq, bn=bn,
+        )
         return _tk.rank_pallas(
             Q, C, ok, c_sq_norms,
-            form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu(),
+            form=form, k=k, interpret=not _on_tpu(), **knobs,
         )
     return _ref.rank_ref(Q, C, ok, k, form, cc=c_sq_norms)
 
@@ -184,8 +262,9 @@ def swap_deltas(
     valid: Array,
     *,
     k: int,
-    bg: int = 128,
-    force_pallas: bool = False,
+    bg: Optional[int] = None,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> Array:
     """FasterPAM swap-sweep ΔTD matrix ``[k, g]`` (the MSA build hot path).
 
@@ -199,9 +278,13 @@ def swap_deltas(
     in ``[bg, g]`` row tiles and only the [k, g] accumulator persists; the
     CPU path runs the pure-jnp oracle (``ref.swap_deltas_ref``).
     """
-    if _on_tpu() or force_pallas:
+    fp = _fp(force_pallas, config)
+    if _on_tpu() or fp:
+        knobs = resolve_blocks(
+            "swap", "none", str(D.dtype), (D.shape[0],), config, bg=bg,
+        )
         return _kmk.swap_deltas_pallas(
-            D, d1, d2, n1, valid, k=k, bg=bg, interpret=not _on_tpu()
+            D, d1, d2, n1, valid, k=k, interpret=not _on_tpu(), **knobs
         )
     return _ref.swap_deltas_ref(D, d1, d2, n1, valid, k)
 
@@ -217,50 +300,65 @@ def scan_quantized(
     k: int,
     block: int,
     slot_valid: Optional[Array] = None,
-    bq: int = 8,
-    bn: int = 256,
-    force_pallas: bool = False,
+    code_format: str = "dense",
+    bq: Optional[int] = None,
+    bn: Optional[int] = None,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array]:
     """Stage-1 two-stage search: rank per-query candidates against the
     *quantised* payload tier in its native dtype (DESIGN.md §3.6).
 
-    ``Q``: [b, d] queries; ``codes``: [n, d] quantised leaf payload (int8
-    symmetric or fp16); ``scales``: [nb] per-block dequantisation scales,
-    ``block`` rows per block; ``cand_idx``/``cand_ok``: [b, w] candidate rows
-    into ``codes`` + validity (the NSA beam layout). Returns (dists[b, k]
-    ascending, slots[b, k] into the candidate axis) — *approximate* distances
-    (quantisation error ~ scale/2 per coordinate); callers rerank the
-    survivors against the exact fp32 payload.
+    ``Q``: [b, d] queries; ``codes``: [n, dc] quantised leaf payload — int8
+    symmetric / fp16 (``code_format="dense"``, ``dc == d``), two int4
+    nibbles per byte (``"int4"``, ``dc = ceil(d/2)``) or packed sign bits
+    (``"binary"``, ``dc = ceil(d/8)``); ``scales``: [nb] per-block
+    dequantisation scales, ``block`` rows per block; ``cand_idx``/``cand_ok``:
+    [b, w] candidate rows into ``codes`` + validity (the NSA beam layout).
+    Returns (dists[b, k] ascending, slots[b, k] into the candidate axis) —
+    *approximate* distances (quantisation error ~ scale/2 per coordinate for
+    int8, ~scale/2 at 3 bits for int4, sign-only for binary); callers rerank
+    the survivors against the exact fp32 payload.
 
-    The gather stays in the codes dtype — 1 byte/element of HBM traffic for
-    int8 vs 4 for the fp32 leaf gather — and the Pallas path dequantises
-    per-tile in VMEM (``kernels/quantized.py``).
+    The gather stays in the packed container dtype — 1 byte/element for
+    int8, 0.5 (int4) or 0.125 (binary) bytes per *dimension* — and every
+    dispatch path unpacks + dequantises per-tile in VMEM / in-register
+    (``kernels/quantized.py``; ``ref.unpack_codes`` on the jnp paths).
 
     ``slot_valid``: optional bool[n] tombstone mask over the code table
     (True = live row). Folded into ``cand_ok`` *before* the scan
     (``ref.fold_slot_valid``), so deleted rows rank as ``BIG`` on every
     dispatch path without the codes being rewritten.
     """
+    fp = _fp(force_pallas, config)
     cand_ok = _ref.fold_slot_valid(cand_idx, cand_ok, slot_valid)
     nb = scales.shape[0]
-    C = jnp.take(codes, cand_idx, axis=0)  # [b, w, d] native dtype
+    C = jnp.take(codes, cand_idx, axis=0)  # [b, w, dc] packed container
     srows = jnp.take(scales, jnp.clip(cand_idx // block, 0, nb - 1))  # [b, w]
+    d = Q.shape[-1]
     form = resolve_form(distance)
     if form is None:
         from repro.core import distances as dist_lib
 
         dist = dist_lib.get(distance)
-        Cf = C.astype(jnp.float32) * srows.astype(jnp.float32)[..., None]
+        Cu = _ref.unpack_codes(C, code_format, d)
+        Cf = Cu.astype(jnp.float32) * srows.astype(jnp.float32)[..., None]
         D = dist.point(Q[:, None, :], Cf)
         D = jnp.where(cand_ok, D, dist_lib.BIG)
         neg, slots = jax.lax.top_k(-D, k)
         return -neg, slots.astype(jnp.int32)
-    if _on_tpu() or force_pallas:
+    if _on_tpu() or fp:
+        dtype_key = code_format if code_format != "dense" else str(codes.dtype)
+        knobs = resolve_blocks(
+            "scan", form, dtype_key, (Q.shape[0], cand_idx.shape[1], d),
+            config, bq=bq, bn=bn,
+        )
         return _qk.scan_pallas(
             Q, C, srows, cand_ok,
-            form=form, k=k, bq=bq, bn=bn, interpret=not _on_tpu(),
+            form=form, k=k, fmt=code_format, interpret=not _on_tpu(), **knobs,
         )
-    return _ref.scan_quantized_ref(Q, C, srows, cand_ok, k, form)
+    return _ref.scan_quantized_ref(Q, C, srows, cand_ok, k, form,
+                                   fmt=code_format)
 
 
 def rank_gathered(
@@ -273,9 +371,10 @@ def rank_gathered(
     *,
     k: int,
     slot_valid: Optional[Array] = None,
-    bq: int = 8,
-    bn: int = 256,
-    force_pallas: bool = False,
+    bq: Optional[int] = None,
+    bn: Optional[int] = None,
+    force_pallas: Optional[bool] = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array]:
     """Rank per-query candidates given as *indices* into a shared point table
     (the NSA beam-search layout: ``cand_idx[b]`` indexes rows of ``points``).
@@ -301,13 +400,14 @@ def rank_gathered(
     * CPU, small w or non-Gram form — gather the rows and rank the cube
       (cache-resident at these sizes; broadcast forms have no gemm).
     """
+    fp = _fp(force_pallas, config)
     cand_ok = _ref.fold_slot_valid(cand_idx, cand_ok, slot_valid)
     b, w = cand_idx.shape
     n = points.shape[0]
     form = resolve_form(distance)
     if (
         form in _ref.GRAM_FORMS
-        and not (_on_tpu() or force_pallas)
+        and not (_on_tpu() or fp)
         and n <= 24 * w
     ):
         D = _ref.pairwise_ref(Q, points, form)  # [b, n] — one gemm + epilogue
@@ -323,5 +423,5 @@ def rank_gathered(
     )
     return rank_candidates(
         Q, C, cand_ok, distance, k=k, c_sq_norms=cc,
-        bq=bq, bn=bn, force_pallas=force_pallas,
+        bq=bq, bn=bn, force_pallas=fp, config=config,
     )

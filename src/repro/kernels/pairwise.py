@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tiling
 from repro.kernels.ref import FORMS, GRAM_FORMS, VPU_FORMS
 
 Array = jax.Array
@@ -133,8 +134,21 @@ def pairwise_pallas(
     n, d2 = Y.shape
     if d != d2:
         raise ValueError(f"dim mismatch {d} vs {d2}")
-    if form in VPU_FORMS:
-        bd = min(bd, 64)  # bound the [bm, bn, bd] VMEM cube
+
+    # Backend-real tiling: align the d (lane) axis and the m (sublane) axis
+    # to the input dtype's tile multiples, shrink blocks overhanging the
+    # (padded) problem, and bound the per-step VMEM footprint by halving bd
+    # — for the VPU forms that replaces the old fixed ``bd = min(bd, 64)``
+    # clamp with a budget the [bm, bn, bd] difference cube must actually fit.
+    isize = X.dtype.itemsize
+    bm = tiling.shrink(bm, m, tiling.sublane(X.dtype))
+    bn = tiling.shrink(bn, n, tiling.LANE)
+    bd = tiling.shrink(bd, d, tiling.LANE)
+    bd = tiling.fit_budget(
+        bd,
+        lambda x: tiling.vmem_pairwise(form, bm, bn, x, isize),
+        floor=min(bd, tiling.LANE if form in GRAM_FORMS else 8),
+    )
 
     mp, np_, dp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(d, bd)
     Xp = _pad2(X, mp, dp)

@@ -36,13 +36,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import BIG, FORMS, NORM_FORMS
+from repro.kernels import tiling
+from repro.kernels.ref import BIG, CODE_FORMATS, FORMS, NORM_FORMS
 from repro.kernels.topk import _ceil_to, _rank_tile_distance
 
 Array = jax.Array
 
 
-def _scan_kernel(q_ref, c_ref, s_ref, ok_ref, od_ref, oi_ref, *, form, k, bn):
+def _unpack_tile(c, fmt: str, d: int) -> Array:
+    """In-register unpack of a packed [bq, bn, dc] code tile to [bq, bn, d].
+
+    int4: two signed nibbles per byte (branchless xor/sub sign extension);
+    binary: eight sign bits per byte, mapped to ±1. All arithmetic is int32
+    — native VPU ops, no sub-word shuffles — and the unpacked tile exists
+    only in VMEM: HBM traffic stays at the packed width (0.5 / 0.125
+    bytes per dimension).
+    """
+    if fmt == "dense":
+        return c
+    c32 = c.astype(jnp.int32) & 0xFF
+    if fmt == "int4":
+        lo = ((c32 & 0xF) ^ 0x8) - 0x8
+        hi = ((c32 >> 4) ^ 0x8) - 0x8
+        full = jnp.stack([lo, hi], axis=-1).reshape(*c32.shape[:-1], -1)
+    else:  # binary
+        shifts = jnp.arange(8, dtype=jnp.int32)
+        bits = (c32[..., None] >> shifts) & 1
+        full = (2 * bits - 1).reshape(*c32.shape[:-1], -1)
+    return full[..., :d]
+
+
+def _scan_kernel(q_ref, c_ref, s_ref, ok_ref, od_ref, oi_ref, *, form, k, bn,
+                 fmt, d):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -50,9 +75,10 @@ def _scan_kernel(q_ref, c_ref, s_ref, ok_ref, od_ref, oi_ref, *, form, k, bn):
         od_ref[...] = jnp.full_like(od_ref, BIG)
         oi_ref[...] = jnp.full_like(oi_ref, -1)
 
-    # Dequantise the native-dtype code tile in VMEM: [bq, bn, d] f32, gone
-    # after the reduction below.
-    c = c_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)[:, :, None]
+    # Unpack (packed formats) + dequantise the native-dtype code tile in
+    # VMEM: [bq, bn, d] f32, gone after the reduction below.
+    c = _unpack_tile(c_ref[...], fmt, d)
+    c = c.astype(jnp.float32) * s_ref[...].astype(jnp.float32)[:, :, None]
     cc = jnp.sum(c * c, axis=-1) if form in NORM_FORMS else None
     d = _rank_tile_distance(form, q_ref[...], c, cc)  # [bq, bn]
     d = jnp.where(ok_ref[...] != 0, d, BIG)
@@ -67,7 +93,7 @@ def _scan_kernel(q_ref, c_ref, s_ref, ok_ref, od_ref, oi_ref, *, form, k, bn):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("form", "k", "bq", "bn", "interpret")
+    jax.jit, static_argnames=("form", "k", "bq", "bn", "fmt", "interpret")
 )
 def scan_pallas(
     Q: Array,
@@ -79,24 +105,41 @@ def scan_pallas(
     k: int,
     bq: int = 8,
     bn: int = 256,
+    fmt: str = "dense",
     interpret: bool = False,
 ) -> tuple[Array, Array]:
     """Fused masked ranking of quantised per-query candidates.
 
-    ``Q``: [b, d] f32 queries; ``C``: [b, w, d] gathered candidate *codes*
-    (int8 / fp16 — the payload tier's native dtype); ``scales``: [b, w] f32
-    per-row dequantisation scales; ``ok``: [b, w] validity mask. Returns
-    (dists[b, k] ascending, slots[b, k] into the ``w`` axis); masked slots
-    rank as ``BIG``.
+    ``Q``: [b, d] f32 queries; ``C``: [b, w, dc] gathered candidate *codes*
+    in the payload tier's native container — int8 / fp16 (``fmt="dense"``,
+    ``dc == d``), int4 nibble pairs (``fmt="int4"``, ``dc = ceil(d/2)``) or
+    packed sign bits (``fmt="binary"``, ``dc = ceil(d/8)``); ``scales``:
+    [b, w] f32 per-row dequantisation scales; ``ok``: [b, w] validity mask.
+    Returns (dists[b, k] ascending, slots[b, k] into the ``w`` axis); masked
+    slots rank as ``BIG``. Contract: ``ref.scan_quantized_ref``.
     """
     if form not in FORMS:
         raise ValueError(f"unsupported form {form!r}")
+    if fmt not in CODE_FORMATS:
+        raise ValueError(f"unknown code format {fmt!r}; use {CODE_FORMATS}")
     b, d = Q.shape
-    b2, w, d2 = C.shape
-    if b != b2 or d != d2:
+    b2, w, dc = C.shape
+    if b != b2:
         raise ValueError(f"shape mismatch {Q.shape} vs {C.shape}")
+    if fmt == "dense" and dc != d:
+        raise ValueError(f"dense codes must carry d={d}, got {dc}")
     if k > w:
         raise ValueError(f"k={k} > candidate width w={w}")
+
+    # Backend-real tiling: shrink blocks overhanging the (padded) problem
+    # and bound the per-step VMEM cube (packed container + f32 unpack copy).
+    bq = tiling.shrink(bq, b, tiling.sublane(jnp.float32))
+    bn = tiling.shrink(bn, w, tiling.LANE)
+    bn = tiling.fit_budget(
+        bn,
+        lambda x: tiling.vmem_rank(bq, x, d, k, C.dtype.itemsize),
+        floor=min(bn, tiling.LANE),
+    )
 
     bp, wp = _ceil_to(b, bq), _ceil_to(w, bn)
     Qp = jnp.pad(Q, ((0, bp - b), (0, 0)))
@@ -105,13 +148,14 @@ def scan_pallas(
     okp = jnp.pad(ok.astype(jnp.int8), ((0, bp - b), (0, wp - w)))
     grid = (bp // bq, wp // bn)
 
-    kernel = functools.partial(_scan_kernel, form=form, k=k, bn=bn)
+    kernel = functools.partial(_scan_kernel, form=form, k=k, bn=bn, fmt=fmt,
+                               d=d)
     dists, slots = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bq, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, bn, dc), lambda i, j: (i, j, 0)),
             pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
         ],

@@ -213,19 +213,96 @@ def rowwise_ref(
     raise ValueError(f"unknown form {form!r}")
 
 
+# -- packed code formats (int4 / binary payload tiers) ----------------------
+
+CODE_FORMATS = ("dense", "int4", "binary")
+
+
+def packed_width(d: int, fmt: str) -> int:
+    """Packed last-axis width of a ``[.., d]`` code row in format ``fmt``."""
+    if fmt == "int4":
+        return -(-d // 2)
+    if fmt == "binary":
+        return -(-d // 8)
+    return d
+
+
+def pack_int4(vals: Array) -> Array:
+    """Pack int4 codes two-per-byte along the last axis.
+
+    ``vals``: [..., d] integer codes in [-8, 7]. Returns [..., ceil(d/2)]
+    int8 — element ``2j`` in the low nibble of byte ``j``, ``2j+1`` in the
+    high nibble (zero-padded when ``d`` is odd).
+    """
+    v = jnp.asarray(vals, jnp.int32)
+    d = v.shape[-1]
+    dc = packed_width(d, "int4")
+    v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, 2 * dc - d)])
+    pairs = v.reshape(*v.shape[:-1], dc, 2)
+    lo, hi = pairs[..., 0] & 0xF, pairs[..., 1] & 0xF
+    packed = (hi << 4) | lo  # 0..255
+    return ((packed ^ 0x80) - 0x80).astype(jnp.int8)  # reinterpret as int8
+
+
+def pack_binary(x: Array) -> Array:
+    """Pack sign bits eight-per-byte along the last axis.
+
+    ``x``: [..., d] values (or bools); bit ``j`` of byte ``i`` is
+    ``x[..., 8i+j] >= 0``. Returns [..., ceil(d/8)] uint8.
+    """
+    x = jnp.asarray(x)
+    bits = (x >= 0).astype(jnp.int32) if x.dtype != jnp.bool_ else x.astype(jnp.int32)
+    d = bits.shape[-1]
+    dc = packed_width(d, "binary")
+    bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, 8 * dc - d)])
+    groups = bits.reshape(*bits.shape[:-1], dc, 8)
+    weights = jnp.left_shift(1, jnp.arange(8, dtype=jnp.int32))
+    return jnp.sum(groups * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_codes(codes: Array, fmt: str, d: int) -> Array:
+    """Unpack a packed code array back to per-dimension integer codes.
+
+    ``codes``: [..., packed_width(d, fmt)]; returns [..., d] int32 — signed
+    nibbles for ``int4``, ±1 for ``binary``. ``dense`` passes through
+    (int8 / fp16 codes keep their dtype). Pure jnp, branchless sign
+    extension — the exact arithmetic the Pallas scan kernel inlines.
+    """
+    if fmt == "dense":
+        return codes
+    c = codes.astype(jnp.int32) & 0xFF  # byte view, container-dtype agnostic
+    if fmt == "int4":
+        lo = ((c & 0xF) ^ 0x8) - 0x8
+        hi = ((c >> 4) ^ 0x8) - 0x8
+        full = jnp.stack([lo, hi], axis=-1).reshape(*c.shape[:-1], -1)
+        return full[..., :d]
+    if fmt == "binary":
+        shifts = jnp.arange(8, dtype=jnp.int32)
+        bits = (c[..., None] >> shifts) & 1
+        full = bits.reshape(*c.shape[:-1], -1)
+        return (2 * full - 1)[..., :d]
+    raise ValueError(f"unknown code format {fmt!r}; use {CODE_FORMATS}")
+
+
 def scan_quantized_ref(
-    Q: Array, C: Array, c_scales: Array, ok: Array, k: int, form: str
+    Q: Array, C: Array, c_scales: Array, ok: Array, k: int, form: str,
+    fmt: str = "dense",
 ) -> tuple[Array, Array]:
     """Stage-1 payload-tier scan oracle (the ``kernels/quantized.py`` contract).
 
-    ``C``: [b, w, d] per-query gathered *quantized* candidate codes (int8
-    symmetric or fp16); ``c_scales``: [b, w] per-row dequantisation scales
-    (the payload tier's per-block scale broadcast to its rows). Candidates
-    are dequantised (``code * scale``) and ranked exactly like
-    :func:`rank_ref`; masked slots rank as ``BIG``. Returns
-    (dists[b, k] ascending, slots[b, k] into the ``w`` axis).
+    ``C``: [b, w, dc] per-query gathered *quantized* candidate codes — int8
+    symmetric or fp16 for ``fmt="dense"`` (``dc == d``), two-per-byte signed
+    nibbles for ``fmt="int4"`` or sign bits for ``fmt="binary"`` (``dc =
+    packed_width(d, fmt)``); ``c_scales``: [b, w] per-row dequantisation
+    scales (the payload tier's per-block scale broadcast to its rows).
+    Candidates are unpacked (packed formats), dequantised (``code * scale``
+    — binary codes dequantise to ±scale, so ``dot`` scoring is the
+    asymmetric-Hamming form ``-scale * (d - 2 * hamming)`` up to the query's
+    magnitudes) and ranked exactly like :func:`rank_ref`; masked slots rank
+    as ``BIG``. Returns (dists[b, k] ascending, slots[b, k] into ``w``).
     """
-    Cf = C.astype(jnp.float32) * c_scales.astype(jnp.float32)[..., None]
+    Cu = unpack_codes(C, fmt, Q.shape[-1])
+    Cf = Cu.astype(jnp.float32) * c_scales.astype(jnp.float32)[..., None]
     D = jnp.where(ok, rowwise_ref(Q, Cf, form), BIG)
     neg, slots = jax.lax.top_k(-D, k)
     return -neg, slots.astype(jnp.int32)

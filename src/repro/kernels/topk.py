@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tiling
 from repro.kernels.ref import BIG, FORMS, GRAM_FORMS, NORM_FORMS
 
 Array = jax.Array
@@ -109,6 +110,16 @@ def knn_pallas(
         raise ValueError(f"dim mismatch {d} vs {d2}")
     if k > n:
         raise ValueError(f"k={k} > n={n}")
+
+    # Backend-real tiling: shrink blocks overhanging the (padded) problem,
+    # bound the per-step VMEM footprint by halving the database tile.
+    bq = tiling.shrink(bq, nq, tiling.sublane(Q.dtype))
+    bn = tiling.shrink(bn, n, tiling.LANE)
+    bn = tiling.fit_budget(
+        bn,
+        lambda x: tiling.vmem_knn(bq, x, d, k, DB.dtype.itemsize),
+        floor=min(bn, tiling.LANE),
+    )
 
     qp, np_ = _ceil_to(nq, bq), _ceil_to(n, bn)
     Qp = jnp.pad(Q, ((0, qp - nq), (0, 0)))
@@ -238,6 +249,16 @@ def rank_pallas(
         raise ValueError(f"shape mismatch {Q.shape} vs {C.shape}")
     if k > w:
         raise ValueError(f"k={k} > candidate width w={w}")
+
+    # Backend-real tiling: the [bq, bn, d] candidate cube dominates VMEM —
+    # shrink overhanging blocks, then halve bn until the cube fits.
+    bq = tiling.shrink(bq, b, tiling.sublane(Q.dtype))
+    bn = tiling.shrink(bn, w, tiling.LANE)
+    bn = tiling.fit_budget(
+        bn,
+        lambda x: tiling.vmem_rank(bq, x, d, k, C.dtype.itemsize),
+        floor=min(bn, tiling.LANE),
+    )
 
     bp, wp = _ceil_to(b, bq), _ceil_to(w, bn)
     Qp = jnp.pad(Q, ((0, bp - b), (0, 0)))

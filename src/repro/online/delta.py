@@ -45,10 +45,7 @@ class DeltaScan(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("dist", "k", "kernel"))
 def _scan(Q, vectors, ids, active, *, dist, k, kernel):
-    D = kops.pairwise_distance(
-        Q, vectors, dist, bm=kernel.bm, bn=kernel.bn, bd=kernel.bd,
-        row_chunk=kernel.row_chunk, force_pallas=kernel.force_pallas,
-    )
+    D = kops.pairwise_distance(Q, vectors, dist, config=kernel)
     D = jnp.where(active[None, :], D, BIG)
     neg, pos = jax.lax.top_k(-D, k)
     d = -neg

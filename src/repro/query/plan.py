@@ -56,6 +56,7 @@ import jax.numpy as jnp
 from repro.core import distances as dist_lib
 from repro.core import nsa
 from repro.core.distances import BIG
+from repro.kernels import autotune as _autotune
 from repro.query.spec import Query, validate_query_batch
 
 Array = jax.Array
@@ -107,6 +108,7 @@ class Capabilities(NamedTuple):
     payload_released: bool
     delta_dirty: bool  # active delta entries -> the exact-scan merge leg
     tombstones_dirty: bool  # dead slots -> the slot_valid mask threading
+    tuned_gen: int  # autotune winner-cache generation (auto=True kernels)
 
 
 def capabilities(index) -> Capabilities:
@@ -120,7 +122,24 @@ def capabilities(index) -> Capabilities:
         tombstones_dirty=bool(
             index.tombstones is not None and index.tombstones.count
         ),
+        tuned_gen=_autotune.generation(),
     )
+
+
+def _stamped_kernel(kernel, caps: Optional[Capabilities] = None):
+    """Stamp an ``auto=True`` kernel config with the tuner generation.
+
+    The stamped config is what the jitted pipelines receive as their static
+    kernel argument: a retune bumps the generation, the stamp changes, and
+    the search retraces picking up the new winners (``ops.resolve_blocks``
+    reads the cache at trace time). Non-auto configs pass through untouched
+    — their knobs never depend on the cache, so retunes must not retrace
+    them.
+    """
+    if kernel is None or not getattr(kernel, "auto", False):
+        return kernel
+    gen = caps.tuned_gen if caps is not None else _autotune.generation()
+    return kernel._replace(tuned_gen=gen)
 
 
 _LOWERING = {
@@ -197,6 +216,13 @@ class SearchPlan:
     caps: Capabilities
     pipeline: str
     radius: object  # resolved: query.radius or the index default
+    # The kernel config the pipelines actually receive: ``query.kernel``
+    # stamped with the autotune generation when ``auto=True``. The stamp
+    # makes the config (a jit-static argument) differ after a retune, so
+    # the jitted search retraces with the new winners; ``caps.tuned_gen``
+    # going stale is what routes execution back through ``compile_plan`` to
+    # re-stamp.
+    kernel: object = None
 
     # -- execution ------------------------------------------------------------
 
@@ -240,21 +266,21 @@ class SearchPlan:
                 idx.data, idx.store, Qb, dist=idx.distance, k=q.k, r=r,
                 beam=q.beam, max_children=idx.max_children,
                 rerank_width=q.rerank_width,
-                leaf_radius_filter=q.leaf_radius_filter, kernel=q.kernel,
+                leaf_radius_filter=q.leaf_radius_filter, kernel=self.kernel,
                 slot_valid=slot_valid,
             )
         elif self.pipeline == "dense":
             res = nsa.search_dense(
                 idx.data, Qb, dist=idx.distance, k=q.k, r=r,
                 leaf_radius_filter=q.leaf_radius_filter,
-                with_stats=q.with_stats, kernel=q.kernel,
+                with_stats=q.with_stats, kernel=self.kernel,
                 slot_valid=slot_valid,
             )
         elif self.pipeline == "beam":
             res = nsa.search_beam(
                 idx.data, Qb, dist=idx.distance, k=q.k, r=r, beam=q.beam,
                 max_children=idx.max_children,
-                leaf_radius_filter=q.leaf_radius_filter, kernel=q.kernel,
+                leaf_radius_filter=q.leaf_radius_filter, kernel=self.kernel,
                 slot_valid=slot_valid,
             )
         else:  # beam_vmap: the frozen seed baseline (clean tiers, by plan)
@@ -277,7 +303,7 @@ class SearchPlan:
 
         idx = self.index
         q = self.query
-        scan = idx.delta.scan(Qb, idx.distance, k=q.k, kernel=q.kernel)
+        scan = idx.delta.scan(Qb, idx.distance, k=q.k, kernel=self.kernel)
         sd, si = scan.dists, scan.ids
         if q.leaf_radius_filter:
             # same leaf radius rule the resident ranking applies, so a point
@@ -335,7 +361,8 @@ def compile_plan(index, query: Query) -> SearchPlan:
     pipeline = _resolve_pipeline(query, caps)
     radius = query.radius if query.radius is not None else index.default_radius
     plan = SearchPlan(
-        index=index, query=query, caps=caps, pipeline=pipeline, radius=radius
+        index=index, query=query, caps=caps, pipeline=pipeline, radius=radius,
+        kernel=_stamped_kernel(query.kernel, caps),
     )
     _STATS[pipeline]["compiles"] += 1
     return plan
@@ -373,6 +400,7 @@ class ShardedPlan:
     max_children: Optional[tuple]
     merge: str
     pipeline: str = "sharded"
+    kernel: object = None  # generation-stamped query.kernel (see SearchPlan)
 
     def __call__(self, sharded_index, Q, *, slot_valid=None):
         _STATS[self.pipeline]["executions"] += 1
@@ -385,7 +413,8 @@ class ShardedPlan:
             dist=self.dist, k=q.k, r=self.radius, mode=self.shard_mode,
             beam=q.beam, max_children=self.max_children, merge=self.merge,
             leaf_radius_filter=q.leaf_radius_filter,
-            with_stats=q.with_stats, kernel=q.kernel, slot_valid=slot_valid,
+            with_stats=q.with_stats, kernel=self.kernel,
+            slot_valid=slot_valid,
         )
 
     def explain(self) -> str:
@@ -449,7 +478,7 @@ def compile_sharded_plan(
         query=query, mesh=mesh, db_axes=tuple(db_axes),
         dist=dist_lib.get(dist), radius=radius, shard_mode=shard_mode,
         max_children=tuple(max_children) if max_children is not None
-        else None, merge=merge,
+        else None, merge=merge, kernel=_stamped_kernel(query.kernel),
     )
     _STATS[plan.pipeline]["compiles"] += 1
     return plan

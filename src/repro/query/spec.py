@@ -64,7 +64,12 @@ class Query:
       leaf_radius_filter: apply the radius at the leaf ranking too (paper
         Algorithm 2 does not; this is the stricter variant).
       with_stats: include the candidate-count reduction (serving sets False).
-      kernel: kernel-layer block knobs (None = defaults).
+      kernel: kernel-layer block knobs (None = defaults). With
+        ``KernelConfig(auto=True)`` the planner resolves knobs left at their
+        defaults from the persisted block-size tuner cache
+        (``repro.kernels.autotune``) and re-plans — retracing the jitted
+        pipelines — when the cached winners change; explicitly set fields
+        still win.
     """
 
     k: int = 10

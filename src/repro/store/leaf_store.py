@@ -22,10 +22,21 @@ reranks every candidate — bit-identical to ``search_beam``.
 
 Quantisation format (symmetric, per block of ``block`` rows):
 
-  int8:  scale_b = max|x_b| / 127 ; code = clip(round(x / scale_b), ±127)
-  fp16:  code = fp16(x)           ; scale_b = 1.0  (uniform container)
-  fp32:  codes is None — the payload stays the dense resident leaf array
-         (the seed path, expressed in the same store interface).
+  int8:   scale_b = max|x_b| / 127 ; code = clip(round(x / scale_b), ±127)
+  fp16:   code = fp16(x)           ; scale_b = 1.0  (uniform container)
+  int4:   scale_b = max|x_b| / 7   ; code = clip(round(x / scale_b), ±7),
+          two codes packed per int8 byte (``ref.pack_int4``) — codes width
+          is ``ceil(d / 2)``, half the int8 resident payload
+  binary: scale_b = mean|x_b| ; code = sign bit, eight per uint8 byte
+          (``ref.pack_binary``) — codes width ``ceil(d / 8)``; dequantised
+          rows are ``±scale_b`` (asymmetric scan: fp32 query vs sign codes)
+  fp32:   codes is None — the payload stays the dense resident leaf array
+          (the seed path, expressed in the same store interface).
+
+The packed backends keep their containers packed end-to-end: persistence,
+``shard_payload`` and the stage-1 scan all move ``ceil(d/2)`` (int4) or
+``ceil(d/8)`` (binary) bytes per row; unpacking happens per-tile inside the
+scan kernel (``kernels/quantized.py``) or ``ref.unpack_codes``.
 """
 
 from __future__ import annotations
@@ -40,23 +51,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ref as kref
+
 Array = jax.Array
 
-BACKENDS = ("fp32", "fp16", "int8")
+BACKENDS = ("fp32", "fp16", "int8", "int4", "binary")
 
-_CODE_DTYPE = {"int8": jnp.int8, "fp16": jnp.float16}
+_CODE_DTYPE = {
+    "int8": jnp.int8,
+    "fp16": jnp.float16,
+    "int4": jnp.int8,  # packed container: two 4-bit codes per byte
+    "binary": jnp.uint8,  # packed container: eight sign bits per byte
+}
+# LeafStore.backend -> the kernel layer's packed-code format tag
+# (``ops.scan_quantized(code_format=...)`` / ``ref.CODE_FORMATS``).
+_CODE_FORMAT = {"int4": "int4", "binary": "binary"}
 _EPS = 1e-12
 
 
 def quantize(x, backend: str, block: int) -> tuple[Array, Array]:
-    """Symmetric block quantisation: [n, d] f32 -> (codes [n, d], scales [nb]).
+    """Symmetric block quantisation: [n, d] f32 -> (codes [n, dc], scales [nb]).
 
     ``nb = ceil(n / block)``; the last block may be short (its scale covers
-    only the real rows). Round-trip error is bounded by ``scale_b / 2`` per
-    coordinate for int8 (``tests/test_store.py`` asserts it).
+    only the real rows). ``dc`` is ``d`` for the dense backends (int8/fp16)
+    and the packed width for int4 (``ceil(d/2)``) / binary (``ceil(d/8)``).
+    Round-trip error is bounded by ``scale_b / 2`` per coordinate for int8
+    and int4 (at 3 bits); binary keeps only the sign
+    (``tests/test_store.py`` asserts the bounds).
     """
     if backend not in _CODE_DTYPE:
-        raise ValueError(f"quantize backend must be int8/fp16, got {backend!r}")
+        raise ValueError(
+            f"quantize backend must be int8/fp16/int4/binary, got {backend!r}"
+        )
     x = jnp.asarray(x, jnp.float32)
     n, d = x.shape
     nb = -(-n // block)
@@ -64,16 +90,51 @@ def quantize(x, backend: str, block: int) -> tuple[Array, Array]:
         return x.astype(jnp.float16), jnp.ones((nb,), jnp.float32)
     pad = nb * block - n
     xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, block, d)
-    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=(1, 2)) / 127.0, _EPS)
-    codes = jnp.clip(jnp.round(xb / scales[:, None, None]), -127, 127)
-    return codes.reshape(nb * block, d)[:n].astype(jnp.int8), scales
+    if backend == "binary":
+        # mean|x| over the block's *real* rows (zero padding contributes
+        # nothing to the numerator, so only the denominator needs the count)
+        rows_b = jnp.clip(n - jnp.arange(nb) * block, 0, block)
+        scales = jnp.maximum(
+            jnp.sum(jnp.abs(xb), axis=(1, 2))
+            / jnp.maximum(rows_b * d, 1).astype(jnp.float32),
+            _EPS,
+        )
+        return kref.pack_binary(x), scales
+    qmax = 127.0 if backend == "int8" else 7.0
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=(1, 2)) / qmax, _EPS)
+    codes = jnp.clip(jnp.round(xb / scales[:, None, None]), -qmax, qmax)
+    codes = codes.reshape(nb * block, d)[:n]
+    if backend == "int4":
+        return kref.pack_int4(codes.astype(jnp.int32)), scales
+    return codes.astype(jnp.int8), scales
 
 
-def dequantize(codes: Array, scales: Array, block: int) -> Array:
-    """Inverse of :func:`quantize`: codes [n, d] -> f32 [n, d]."""
+def dequantize(
+    codes: Array,
+    scales: Array,
+    block: int,
+    *,
+    code_format: str = "dense",
+    d: Optional[int] = None,
+) -> Array:
+    """Inverse of :func:`quantize`: codes [n, dc] -> f32 [n, d].
+
+    Dense codes (int8/fp16, ``code_format="dense"``) need no extra
+    arguments. Packed codes need their format tag and the unpacked feature
+    dim ``d`` (the packed byte width cannot recover ``d`` alone — the last
+    byte may be padding).
+    """
     n = codes.shape[0]
+    if code_format != "dense":
+        if d is None:
+            raise ValueError(
+                f"dequantize of packed {code_format!r} codes needs d="
+            )
+        vals = kref.unpack_codes(codes, code_format, d).astype(jnp.float32)
+    else:
+        vals = codes.astype(jnp.float32)
     rows = jnp.clip(jnp.arange(n) // block, 0, scales.shape[0] - 1)
-    return codes.astype(jnp.float32) * jnp.take(scales, rows)[:, None]
+    return vals * jnp.take(scales, rows)[:, None]
 
 
 def _exact_backing(pts: np.ndarray, path: Optional[str]):
@@ -174,9 +235,9 @@ class ExactSource:
 class LeafStore:
     """The payload tier: resident codes + out-of-core exact vectors."""
 
-    backend: str  # "fp32" | "fp16" | "int8"
+    backend: str  # "fp32" | "fp16" | "int8" | "int4" | "binary"
     block: int  # granule rows (quantisation block == fetch unit)
-    codes: Optional[Array]  # [n, d] int8/fp16 on device; None for fp32
+    codes: Optional[Array]  # [n, dc] codes on device; None for fp32
     scales: Optional[Array]  # [nb] f32 per-block scales; None for fp32
     exact: ExactSource  # exact fp32 payload (host or memmap)
     last_rebuild: Optional[dict] = None  # ``rebuild`` diagnostics
@@ -245,7 +306,10 @@ class LeafStore:
         nb = -(-n // block)
         old_codes = np.asarray(self.codes)
         old_scales = np.asarray(self.scales)
-        codes_out = np.zeros((n, d), old_codes.dtype)
+        # codes keep the *container* width: d for dense backends, the packed
+        # byte width for int4/binary (d itself never changes across epochs)
+        dc = kref.packed_width(d, self.code_format)
+        codes_out = np.zeros((n, dc), old_codes.dtype)
         scales_out = np.ones(nb, np.float32)
         requant = 0
         for b in range(nb):
@@ -279,6 +343,13 @@ class LeafStore:
         return self.exact.d
 
     @property
+    def code_format(self) -> str:
+        """The kernel layer's packed-code tag for this backend
+        (``ops.scan_quantized(code_format=...)``): ``"int4"`` / ``"binary"``
+        for the packed backends, ``"dense"`` otherwise."""
+        return _CODE_FORMAT.get(self.backend, "dense")
+
+    @property
     def resident_bytes(self) -> int:
         """Device-resident payload bytes. fp32: the dense leaf array itself
         (it *is* the payload); quantised: codes + scales only."""
@@ -298,7 +369,8 @@ class LeafStore:
         """Full dequantised payload [n, d] f32 (tests / small stores only)."""
         if self.backend == "fp32":
             return jnp.asarray(self.exact.fetch_rows(np.arange(self.n)))
-        return dequantize(self.codes, self.scales, self.block)
+        return dequantize(self.codes, self.scales, self.block,
+                          code_format=self.code_format, d=self.d)
 
     def fetch_rows(self, idx) -> np.ndarray:
         """Exact fp32 rows from the out-of-core tier (granule fetch + LRU)."""

@@ -148,8 +148,7 @@ def search_two_stage(
     d_scan, slot = kops.scan_quantized(
         Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
         k=R, block=store.block, slot_valid=slot_valid,
-        bq=kernel.bq, bn=kernel.bn,
-        force_pallas=kernel.force_pallas,
+        code_format=store.code_format, config=kernel,
     )
     surv_idx = jnp.take_along_axis(cand_idx, slot, axis=1)  # [B, R]
     surv_ok = d_scan < BIG / 2
@@ -161,8 +160,7 @@ def search_two_stage(
     C = store.fetch_rows(np.asarray(surv_idx))  # [B, R, d] host f32
     k_eff = min(k, R)
     dists, slot2 = kops.rank_candidates(
-        Qb, jnp.asarray(C), surv_ok, dist, k=k_eff,
-        bq=kernel.bq, bn=kernel.bn, force_pallas=kernel.force_pallas,
+        Qb, jnp.asarray(C), surv_ok, dist, k=k_eff, config=kernel,
     )
     slots = jnp.take_along_axis(surv_idx, slot2, axis=1)
     res = assemble_result(

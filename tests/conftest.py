@@ -14,6 +14,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled executables after each test module.
+
+    The full suite compiles thousands of distinct executables; on
+    single-core CPU runners the accumulated live LLVM JIT state eventually
+    segfaults the XLA compiler mid-`backend_compile` (reproducible at the
+    same test with the suite run whole, absent with the module run alone).
+    Per-module cache clearing keeps the live-executable population bounded.
+    In-module cache-count assertions (tests/test_query.py) are unaffected —
+    clearing happens only at module boundaries."""
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 def run_in_devices(script: str, n_devices: int = 8, timeout: int = 480) -> str:
     """Run a python snippet in a subprocess with N fake devices.
 

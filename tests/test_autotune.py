@@ -1,0 +1,213 @@
+"""Autotuner tests (kernels/autotune.py, DESIGN.md §3.9): winner-cache
+round-trip determinism, shape bucketing, corrupt/stale cache tolerance, and
+the resolution precedence chain at ``ops`` dispatch time.
+
+Timing is injected (``tune(measure=...)``) so the suite never waits on the
+interpret-mode kernels; the real timing loop is exercised once on a tiny
+shape at the end (and continuously by ``benchmarks/bench_kernels.py
+--smoke`` in CI).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.kernels import autotune, tiling
+from repro.kernels import ops as kops
+
+
+@pytest.fixture()
+def tuner_cache(tmp_path):
+    """Point the tuner at a throwaway cache file; restore the default (and
+    drop the in-memory snapshot) afterwards so tests never leak winners."""
+    path = str(tmp_path / "tune.json")
+    autotune.set_cache_path(path)
+    yield path
+    autotune.set_cache_path(None)
+
+
+def _fake_measure(best_knobs, best_us=10.0, other_us=100.0):
+    """A deterministic 'timer': ``best_knobs`` is fast, everything else
+    slow — makes the sweep winner predictable without wall-clock."""
+    def measure(knobs):
+        return best_us if knobs == best_knobs else other_us
+    return measure
+
+
+# ---------------------------------------------------------------------------
+# Cache round-trip determinism
+# ---------------------------------------------------------------------------
+
+
+def test_tune_caches_winner_and_second_call_never_times(tuner_cache):
+    shape = (64, 96, 32)
+    fast = dict(bm=32, bn=128, bd=64)
+    r1 = autotune.tune("pairwise", form="l2", dtype="float32", shape=shape,
+                       measure=_fake_measure(fast))
+    assert not r1["cached"]
+    assert r1["winner"] == fast
+    assert r1["winner_us"] == 10.0
+    # hand-set default is always a sweep member (the acceptance baseline)
+    assert any(s["knobs"] == dict(tiling.OP_DEFAULTS["pairwise"])
+               for s in r1["sweep"])
+    gen = autotune.generation()
+
+    def exploding_measure(knobs):  # pragma: no cover - must not run
+        raise AssertionError("cache hit must not re-time")
+
+    r2 = autotune.tune("pairwise", form="l2", dtype="float32", shape=shape,
+                       measure=exploding_measure)
+    assert r2["cached"]
+    assert r2["winner"] == fast
+    assert autotune.generation() == gen  # a pure read mutates nothing
+
+    # and the winner round-trips the on-disk JSON (fresh in-memory snapshot)
+    autotune.set_cache_path(tuner_cache)
+    assert autotune.lookup(op="pairwise", form="l2", dtype="float32",
+                           shape=shape) == fast
+    blob = json.load(open(tuner_cache))
+    assert blob["version"] == autotune.CACHE_VERSION
+
+
+def test_record_bumps_generation(tuner_cache):
+    g0 = autotune.generation()
+    autotune.record(op="swap", form="none", dtype="float32", shape=(96,),
+                    knobs=dict(bg=32), us=5.0)
+    assert autotune.generation() == g0 + 1
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bucket_power_of_two_boundaries():
+    assert autotune.shape_bucket((127, 128, 129)) == (128, 128, 256)
+    assert autotune.shape_bucket((1, 2, 3)) == (1, 2, 4)
+    assert autotune.shape_bucket((0,)) == (1,)
+
+
+def test_lookup_hits_any_shape_in_the_bucket(tuner_cache):
+    autotune.record(op="knn", form="l2", dtype="float32", shape=(100, 2000, 70),
+                    knobs=dict(bq=32, bn=256), us=1.0)
+    # (100, 2000, 70) buckets to (128, 2048, 128): neighbours hit ...
+    for shape in [(128, 2048, 128), (65, 1025, 65), (100, 2000, 70)]:
+        assert autotune.lookup(op="knn", form="l2", dtype="float32",
+                               shape=shape) == dict(bq=32, bn=256), shape
+    # ... the next bucket up misses
+    assert autotune.lookup(op="knn", form="l2", dtype="float32",
+                           shape=(129, 2048, 128)) is None
+
+
+def test_cache_key_is_backend_and_dtype_scoped(tuner_cache):
+    autotune.record(op="scan", form="l2", dtype="int8", shape=(16, 64, 16),
+                    knobs=dict(bq=8, bn=64), us=1.0)
+    assert autotune.lookup(op="scan", form="l2", dtype="int4",
+                           shape=(16, 64, 16)) is None
+    assert autotune.lookup(op="scan", form="l2", dtype="int8",
+                           shape=(16, 64, 16), backend="tpu") is None
+
+
+# ---------------------------------------------------------------------------
+# Corrupt / stale cache files: warn and ignore, never raise
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_cache_file_warns_and_is_ignored(tmp_path):
+    path = str(tmp_path / "corrupt.json")
+    with open(path, "w") as f:
+        f.write("{not json!!")
+    autotune.set_cache_path(path)
+    try:
+        with pytest.warns(UserWarning, match="corrupt"):
+            assert autotune.lookup(op="pairwise", form="l2", dtype="float32",
+                                   shape=(64, 96, 32)) is None
+        # recording over a corrupt file works (rewrites it wholesale)
+        autotune.record(op="pairwise", form="l2", dtype="float32",
+                        shape=(64, 96, 32), knobs=dict(bm=32, bn=128, bd=64),
+                        us=1.0)
+        blob = json.load(open(path))
+        assert blob["version"] == autotune.CACHE_VERSION
+    finally:
+        autotune.set_cache_path(None)
+
+
+def test_stale_version_cache_warns_and_is_ignored(tmp_path):
+    path = str(tmp_path / "stale.json")
+    with open(path, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION + 1, "entries": {
+            "cpu|pairwise|l2|float32|64x128x32": {
+                "knobs": {"bm": 999}, "us": 1.0},
+        }}, f)
+    autotune.set_cache_path(path)
+    try:
+        with pytest.warns(UserWarning, match="version"):
+            assert autotune.lookup(op="pairwise", form="l2", dtype="float32",
+                                   shape=(64, 96, 32)) is None
+    finally:
+        autotune.set_cache_path(None)
+
+
+def test_missing_cache_file_is_silently_empty(tmp_path):
+    autotune.set_cache_path(str(tmp_path / "nope" / "tune.json"))
+    try:
+        assert autotune.lookup(op="swap", form="none", dtype="float32",
+                               shape=(96,)) is None
+    finally:
+        autotune.set_cache_path(None)
+
+
+# ---------------------------------------------------------------------------
+# Resolution precedence at ops dispatch time
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_blocks_precedence_chain(tuner_cache):
+    shape = (64, 96, 32)
+    tuned = dict(bm=32, bn=128, bd=64)
+    autotune.record(op="pairwise", form="l2", dtype="float32", shape=shape,
+                    knobs=tuned, us=1.0)
+    defaults = kops.resolve_blocks("pairwise", "l2", "float32", shape)
+    # 1. no config: hand defaults, tuner not consulted
+    assert defaults["bm"] == tiling.OP_DEFAULTS["pairwise"]["bm"]
+    # 2. auto=True: tuned winner for un-set knobs
+    auto = kops.KernelConfig(auto=True)
+    assert kops.resolve_blocks("pairwise", "l2", "float32", shape, auto) \
+        == tuned
+    # 3. explicit call-site knob beats the tuned winner
+    r = kops.resolve_blocks("pairwise", "l2", "float32", shape, auto, bm=64)
+    assert r["bm"] == 64 and r["bn"] == tuned["bn"]
+    # 4. non-default config field beats the tuned winner
+    cfg = kops.KernelConfig(auto=True, bn=64)
+    r = kops.resolve_blocks("pairwise", "l2", "float32", shape, cfg)
+    assert r["bn"] == 64 and r["bm"] == tuned["bm"]
+    # 5. auto=False config never consults the tuner
+    r = kops.resolve_blocks("pairwise", "l2", "float32", shape,
+                            kops.KernelConfig())
+    assert r == defaults
+
+
+def test_candidate_grid_contains_default_and_respects_vmem():
+    grid = autotune.candidate_grid("pairwise", "l2", "float32", (64, 96, 32))
+    assert grid[0] == dict(tiling.OP_DEFAULTS["pairwise"])
+    assert len(grid) >= 2
+    dbytes = 4
+    for knobs in grid[1:]:
+        eff = autotune._effective("pairwise", knobs, (64, 96, 32), dbytes, 8)
+        assert autotune._vmem_ok("pairwise", "l2", eff, (64, 96, 32),
+                                 dbytes, 8)
+
+
+def test_tune_real_timing_smoke(tuner_cache):
+    """One real (interpret-mode) timed sweep on a tiny swap shape: the
+    timing loop runs, a winner lands in the cache, auto=True resolves it."""
+    r = autotune.tune("swap", form="none", dtype="float32", shape=(48,),
+                      reps=1, warmup=1)
+    assert not r["cached"] and r["winner_us"] > 0.0
+    resolved = kops.resolve_blocks("swap", "none", "float32", (48,),
+                                   kops.KernelConfig(auto=True))
+    assert resolved["bg"] == r["winner"]["bg"]
+    assert os.path.exists(autotune.cache_path())

@@ -1,0 +1,51 @@
+"""Config-layer drift guards (configs/pdasc.py).
+
+``PDASCArchConfig.kernel_config()`` is built field-wise from
+``KernelConfig._fields`` so a knob added to the kernel layer cannot silently
+fall out of the arch config's threading — these tests are the teeth behind
+that comment: every tunable KernelConfig field must be mirrored as a
+same-named arch-config field, and ``kernel_config()`` must carry every
+mirrored value through verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.pdasc import PDASCArchConfig
+from repro.kernels.ops import DEFAULT, KernelConfig
+
+# KernelConfig fields that are *not* user-facing arch knobs: force_pallas is
+# a test/debug override, tuned_gen is plan-compiler plumbing (the generation
+# stamp that invalidates cached plans on retune).
+_UNMIRRORED = {"force_pallas", "tuned_gen"}
+
+
+def test_every_kernel_knob_is_mirrored_in_arch_config():
+    cfg_fields = {f.name for f in dataclasses.fields(PDASCArchConfig)}
+    missing = set(KernelConfig._fields) - _UNMIRRORED - cfg_fields
+    assert not missing, (
+        f"KernelConfig knobs {sorted(missing)} have no PDASCArchConfig "
+        f"mirror field: kernel_config() would silently drop them"
+    )
+
+
+def test_kernel_config_defaults_round_trip():
+    assert PDASCArchConfig().kernel_config() == DEFAULT
+
+
+def test_kernel_config_carries_every_mirrored_field():
+    overrides = dict(bm=32, bn=64, bd=128, bq=16, bg=256, row_chunk=512,
+                     group_chunk=4, auto=True)
+    kc = PDASCArchConfig(**overrides).kernel_config()
+    for name, val in overrides.items():
+        assert getattr(kc, name) == val, name
+    # unmirrored fields keep their KernelConfig defaults
+    assert kc.force_pallas == DEFAULT.force_pallas
+    assert kc.tuned_gen == DEFAULT.tuned_gen
+
+
+def test_kernel_config_auto_flag_reaches_search_query():
+    q = PDASCArchConfig(auto=True, bq=16).search_query(execution="beam")
+    assert q.kernel.auto is True
+    assert q.kernel.bq == 16
