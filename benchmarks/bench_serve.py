@@ -1,0 +1,268 @@
+"""Replicated serving-tier benchmark: tail latency + saturation under
+injected faults (DESIGN.md §3.10).
+
+Drives open-loop Poisson query traffic at a replicated PDASC serving tier
+(``serving.ReplicaSet`` behind the retry/hedge/backoff ``Router``) and
+records, into ``BENCH_serve.json``:
+
+  * saturation QPS (closed-loop, all workers pinned) per scenario,
+  * open-loop p50/p99/p999 latency at ~0.6x saturation,
+  * caller-visible errors (the acceptance bar: ZERO, faulted or not),
+  * router activity: retries, hedges, degraded serves, health events.
+
+Scenarios: ``fault_free``, and ``wedged`` — a deterministic ``FaultPlan``
+wedges 1 of 4 replicas mid-run (its batch handler stalls per dispatch).
+The router must route around it: hedges rescue the stalled requests,
+consecutive failures eject the replica, and once the wedge window passes a
+half-open probe readmits it. Asserted here (smoke and full):
+
+  * zero caller-visible errors in every scenario,
+  * the faulted run's event log shows ``eject`` AND ``readmit``,
+  * (full only) faulted p99 within 3x of fault-free p99.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+        [--out experiments/serve.json] [--bench-out BENCH_serve.json]
+
+``--smoke`` runs a tiny config (correctness + fault-recovery assertions
+only, no saturation sweep) so CI catches serving-tier regressions after
+``bench_kernels``, matching the other ``--smoke`` benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core.index import PDASCIndex
+from repro.data import make_dataset
+from repro.query import Query, degraded
+from repro.serving import FaultPlan, ReplicaSet, Router, RouterConfig
+
+N_REPLICAS = 4
+
+
+def _build(smoke: bool, seed: int):
+    if smoke:
+        n, n_queries, gl = 1200, 256, 64
+    else:
+        n, n_queries, gl = 7800, 512, 256
+    data = make_dataset("dense_embed", n=n + n_queries, seed=seed)
+    train, test = data[:n], data[n:n + n_queries]
+    idx = PDASCIndex.build(train, gl=gl, distance="euclidean",
+                           radius_quantile=0.35)
+    return idx, test, dict(dataset="dense_embed", n=n, gl=gl,
+                           n_queries=n_queries, distance="euclidean")
+
+
+def _make_tier(idx, query, fault_plan, seed):
+    rs = ReplicaSet(
+        idx, query, n_replicas=N_REPLICAS, batch_size=8, max_wait_ms=1.0,
+        degraded_query=degraded(query), fault_plan=fault_plan,
+    )
+    router = Router(rs, RouterConfig(
+        deadline_s=5.0, max_retries=2, hedge=True, hedge_min_s=0.02,
+        eject_failures=2, probe_cooldown_s=0.1, probe_timeout_s=0.25,
+        probe_interval_s=0.02, seed=seed,
+    ))
+    # Warm every replica's engine (they share the jitted executables, but
+    # each engine must see one batch so the bench never times a compile).
+    warm = [r.submit(r.probe_payload()) for r in rs.replicas]
+    for req in warm:
+        req.wait(timeout=300)
+    return rs, router
+
+
+def _closed_loop_qps(router, test, *, workers=8, per_worker=40):
+    """Saturation throughput: every worker pinned in a search loop."""
+    errors = [0] * workers
+
+    def worker(w):
+        rng = np.random.default_rng(w)
+        for _ in range(per_worker):
+            try:
+                router.search(test[rng.integers(len(test))])
+            except Exception:  # noqa: BLE001 — counted below
+                errors[w] += 1
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    return workers * per_worker / elapsed, sum(errors)
+
+
+def _open_loop(router, test, *, qps: float, n: int, seed: int):
+    """Open-loop Poisson arrivals at ``qps``: the dispatcher never waits
+    for a response before the next arrival (each request runs its own
+    waiter thread — the router's retry/hedge state machine is driven from
+    the waiting caller), so queueing delay shows up in the latencies
+    instead of silently throttling the offered load."""
+    rng = np.random.default_rng(seed)
+    order = rng.integers(0, len(test), n)
+    gaps = rng.exponential(1.0 / qps, n)
+    lats, errors = [], []
+    lock = threading.Lock()
+    retries = [0]
+    hedges = [0]
+    degraded_n = [0]
+
+    def fire(i):
+        try:
+            res = router.search(test[order[i]])
+        except Exception as e:  # noqa: BLE001 — the acceptance counter
+            with lock:
+                errors.append(type(e).__name__)
+            return
+        with lock:
+            lats.append(res.latency_s)
+            retries[0] += res.retries
+            hedges[0] += int(res.hedged)
+            degraded_n[0] += int(res.degraded)
+
+    threads = []
+    next_at = time.perf_counter()
+    for i in range(n):
+        next_at += gaps[i]
+        delay = next_at - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        t = threading.Thread(target=fire, args=(i,))
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=60)
+    lat_ms = np.array(lats) * 1e3
+    return dict(
+        qps_offered=round(qps, 1),
+        completed=len(lats),
+        errors=len(errors),
+        error_kinds=sorted(set(errors)),
+        p50_ms=round(float(np.percentile(lat_ms, 50)), 2),
+        p99_ms=round(float(np.percentile(lat_ms, 99)), 2),
+        p999_ms=round(float(np.percentile(lat_ms, 99.9)), 2),
+        retries=retries[0],
+        hedges=hedges[0],
+        degraded=degraded_n[0],
+    )
+
+
+def _await_recovery(router, test, *, timeout_s: float = 30.0):
+    """Keep light traffic flowing until the ejected replica is readmitted
+    (probes advance the wedged replica's dispatch window past its end)."""
+    t0 = time.time()
+    i = 0
+    while time.time() - t0 < timeout_s:
+        if router.event_counts().get("readmit", 0) > 0:
+            return True
+        try:
+            router.search(test[i % len(test)])
+        except Exception:  # noqa: BLE001 — recovery traffic is best-effort
+            pass
+        i += 1
+        time.sleep(0.05)
+    return router.event_counts().get("readmit", 0) > 0
+
+
+def run(smoke: bool = False, seed: int = 0):
+    idx, test, cfg = _build(smoke, seed)
+    query = Query(k=10, execution="beam", beam=32, with_stats=False)
+    n_open = 200 if smoke else 600
+    # The wedge window is in per-replica handler dispatches: it opens a few
+    # batches in (mid-run for any sane traffic level) and is short enough
+    # that post-ejection probes can cross it to the recovery side.
+    wedge = FaultPlan.parse("wedge:r1@6+5:0.5")
+
+    rows = []
+    scenarios = [("fault_free", None), ("wedged", wedge)]
+    for name, plan in scenarios:
+        rs, router = _make_tier(idx, query, plan, seed)
+        try:
+            if smoke:
+                sat_qps, sat_errors = None, 0
+                qps = 120.0
+            else:
+                sat_qps, sat_errors = _closed_loop_qps(router, test)
+                qps = 0.6 * sat_qps
+            row = _open_loop(router, test, qps=qps, n=n_open, seed=seed + 1)
+            recovered = None
+            if plan is not None:
+                recovered = _await_recovery(router, test)
+            events = router.event_counts()
+            row.update(
+                scenario=name, config=cfg, n_replicas=N_REPLICAS,
+                faults=("wedge:r1@6+5:0.5" if plan is not None else None),
+                saturation_qps=(round(sat_qps, 1) if sat_qps else None),
+                saturation_errors=sat_errors,
+                events=events,
+            )
+            rows.append(row)
+            print(f"[serve] {name}: offered={row['qps_offered']}qps "
+                  f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms "
+                  f"p999={row['p999_ms']}ms errors={row['errors']} "
+                  f"retries={row['retries']} hedges={row['hedges']} "
+                  f"events={events}", flush=True)
+            assert row["errors"] == 0, (
+                f"{name}: {row['errors']} caller-visible errors "
+                f"({row['error_kinds']}) — the router must absorb faults"
+            )
+            assert sat_errors == 0, (
+                f"{name}: {sat_errors} errors during the saturation sweep"
+            )
+            if plan is not None:
+                assert events.get("eject", 0) >= 1, (
+                    f"wedged replica was never ejected: {events}"
+                )
+                assert recovered, (
+                    f"wedged replica was never readmitted: {events}"
+                )
+        finally:
+            router.close(close_replicas=True)
+
+    if not smoke:
+        ratio = rows[1]["p99_ms"] / rows[0]["p99_ms"]
+        rows[1]["p99_vs_fault_free"] = round(ratio, 2)
+        assert ratio <= 3.0, (
+            f"faulted p99 {rows[1]['p99_ms']}ms is {ratio:.1f}x the "
+            f"fault-free {rows[0]['p99_ms']}ms (> 3x bound)"
+        )
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny config, fault-recovery assertions only (CI)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="experiments/serve.json")
+    p.add_argument("--bench-out", default="BENCH_serve.json")
+    args = p.parse_args(argv)
+
+    rows = run(smoke=args.smoke, seed=args.seed)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not args.smoke:
+        payload = dict(
+            bench="replicated_serving_under_faults",
+            baseline="fault-free replica pool (same router, no FaultPlan)",
+            new="1-of-4 replicas wedged mid-run: hedge/retry routing, "
+                "health ejection + half-open readmission, zero "
+                "caller-visible errors",
+            rows=rows,
+        )
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[serve] wrote {args.bench_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,12 @@ which persists per-shape winners to ``~/.cache/repro/kernel_tune.json``),
 pass ``Query(k=10, kernel=ops.KernelConfig(auto=True))`` and every plan
 resolves the tuned blocks instead — explicitly-set knobs still win, and
 plans re-compile automatically when the cache is retuned (DESIGN.md §3.9).
+
+To serve an index behind the batching engine, see ``examples/serve_ann.py``
+/ ``python -m repro.launch.serve``; add ``--replicas 4`` for the replicated
+fault-tolerant tier (health-checked replica pool + retry/hedge router,
+DESIGN.md §3.10) and ``--faults "wedge:r1@20+8"`` to watch it route around
+a deterministically injected fault.
 """
 
 import numpy as np

@@ -57,6 +57,18 @@ class PDASCArchConfig:
     delta_capacity: int = 4096
     compact_delta_fill: float = 0.5
     compact_tombstone_ratio: float = 0.2
+    # Replicated serving tier (DESIGN.md §3.10): replica count and the
+    # router's fault-tolerance knobs — per-request deadline, bounded
+    # retries, p99 hedging, admission limit with the graceful-degradation
+    # watermark, and the health-check ejection/probe schedule.
+    n_replicas: int = 2
+    router_deadline_s: float = 1.0
+    router_max_retries: int = 2
+    router_hedge: bool = True
+    router_queue_limit: int = 256
+    router_degrade_at: float = 0.75
+    router_eject_failures: int = 3
+    router_probe_cooldown_s: float = 0.2
 
     def kernel_config(self) -> KernelConfig:
         # Built field-wise from KernelConfig's own field list so a knob added
@@ -82,6 +94,23 @@ class PDASCArchConfig:
                     kernel=self.kernel_config())
         base.update(overrides)
         return Query(**base)
+
+    def router_config(self, **overrides):
+        """The arch's router knobs as a ``repro.serving.RouterConfig`` (the
+        replicated tier's dispatch/retry/hedge/health policy)."""
+        from repro.serving.router import RouterConfig
+
+        base = dict(
+            deadline_s=self.router_deadline_s,
+            max_retries=self.router_max_retries,
+            hedge=self.router_hedge,
+            queue_limit=self.router_queue_limit,
+            degrade_at=self.router_degrade_at,
+            eject_failures=self.router_eject_failures,
+            probe_cooldown_s=self.router_probe_cooldown_s,
+        )
+        base.update(overrides)
+        return RouterConfig(**base)
 
 
 def config() -> PDASCArchConfig:

@@ -32,6 +32,8 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
+import threading
 import time
 import warnings
 from typing import Optional
@@ -53,6 +55,11 @@ _ENV_PATH = "REPRO_TUNE_CACHE"
 OPS = ("pairwise", "knn", "rank", "scan", "swap")
 
 _state: dict = {"path": None, "entries": None, "gen": 0}
+
+# Serialises in-process record() mutate+save pairs (concurrent benchmark
+# threads); cross-process safety comes from _save's unique-temp + atomic
+# rename (last writer wins, never a torn file).
+_write_lock = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -116,13 +123,28 @@ def _entries() -> dict:
 
 
 def _save() -> None:
-    path = cache_path()
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": CACHE_VERSION, "entries": _entries()}, f,
-                  indent=1, sort_keys=True)
-    os.replace(tmp, path)  # atomic publish: readers never see a torn file
+    path = os.path.abspath(cache_path())
+    parent = os.path.dirname(path)
+    os.makedirs(parent, exist_ok=True)
+    # Unique temp name per writer (mkstemp), then an atomic rename in the
+    # same directory: concurrent processes recording winners never share a
+    # half-written temp file, so readers see either the old cache or a
+    # complete new one — last writer wins, never a torn JSON. A crash
+    # between write and publish leaves only a stray temp file behind.
+    fd, tmp = tempfile.mkstemp(
+        prefix=os.path.basename(path) + ".", suffix=".tmp", dir=parent
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": _entries()}, f,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def shape_bucket(shape) -> tuple:
@@ -151,12 +173,13 @@ def lookup(*, op: str, form: str, dtype: str, shape,
 def record(*, op: str, form: str, dtype: str, shape, knobs: dict, us: float,
            backend: Optional[str] = None) -> None:
     """Persist a winner and bump the generation."""
-    entries = _entries()
-    entries[cache_key(op, form, dtype, shape, backend)] = dict(
-        knobs={k: int(v) for k, v in knobs.items()}, us=float(us)
-    )
-    _save()
-    _state["gen"] += 1
+    with _write_lock:
+        entries = _entries()
+        entries[cache_key(op, form, dtype, shape, backend)] = dict(
+            knobs={k: int(v) for k, v in knobs.items()}, us=float(us)
+        )
+        _save()
+        _state["gen"] += 1
 
 
 # ---------------------------------------------------------------------------

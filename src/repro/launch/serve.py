@@ -14,6 +14,15 @@ substrate demo (DESIGN.md §3.7): writes apply between batches via an
 ``online.EpochHandle``, compaction swaps epochs under traffic, and the
 final recall is measured against exact ground truth over the *post-churn*
 live point set.
+
+``--replicas N`` (N > 1) serves through the replicated fault-tolerant tier
+instead (DESIGN.md §3.10): N replicas behind the retry/hedge/backoff
+``Router``, writes fanned out through the shared write log. ``--faults``
+takes a deterministic fault plan (``kind:rR@START+DURATION[:DELAY]``,
+``;``-separated — e.g. ``"wedge:r1@20+8;error:r2@40+5"``) injected into the
+replica batch handlers; the run reports caller-visible errors (expected:
+zero), retries, hedges and the health event log alongside the latency
+percentiles.
 """
 
 from __future__ import annotations
@@ -63,6 +72,18 @@ def _parse():
     p.add_argument("--delta-capacity", type=int, default=1024)
     p.add_argument("--compact-delta-fill", type=float, default=0.5)
     p.add_argument("--compact-tombstone-ratio", type=float, default=0.2)
+    # Replicated serving tier (DESIGN.md §3.10).
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serve through N replicas behind the fault-tolerant "
+                        "router (1 = the single-engine path)")
+    p.add_argument("--faults", default=None,
+                   help="deterministic fault plan, e.g. "
+                        "'wedge:r1@20+8;error:r2@40+5' "
+                        "(kind:rR@START+DURATION[:DELAY_S], kinds: "
+                        "latency/error/wedge/crash; windows in per-replica "
+                        "handler dispatches)")
+    p.add_argument("--deadline-ms", type=float, default=2000.0,
+                   help="router per-request deadline (replicated path)")
     # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
     kd = KernelConfig()
     p.add_argument("--bm", type=int, default=kd.bm)
@@ -71,6 +92,65 @@ def _parse():
     p.add_argument("--bq", type=int, default=kd.bq)
     p.add_argument("--row-chunk", type=int, default=kd.row_chunk)
     return p.parse_args()
+
+
+def _serve_replicated(args, idx, kernel, train, test):
+    """The --replicas path: N replicas behind the fault-tolerant router."""
+    from repro.query import degraded
+    from repro.serving import FaultPlan, ReplicaSet, Router, RouterConfig
+
+    query = Query(k=args.k, execution=args.mode, beam=args.beam,
+                  rerank_width=args.rerank_width, with_stats=False,
+                  kernel=kernel)
+    plan = FaultPlan.parse(args.faults) if args.faults else None
+    replica_set = ReplicaSet(
+        idx, query, n_replicas=args.replicas, batch_size=args.batch,
+        max_wait_ms=args.max_wait_ms, degraded_query=degraded(query),
+        fault_plan=plan, delta_capacity=args.delta_capacity,
+        epoch_kwargs=dict(delta_fill=args.compact_delta_fill,
+                          tombstone_ratio=args.compact_tombstone_ratio),
+    )
+    router = Router(replica_set, RouterConfig(
+        deadline_s=args.deadline_ms / 1e3, seed=args.seed))
+    print(f"[serve] replicated tier: {args.replicas} replicas"
+          + (f", faults={args.faults}" if plan else ", fault-free"))
+    router.search(test[0])  # warmup compile (every replica shares the jits)
+
+    rng = np.random.default_rng(args.seed)
+    q_rows = rng.integers(0, len(test), args.queries)
+    write_every = (args.queries // args.churn) if args.churn else 0
+    upserted: list[int] = []
+    lat, errors, retries, hedges, degraded_n = [], 0, 0, 0, 0
+    for j, i in enumerate(q_rows):
+        if write_every and j % write_every == 0 and j // write_every < \
+                args.churn:
+            if upserted and rng.random() < args.churn_delete_frac:
+                replica_set.delete(
+                    np.array([upserted.pop(rng.integers(len(upserted)))]))
+            else:
+                vec = train[rng.integers(len(train))] + rng.normal(
+                    0, 0.01, train.shape[1]).astype(np.float32)
+                upserted.extend(int(x) for x in replica_set.upsert(vec))
+        t0 = time.time()
+        try:
+            res = router.search(test[i])
+        except Exception as e:  # noqa: BLE001 — counted, run continues
+            errors += 1
+            print(f"[serve] query {j} failed: {type(e).__name__}: {e}")
+            continue
+        lat.append(time.time() - t0)
+        retries += res.retries
+        hedges += int(res.hedged)
+        degraded_n += int(res.degraded)
+    router.close(close_replicas=True)
+
+    lat_ms = np.array(lat) * 1e3
+    counts = router.event_counts()
+    print(f"[serve] {args.queries} queries over {args.replicas} replicas: "
+          f"errors={errors} p50={np.percentile(lat_ms, 50):.1f}ms "
+          f"p99={np.percentile(lat_ms, 99):.1f}ms "
+          f"retries={retries} hedges={hedges} degraded={degraded_n}")
+    print(f"[serve] health events: {counts or '{}'}")
 
 
 def main():
@@ -94,6 +174,10 @@ def main():
 
     kernel = KernelConfig(bm=args.bm, bn=args.bn, bd=args.bd, bq=args.bq,
                           row_chunk=args.row_chunk)
+
+    if args.replicas > 1:
+        _serve_replicated(args, idx, kernel, train, test)
+        return
 
     handle = None
     if args.churn > 0:

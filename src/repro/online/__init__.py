@@ -14,13 +14,14 @@ over an otherwise frozen PDASC index.
 
 from repro.online.compact import compact_index, live_dataset
 from repro.online.delta import DeltaBuffer, merge_topk
-from repro.online.epoch import EpochHandle
+from repro.online.epoch import EpochHandle, WriteLog
 from repro.online.tombstones import TombstoneSet
 
 __all__ = [
     "DeltaBuffer",
     "EpochHandle",
     "TombstoneSet",
+    "WriteLog",
     "compact_index",
     "live_dataset",
     "merge_topk",

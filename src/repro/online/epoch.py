@@ -18,12 +18,62 @@ That serialisation is the entire consistency story:
 Compaction policy lives here too: after a write batch, if the delta fill or
 tombstone ratio crossed its threshold, the handle compacts into a new epoch
 and swaps.
+
+Replicated serving (DESIGN.md §3.10) extends the same story across N
+independent epoch timelines: writes append to one shared :class:`WriteLog`
+(a monotonically sequenced, append-only op record) and fan out to every
+replica's engine; each replica applies them through its own ``EpochHandle``
+and swaps epochs independently (a replica is *allowed* to lag epochs — RCU
+means its readers just see a slightly older, still-consistent snapshot).
+A replica that was down (crashed / restarting) replays the log suffix past
+its last applied sequence number on readmission, so identically-ordered
+replay over identically-seeded clones keeps id assignment deterministic
+across the fleet.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import Any, Optional
+
+
+class WriteLog:
+    """Shared, append-only, monotonically sequenced write record.
+
+    The replica set appends each accepted write once (``append`` returns its
+    sequence number) and fans the op out to every live replica; a replica
+    that missed ops (down at fan-out time) catches up with ``since(seq)``.
+    Entries are immutable tuples ``(seq, kind, payload)``; the log is the
+    durability fiction of this tier — in a real deployment it is the
+    replicated commit log, here it is the deterministic replay source the
+    fault harness restores crashed replicas from.
+    """
+
+    def __init__(self):
+        self._ops: list = []
+        self._lock = threading.Lock()
+
+    def append(self, kind: str, payload: Any) -> int:
+        """Record one write; returns its sequence number (0-based)."""
+        with self._lock:
+            seq = len(self._ops)
+            self._ops.append((seq, kind, payload))
+            return seq
+
+    def since(self, seq: int) -> list:
+        """All entries with sequence number > ``seq`` (pass -1 for all)."""
+        with self._lock:
+            # seqs are dense indices, so the suffix is a slice
+            return self._ops[seq + 1:]
+
+    @property
+    def last_seq(self) -> int:
+        with self._lock:
+            return len(self._ops) - 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ops)
 
 
 class EpochHandle:

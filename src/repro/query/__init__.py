@@ -23,12 +23,13 @@ from repro.query.plan import (
     plan_stats,
     reset_plan_stats,
 )
-from repro.query.spec import EXECUTIONS, Query, validate_query_batch
+from repro.query.spec import EXECUTIONS, Query, degraded, validate_query_batch
 
 __all__ = [
     "Capabilities",
     "EXECUTIONS",
     "Query",
+    "degraded",
     "SearchPlan",
     "ShardedPlan",
     "STALENESS_REPLAN",

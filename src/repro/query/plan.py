@@ -155,6 +155,9 @@ _LOWERING = {
                  "top-R survivors",
     "two_stage_inf": "∞ rerank: the same jitted nsa.search_beam over the "
                      "exact fp32 payload (bit-identical to 'beam')",
+    "two_stage_scan": "degraded scan-only: nsa.descend_beam -> "
+                      "ops.scan_quantized ranked on code distances alone "
+                      "(no exact rerank stage)",
     "sharded": "per-shard nsa.search_{mode} under shard_map -> "
                "distributed.topk_merge global top-k",
 }
@@ -265,7 +268,7 @@ class SearchPlan:
             res = two_stage_lib.search_two_stage(
                 idx.data, idx.store, Qb, dist=idx.distance, k=q.k, r=r,
                 beam=q.beam, max_children=idx.max_children,
-                rerank_width=q.rerank_width,
+                rerank_width=q.rerank_width, exact_rerank=q.exact_rerank,
                 leaf_radius_filter=q.leaf_radius_filter, kernel=self.kernel,
                 slot_valid=slot_valid,
             )
@@ -331,6 +334,8 @@ class SearchPlan:
             or self.caps.store == "fp32"
         ):
             effective = "two_stage_inf"
+        elif self.pipeline == "two_stage" and not q.exact_rerank:
+            effective = "two_stage_scan"
         lines = [
             f"SearchPlan[{self.pipeline}] epoch={self.caps.epoch} "
             f"levels={self.caps.n_levels} "

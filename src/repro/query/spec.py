@@ -61,6 +61,10 @@ class Query:
       rerank_width: two-stage only — survivors of the quantised scan that
         advance to the exact rerank (None / <= 0 = ∞, bit-identical to
         ``beam``).
+      exact_rerank: two-stage only — when False, skip stage 2 entirely and
+        rank on quantised-scan distances alone (the graceful-degradation
+        plan: cheapest possible serve, recall bounded by the code
+        resolution). Ignored by pipelines with no rerank stage.
       leaf_radius_filter: apply the radius at the leaf ranking too (paper
         Algorithm 2 does not; this is the stricter variant).
       with_stats: include the candidate-count reduction (serving sets False).
@@ -77,6 +81,7 @@ class Query:
     execution: str = "auto"
     beam: Beam = 32
     rerank_width: Optional[int] = 128
+    exact_rerank: bool = True
     leaf_radius_filter: bool = False
     with_stats: bool = True
     kernel: Optional[kops.KernelConfig] = None
@@ -96,6 +101,32 @@ class Query:
         )
         if self.rerank_width is not None:
             object.__setattr__(self, "rerank_width", int(self.rerank_width))
+
+
+def degraded(query: Query) -> Query:
+    """The graceful-degradation rewrite of ``query`` (DESIGN.md §3.10).
+
+    Under admission-control pressure the router serves this cheaper spec
+    instead of rejecting: beam narrowed (halved, floor 8 per level), the
+    exact rerank stage dropped (``exact_rerank=False`` — rank on quantised
+    scan distances alone where the index stores codes; indices serving the
+    exact payload just run the narrower beam), rerank width collapsed to
+    ``k``, and stats off. Same ``k`` and radius — the result contract
+    holds, only the quality/cost knobs move. Deterministic and frozen, so
+    the degraded plan compiles once and caches like any other.
+    """
+    beam = query.beam
+    if isinstance(beam, tuple):
+        beam = tuple(max(8, b // 2) for b in beam)
+    elif beam is not None:
+        beam = max(8, int(beam) // 2)
+    return dataclasses.replace(
+        query,
+        beam=beam,
+        rerank_width=query.k,
+        exact_rerank=False,
+        with_stats=False,
+    )
 
 
 def is_concrete(Q) -> bool:

@@ -1,5 +1,44 @@
-"""Serving layer: batched request engine for ANN search and LM decode."""
+"""Serving layer (DESIGN.md §3.9–3.10): the batched request engine, and the
+replicated fault-tolerant tier above it — health-checked replica pool,
+retry/hedge/backoff router, admission control with graceful degradation,
+and the deterministic fault-injection harness."""
 
-from repro.serving.engine import BatchingEngine, QueryHandler, Request
+from repro.serving.engine import (
+    BatchingEngine,
+    Cancelled,
+    DeadlineExceeded,
+    QueryHandler,
+    Request,
+)
+from repro.serving.faults import FaultPlan, FaultSpec, InjectedFault, \
+    ReplicaCrashed
+from repro.serving.replicated import Replica, ReplicaDown, ReplicaSet, \
+    clone_index
+from repro.serving.router import (
+    Overloaded,
+    ReplicaUnavailable,
+    Router,
+    RouterConfig,
+    RouterResult,
+)
 
-__all__ = ["BatchingEngine", "QueryHandler", "Request"]
+__all__ = [
+    "BatchingEngine",
+    "Cancelled",
+    "DeadlineExceeded",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "Overloaded",
+    "QueryHandler",
+    "Replica",
+    "ReplicaCrashed",
+    "ReplicaDown",
+    "ReplicaSet",
+    "ReplicaUnavailable",
+    "Request",
+    "Router",
+    "RouterConfig",
+    "RouterResult",
+    "clone_index",
+]

@@ -29,6 +29,26 @@ handler (DESIGN.md §3.8): it resolves the live index epoch once per batch
 and executes the index's cached plan, so re-planning happens only when the
 capability fingerprint changes (e.g. an epoch swap).
 
+Robust serving hooks (DESIGN.md §3.10):
+
+* **per-request deadlines** — ``submit(payload, deadline_s=...)`` stamps an
+  absolute deadline from ``Request.enqueued_at``; ``_take_batch`` drops an
+  expired request with :class:`DeadlineExceeded` instead of wasting a batch
+  slot on a result nobody will read (writes are never dropped — they are
+  durable once enqueued);
+* **cancellation** — a ``Request.wait(timeout)`` that times out marks the
+  request cancelled (so does an explicit ``cancel()``, e.g. a hedged
+  router attempt losing the race); the worker skips cancelled requests at
+  batch assembly, and a batch whose members all died is never dispatched;
+* **extra handler kinds** — ``extra_handlers={"degraded": handler}`` adds
+  search-like request kinds batched homogeneously with the same deadline
+  logic but served by their own handler: the router's graceful-degradation
+  ladder serves a cheaper plan through the same engine without mixing
+  plans inside one batch;
+* **completion callbacks** — ``Request.on_done`` fires exactly once when a
+  request finishes (result, error, or drop); the replicated router uses it
+  for least-outstanding load accounting.
+
 Used by ``launch/serve.py`` for two endpoints:
   * PDASC k-NN queries  (handler = QueryHandler over the live index)
   * recsys CTR scoring  (handler = recsys serve step)
@@ -50,23 +70,76 @@ import numpy as np
 # Sentinel pushed by close() to wake a worker blocked on the request queue.
 _SHUTDOWN = object()
 
+# Write kinds are durable once enqueued: never deadline-dropped or skipped.
+_WRITE_KINDS = ("upsert", "delete")
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline passed before a worker picked it up."""
+
+
+class Cancelled(RuntimeError):
+    """The request was cancelled (waiter timed out / hedge twin won)."""
+
 
 @dataclasses.dataclass
 class Request:
     payload: Any  # one query row (pytree of arrays, leading dim absent)
     id: int = 0
-    kind: str = "search"  # "search" | "upsert" | "delete"
+    kind: str = "search"  # "search" | extra handler kinds | "upsert" | "delete"
     enqueued_at: float = 0.0
+    # Absolute deadline (time.time()); None = no deadline. Search-kind
+    # requests past it are dropped by _take_batch with DeadlineExceeded.
+    deadline: Optional[float] = None
     _event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Any = None
     error: Optional[BaseException] = None
+    # Fired exactly once when the request finishes (result, error or drop).
+    # Must be cheap and never raise (exceptions are swallowed) — the worker
+    # thread calls it.
+    on_done: Optional[Callable[["Request"], None]] = None
+    _cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Mark the request dead: a worker that has not yet taken it skips
+        it instead of computing a result nobody will read. Best-effort — a
+        request already inside a batch still computes (its result is simply
+        never waited on)."""
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def done(self, timeout: Optional[float] = None) -> bool:
+        """Wait up to ``timeout`` for completion WITHOUT cancelling on
+        expiry (the router's hedge loop polls this while keeping both
+        attempts alive)."""
+        return self._event.wait(timeout)
 
     def wait(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
+            if self.kind not in _WRITE_KINDS:
+                # nobody is left to read the result: let the worker skip it
+                self.cancel()
             raise TimeoutError(f"request {self.id} timed out")
         if self.error is not None:
             raise self.error
         return self.result
+
+    def _finish(self, *, result=None, error=None) -> None:
+        """Worker-side completion: set outcome, fire the event, run the
+        callback exactly once."""
+        if error is not None:
+            self.error = error
+        else:
+            self.result = result
+        self._event.set()
+        if self.on_done is not None:
+            try:
+                self.on_done(self)
+            except Exception:
+                pass  # accounting hook, never the worker's problem
 
 
 class BatchingEngine:
@@ -81,6 +154,7 @@ class BatchingEngine:
         pad_payload: Optional[Any] = None,
         prefetch_fn: Optional[Callable[[list], None]] = None,
         write_handler: Optional[Callable[[list], None]] = None,
+        extra_handlers: Optional[dict] = None,
     ):
         self.handler = handler
         self.batch_size = batch_size
@@ -88,6 +162,14 @@ class BatchingEngine:
         self.pad_payload = pad_payload
         self.prefetch_fn = prefetch_fn
         self.write_handler = write_handler
+        # Search-like kinds beyond "search": batched homogeneously (one kind
+        # per batch, same deadline batching) but served by their own handler
+        # — e.g. the router's degraded-plan ladder (DESIGN.md §3.10).
+        self.extra_handlers = dict(extra_handlers or {})
+        bad = set(self.extra_handlers) & ({"search"} | set(_WRITE_KINDS))
+        if bad:
+            raise ValueError(f"extra_handlers may not shadow builtin "
+                             f"request kinds: {sorted(bad)}")
         self._q: queue.Queue = queue.Queue()
         # Lookahead buffer: _take_batch stops a batch at a kind boundary and
         # parks the first request of the next batch here (worker-only).
@@ -99,7 +181,8 @@ class BatchingEngine:
         # the worker drained it, leaving a request whose wait() never fires.
         self._submit_lock = threading.Lock()
         self.stats = dict(batches=0, requests=0, occupancy_sum=0.0,
-                          prefetches=0, writes=0, write_batches=0)
+                          prefetches=0, writes=0, write_batches=0,
+                          deadline_drops=0, cancelled_skips=0)
         self._prefetch_q: Optional[queue.Queue] = None
         self._prefetch_thread = None
         if prefetch_fn is not None:
@@ -113,8 +196,22 @@ class BatchingEngine:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
-    def submit(self, payload) -> Request:
-        return self._enqueue(payload, "search")
+    def submit(self, payload, *, kind: str = "search",
+               deadline_s: Optional[float] = None,
+               on_done: Optional[Callable[[Request], None]] = None) -> Request:
+        """Enqueue a search-like request. ``kind`` picks the handler
+        ("search", or a key of ``extra_handlers``); ``deadline_s`` is a
+        per-request budget from enqueue time — a request still queued when
+        it expires is dropped with :class:`DeadlineExceeded` instead of
+        occupying a batch slot. ``on_done`` must be attached here (not
+        after) so a fast worker can never complete the request first."""
+        if kind != "search" and kind not in self.extra_handlers:
+            raise ValueError(
+                f"unknown request kind {kind!r}; registered extra kinds: "
+                f"{sorted(self.extra_handlers)}"
+            )
+        return self._enqueue(payload, kind, deadline_s=deadline_s,
+                             on_done=on_done)
 
     def submit_upsert(self, payload) -> Request:
         """Enqueue an upsert (payload: vectors, or ``(vectors, ids)``).
@@ -134,7 +231,9 @@ class BatchingEngine:
             )
         return self._enqueue(payload, kind)
 
-    def _enqueue(self, payload, kind: str) -> Request:
+    def _enqueue(self, payload, kind: str,
+                 deadline_s: Optional[float] = None,
+                 on_done=None) -> Request:
         with self._submit_lock:
             if self._stop.is_set():
                 # Raise at the call site instead of enqueueing a request
@@ -143,10 +242,32 @@ class BatchingEngine:
                 raise RuntimeError(
                     "BatchingEngine is closed; submit() rejected"
                 )
+            now = time.time()
             req = Request(payload=payload, id=next(self._ids), kind=kind,
-                          enqueued_at=time.time())
+                          enqueued_at=now,
+                          deadline=(now + deadline_s
+                                    if deadline_s is not None else None),
+                          on_done=on_done)
             self._q.put(req)
         return req
+
+    def _drop_dead(self, req: Request, now: Optional[float] = None) -> bool:
+        """Drop a cancelled / deadline-expired search-kind request (its
+        wait() fires with the drop error). Returns True when dropped.
+        Writes are durable once enqueued and never dropped."""
+        if req.kind in _WRITE_KINDS:
+            return False
+        if req.cancelled:
+            self.stats["cancelled_skips"] += 1
+            req._finish(error=Cancelled(f"request {req.id} cancelled"))
+            return True
+        if req.deadline is not None and (now or time.time()) > req.deadline:
+            self.stats["deadline_drops"] += 1
+            req._finish(error=DeadlineExceeded(
+                f"request {req.id} missed its deadline before a worker "
+                f"took it"))
+            return True
+        return False
 
     def _take_batch(self) -> list[Request]:
         # Block until traffic arrives — an idle worker parks on the queue
@@ -154,14 +275,17 @@ class BatchingEngine:
         # sentinel. Batches are kind-homogeneous: a batch ends at a
         # search/write boundary and the boundary request parks in _pending
         # (FIFO preserved — a search enqueued after a write runs after it).
-        if self._pending:
-            first = self._pending.popleft()
-        else:
-            first = self._q.get()
-        if first is _SHUTDOWN:
-            return []
+        while True:  # loop past requests that died while queued
+            if self._pending:
+                first = self._pending.popleft()
+            else:
+                first = self._q.get()
+            if first is _SHUTDOWN:
+                return []
+            if not self._drop_dead(first):
+                break
         batch = [first]
-        if first.kind != "search":
+        if first.kind in _WRITE_KINDS:
             # Writes batch without a deadline: take whatever writes are
             # already queued (arrival order) and apply them immediately.
             while True:
@@ -169,7 +293,7 @@ class BatchingEngine:
                     item = self._q.get_nowait()
                 except queue.Empty:
                     break
-                if item is _SHUTDOWN or item.kind == "search":
+                if item is _SHUTDOWN or item.kind not in _WRITE_KINDS:
                     self._pending.append(item)
                     break
                 batch.append(item)
@@ -196,8 +320,11 @@ class BatchingEngine:
                 # close() raced the fill: serve what we have; the worker
                 # loop re-checks _stop (already set) and exits after.
                 break
-            if item.kind != "search":
-                # a write arrived: close this batch, apply the write next
+            if self._drop_dead(item):
+                continue  # expired while queued: its slot goes to a live one
+            if item.kind != first.kind:
+                # kind boundary (a write, or a different search handler):
+                # close this batch, the boundary request opens the next one
                 self._pending.append(item)
                 break
             batch.append(item)
@@ -221,7 +348,8 @@ class BatchingEngine:
             return
         with self._q.mutex:
             snapshot = [r.payload for r in self._q.queue
-                        if r is not _SHUTDOWN and r.kind == "search"]
+                        if r is not _SHUTDOWN and r.kind not in _WRITE_KINDS
+                        and not r.cancelled]
         if not snapshot:
             return
         try:
@@ -268,13 +396,11 @@ class BatchingEngine:
             err = e
         for i, r in enumerate(batch):
             if err is not None:
-                r.error = err
-            elif results is not None:
-                if isinstance(results[i], BaseException):
-                    r.error = results[i]
-                else:
-                    r.result = results[i]
-            r._event.set()
+                r._finish(error=err)
+            elif results is not None and isinstance(results[i], BaseException):
+                r._finish(error=results[i])
+            else:
+                r._finish(result=results[i] if results is not None else None)
         self.stats["writes"] += len(batch)
         self.stats["write_batches"] += 1
 
@@ -287,31 +413,38 @@ class BatchingEngine:
             batch = self._take_batch()
             if not batch:
                 continue
-            if batch[0].kind != "search":
+            if batch[0].kind in _WRITE_KINDS:
                 self._apply_writes(batch)
+                continue
+            # last-moment skip: a waiter may have timed out / a hedge twin
+            # won between batch assembly and here — don't burn a handler
+            # call on a batch nobody is waiting for
+            batch = [r for r in batch if not self._drop_dead(r)]
+            if not batch:
                 continue
             if self._prefetch_q is not None:
                 self._kick_prefetch()
             n = len(batch)
+            handler = (self.handler if batch[0].kind == "search"
+                       else self.extra_handlers[batch[0].kind])
             pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
             rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
             stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
             try:
-                results = self.handler(stacked, n)
+                results = handler(stacked, n)
             except BaseException as e:  # noqa: BLE001 — a handler failure
                 # fails this batch (each wait() re-raises), never the worker:
                 # a dead worker would silently hang every queued and future
                 # request until TimeoutError
                 for r in batch:
-                    r.error = e
-                    r._event.set()
+                    r._finish(error=e)
                 self.stats["batches"] += 1
                 self.stats["requests"] += n
                 self.stats["occupancy_sum"] += n / self.batch_size
                 continue
             for i, r in enumerate(batch):
-                r.result = jax.tree.map(lambda a: np.asarray(a)[i], results)
-                r._event.set()
+                r._finish(result=jax.tree.map(
+                    lambda a: np.asarray(a)[i], results))
             self.stats["batches"] += 1
             self.stats["requests"] += n
             self.stats["occupancy_sum"] += n / self.batch_size

@@ -68,6 +68,7 @@ def search_two_stage(
     beam,
     max_children: tuple,
     rerank_width: Optional[int] = 128,
+    exact_rerank: bool = True,
     leaf_radius_filter: bool = False,
     kernel: Optional[kops.KernelConfig] = None,
     prefetch: bool = True,
@@ -83,6 +84,11 @@ def search_two_stage(
         (clamped to at least ``k`` — the knob bounds fetch traffic, never
         the result count). None / <= 0 means ∞ (rerank every candidate —
         bit-identical to ``search_beam``).
+      exact_rerank: when False, skip stage 2 entirely: rank on the
+        quantised-scan distances alone and never touch the exact payload
+        (zero fetch traffic — the graceful-degradation serving mode;
+        reported distances carry the quantisation error). Ignored on an
+        fp32 backend and in ∞ mode — neither has a scan tier to stop at.
       prefetch: overlap stage 1 with warming the granule cache for the
         candidate rows.
       slot_valid: optional bool[n_0] tombstone mask over leaf slots
@@ -132,6 +138,23 @@ def search_two_stage(
     # Never let the rerank pool shrink below k: a small rerank_width is a
     # fetch-traffic knob, not permission to return fewer than k neighbours.
     R = min(max(int(rerank_width), k), W)
+
+    if not exact_rerank:
+        # Degraded scan-only mode: the quantised scan's top-k IS the result.
+        # No prefetch, no granule fetch, no stage 2 — the exact payload is
+        # never touched. Distances are code-space (scale/2-ish error).
+        k_eff = min(k, W)
+        d_scan, slot = kops.scan_quantized(
+            Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
+            k=k_eff, block=store.block, slot_valid=slot_valid,
+            code_format=store.code_format, config=kernel,
+        )
+        slots = jnp.take_along_axis(cand_idx, slot, axis=1)
+        res = assemble_result(
+            index, d_scan, slots, cand_ok, k=k, leaf_radius=radii[0],
+            leaf_radius_filter=leaf_radius_filter,
+        )
+        return jax.tree.map(lambda a: a[0], res) if squeeze else res
 
     prefetcher = None
     if prefetch and store.exact.on_disk:

@@ -79,6 +79,52 @@ def test_record_bumps_generation(tuner_cache):
     assert autotune.generation() == g0 + 1
 
 
+def test_concurrent_record_never_tears_the_cache_file(tuner_cache):
+    """Parallel writers (e.g. two benchmark processes tuning at once) must
+    never leave a torn/invalid JSON on disk: every save goes through its own
+    unique temp file + atomic rename, last writer wins."""
+    import threading
+
+    stop = threading.Event()
+    bad: list = []
+
+    def reader():
+        while not stop.is_set():
+            if not os.path.exists(tuner_cache):
+                continue
+            try:
+                blob = json.load(open(tuner_cache))
+                assert blob["version"] == autotune.CACHE_VERSION
+            except (ValueError, AssertionError) as e:
+                bad.append(repr(e))
+                return
+
+    def writer(base):
+        for i in range(25):
+            # distinct form per write => distinct cache key (shape would
+            # bucket to a power of two and collapse keys)
+            autotune.record(op="swap", form=f"f{base + i}", dtype="float32",
+                            shape=(96,), knobs=dict(bg=32), us=float(i))
+
+    rt = threading.Thread(target=reader)
+    writers = [threading.Thread(target=writer, args=(1000 * w,))
+               for w in range(4)]
+    rt.start()
+    for t in writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not bad, f"reader saw a torn cache file: {bad}"
+    # no temp-file debris left behind after all writers finished
+    leftovers = [f for f in os.listdir(os.path.dirname(tuner_cache))
+                 if f.endswith(".tmp")]
+    assert not leftovers, leftovers
+    blob = json.load(open(tuner_cache))
+    assert len(blob["entries"]) == 100  # every writer's keys landed in RAM
+
+
 # ---------------------------------------------------------------------------
 # Shape bucketing
 # ---------------------------------------------------------------------------

@@ -1,0 +1,217 @@
+"""BatchingEngine robustness: shutdown races, deadlines, cancellation,
+extra handler kinds, completion callbacks (DESIGN.md §3.10)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import BatchingEngine, Cancelled, DeadlineExceeded
+
+
+def _double(batch, n_valid):
+    return batch * 2.0
+
+
+def _pad():
+    return np.zeros(3, np.float32)
+
+
+def _row(i):
+    return np.full(3, float(i), np.float32)
+
+
+# --------------------------- shutdown races ---------------------------------
+
+
+def test_concurrent_submit_vs_close_never_strands_a_request():
+    """Every submit() either raises at the call site or its request
+    completes — no request may hang forever because close() raced it."""
+    for trial in range(10):
+        eng = BatchingEngine(_double, batch_size=4, max_wait_ms=1.0,
+                             pad_payload=_pad())
+        accepted: list = []
+        rejected = [0]
+        barrier = threading.Barrier(5)
+
+        def submitter(base):
+            barrier.wait()
+            for i in range(20):
+                try:
+                    accepted.append(eng.submit(_row(base + i)))
+                except RuntimeError:
+                    rejected[0] += 1
+
+        def closer():
+            barrier.wait()
+            time.sleep(0.002 * (trial % 4))
+            eng.close()
+
+        threads = [threading.Thread(target=submitter, args=(100 * t,))
+                   for t in range(4)] + [threading.Thread(target=closer)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # accepted requests were enqueued before the shutdown sentinel: the
+        # worker drains them all before exiting — a short wait must succeed
+        for req in accepted:
+            out = req.wait(timeout=10)
+            np.testing.assert_allclose(out, req.payload * 2.0)
+        assert len(accepted) + rejected[0] == 80
+
+
+def test_mid_fill_shutdown_still_serves_partial_batch():
+    """close() racing a batch fill: the sentinel lands mid-fill, and the
+    partial batch must still be served (not dropped)."""
+    release = threading.Event()
+
+    def slow_once(batch, n_valid):
+        release.wait(5)
+        return batch * 2.0
+
+    eng = BatchingEngine(slow_once, batch_size=8, max_wait_ms=200,
+                         pad_payload=_pad())
+    # first request occupies the worker once it departs; keep the fill open
+    # long (max_wait 200ms) so close()'s sentinel arrives mid-fill
+    reqs = [eng.submit(_row(i)) for i in range(3)]
+    time.sleep(0.03)  # the worker is inside _take_batch's fill loop
+
+    closer = threading.Thread(target=eng.close)
+    closer.start()
+    time.sleep(0.01)
+    release.set()
+    closer.join(timeout=10)
+    for i, req in enumerate(reqs):
+        np.testing.assert_allclose(req.wait(timeout=10), _row(i) * 2.0)
+    assert eng.stats["requests"] == 3
+
+
+# --------------------------- deadlines + cancellation ------------------------
+
+
+def test_deadline_expired_requests_drop_with_deadline_exceeded():
+    gate = threading.Event()
+
+    def gated(batch, n_valid):
+        gate.wait(10)
+        return batch * 2.0
+
+    eng = BatchingEngine(gated, batch_size=2, max_wait_ms=0.1,
+                         pad_payload=_pad())
+    blocker = eng.submit(_row(0))  # occupies the worker inside gated()
+    time.sleep(0.02)
+    doomed = eng.submit(_row(1), deadline_s=0.01)  # expires while queued
+    time.sleep(0.05)
+    gate.set()
+    with pytest.raises(DeadlineExceeded):
+        doomed.wait(timeout=10)
+    np.testing.assert_allclose(blocker.wait(timeout=10), _row(0) * 2.0)
+    eng.close()
+    assert eng.stats["deadline_drops"] == 1
+    # the dropped request never occupied a batch slot
+    assert eng.stats["requests"] == 1
+
+
+def test_wait_timeout_marks_cancellable_and_worker_skips():
+    gate = threading.Event()
+    served = []
+
+    def gated(batch, n_valid):
+        gate.wait(10)
+        served.append(n_valid)
+        return batch * 2.0
+
+    eng = BatchingEngine(gated, batch_size=2, max_wait_ms=0.1,
+                         pad_payload=_pad())
+    blocker = eng.submit(_row(0))
+    time.sleep(0.02)
+    abandoned = eng.submit(_row(1))
+    with pytest.raises(TimeoutError):
+        abandoned.wait(timeout=0.01)  # waiter gives up -> marks cancelled
+    assert abandoned.cancelled
+    gate.set()
+    np.testing.assert_allclose(blocker.wait(timeout=10), _row(0) * 2.0)
+    eng.close()
+    # the abandoned request was skipped at batch assembly, never served
+    assert eng.stats["cancelled_skips"] == 1
+    assert sum(served) == 1
+    with pytest.raises(Cancelled):
+        abandoned.wait(timeout=0)
+
+
+def test_writes_are_never_deadline_dropped():
+    applied = []
+
+    def write_handler(ops):
+        applied.extend(k for k, _ in ops)
+        return [None] * len(ops)
+
+    gate = threading.Event()
+
+    def gated(batch, n_valid):
+        gate.wait(10)
+        return batch * 2.0
+
+    eng = BatchingEngine(gated, batch_size=2, max_wait_ms=0.1,
+                         pad_payload=_pad(), write_handler=write_handler)
+    blocker = eng.submit(_row(0))
+    time.sleep(0.02)
+    w = eng.submit_upsert(_row(1))
+    gate.set()
+    blocker.wait(timeout=10)
+    w.wait(timeout=10)
+    eng.close()
+    assert applied == ["upsert"]
+    assert eng.stats["deadline_drops"] == 0
+
+
+# --------------------------- occupancy + callbacks ---------------------------
+
+
+def test_mean_occupancy_zero_batches_is_zero():
+    eng = BatchingEngine(_double, batch_size=4, max_wait_ms=1.0,
+                         pad_payload=_pad())
+    assert eng.mean_occupancy == 0.0  # no division by zero before traffic
+    eng.close()
+    assert eng.mean_occupancy == 0.0
+
+
+def test_on_done_fires_exactly_once_for_results_and_drops():
+    fired = []
+    eng = BatchingEngine(_double, batch_size=2, max_wait_ms=0.5,
+                         pad_payload=_pad())
+    ok = eng.submit(_row(1), on_done=lambda r: fired.append(("ok", r.id)))
+    ok.wait(timeout=10)
+    dead = eng.submit(_row(2), on_done=lambda r: fired.append(("dead", r.id)))
+    dead.cancel()
+    eng.submit(_row(3)).wait(timeout=10)  # flushes the cancelled one through
+    eng.close()
+    kinds = [k for k, _ in fired]
+    assert kinds.count("ok") == 1
+    assert kinds.count("dead") == 1
+
+
+def test_extra_handler_kinds_batch_homogeneously():
+    def triple(batch, n_valid):
+        return batch * 3.0
+
+    eng = BatchingEngine(_double, batch_size=4, max_wait_ms=5.0,
+                         pad_payload=_pad(),
+                         extra_handlers={"degraded": triple})
+    reqs = [eng.submit(_row(i), kind="degraded" if i % 2 else "search")
+            for i in range(8)]
+    outs = [r.wait(timeout=10) for r in reqs]
+    eng.close()
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, _row(i) * (3.0 if i % 2 else 2.0))
+
+
+def test_extra_handlers_validate_kinds():
+    with pytest.raises(ValueError, match="shadow"):
+        BatchingEngine(_double, batch_size=2, extra_handlers={"search": _double})
+    eng = BatchingEngine(_double, batch_size=2, pad_payload=_pad())
+    with pytest.raises(ValueError, match="unknown request kind"):
+        eng.submit(_row(0), kind="degraded")
+    eng.close()
