@@ -10,6 +10,12 @@ records, into ``BENCH_serve.json``:
   * caller-visible errors (the acceptance bar: ZERO, faulted or not),
   * router activity: retries, hedges, degraded serves, health events.
 
+A third ``telemetry`` scenario (DESIGN.md §3.11) serves a store-backed
+``two_stage`` tier with 1-in-4 request tracing and records the full
+``repro.obs`` metrics snapshot, a p99 exemplar span tree, and the measured
+instrumentation overhead (``--smoke`` asserts non-zero engine/router/store
+series, a complete exemplar trace, and overhead ratio >= 0.95).
+
 Scenarios: ``fault_free``, and ``wedged`` — a deterministic ``FaultPlan``
 wedges 1 of 4 replicas mid-run (its batch handler stalls per dispatch).
 The router must route around it: hedges rescue the stalled requests,
@@ -38,6 +44,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+from repro.obs import names as mnames
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.query import Query, degraded
@@ -172,6 +180,145 @@ def _await_recovery(router, test, *, timeout_s: float = 30.0):
     return router.event_counts().get("readmit", 0) > 0
 
 
+def _series_total(snap: dict, name: str) -> float:
+    """Sum a metric's value (counters/gauges) or observation count
+    (histograms) across every label set in the snapshot."""
+    entry = snap.get(name)
+    if entry is None:
+        return 0.0
+    if entry["kind"] == "histogram":
+        return float(sum(row["hist"]["count"] for row in entry["series"]))
+    return float(sum(row["value"] for row in entry["series"]))
+
+
+def _closed_loop_seq(router, test, *, n: int, seed: int) -> float:
+    """Sequential closed-loop throughput (one caller pinned) — the
+    low-variance probe the overhead guard compares on/off with."""
+    rng = np.random.default_rng(seed)
+    order = rng.integers(0, len(test), n)
+    t0 = time.perf_counter()
+    for i in order:
+        router.search(test[i])
+    return n / (time.perf_counter() - t0)
+
+
+def telemetry(smoke: bool = False, seed: int = 0):
+    """Telemetry scenario (DESIGN.md §3.11): a store-backed two_stage tier
+    behind the router with deterministic 1-in-4 request tracing. Records
+    the full ``obs.snapshot()``, a p99 exemplar trace, and the measured
+    instrumentation overhead (same tier, registry disabled vs enabled,
+    best-of-k alternating trials) into the bench payload. The smoke
+    assertions here are the CI contract: non-zero engine/router/store
+    series, a valid exemplar span tree, bounded overhead.
+    """
+    # Reset BEFORE building the tier: engines/routers pre-bind their series
+    # handles at construction, and a reset would orphan existing handles.
+    obs.reset()
+    if smoke:
+        n, gl, n_queries, n_probe, trials = 1500, 64, 160, 96, 3
+    else:
+        n, gl, n_queries, n_probe, trials = 6000, 256, 400, 200, 3
+    data = make_dataset("dense_embed", n=n + 64, seed=seed)
+    train, test = data[:n], data[n:]
+    idx = PDASCIndex.build(train, gl=gl, distance="euclidean",
+                           radius_quantile=0.35, store="int8",
+                           store_block=128)
+    idx.release_dense_payload()  # serve from the tiered store, not the seed
+    query = Query(k=10, execution="two_stage", beam=32, rerank_width=64,
+                  with_stats=False)
+    rs = ReplicaSet(idx, query, n_replicas=2, batch_size=8, max_wait_ms=1.0)
+    router = Router(rs, RouterConfig(deadline_s=30.0, seed=seed,
+                                     trace_every=4))
+    try:
+        warm = [r.submit(test[0]) for r in rs.replicas]
+        for req in warm:
+            req.wait(timeout=300)
+
+        # Overhead guard: alternate disabled/enabled trials over the same
+        # tier and compare best-of throughput. Tracing is suspended for
+        # both legs (its per-sampled-request block_until_ready is a
+        # *measurement* cost the guard is not about); the enabled leg pays
+        # every counter/gauge/histogram update on the full request path.
+        every_n, router._sampler.every_n = router._sampler.every_n, 0
+        qps_off, qps_on = [], []
+        for t in range(trials):
+            obs.set_enabled(False)
+            qps_off.append(_closed_loop_seq(router, test, n=n_probe,
+                                            seed=seed + 10 + t))
+            obs.set_enabled(True)
+            qps_on.append(_closed_loop_seq(router, test, n=n_probe,
+                                           seed=seed + 10 + t))
+        router._sampler.every_n = every_n
+        overhead = dict(
+            qps_uninstrumented=round(max(qps_off), 1),
+            qps_instrumented=round(max(qps_on), 1),
+            ratio=round(max(qps_on) / max(qps_off), 3),
+            trials=trials, probe_queries=n_probe,
+        )
+
+        # Traced traffic: every 4th request records the full span tree
+        # (queue -> dispatch -> batch -> scan -> rerank -> granule fetch).
+        rng = np.random.default_rng(seed + 1)
+        lats = []
+        for i in rng.integers(0, len(test), n_queries):
+            res = router.search(test[i])
+            lats.append(res.latency_s)
+        p99_s = float(np.percentile(np.array(lats), 99))
+        exemplar = router.traces.exemplar(p99_s)
+
+        snap = obs.snapshot()
+        subsystems = sorted({mnames.subsystem(k) for k in snap})
+        n_series = sum(len(v["series"]) for v in snap.values())
+        row = dict(
+            scenario="telemetry",
+            config=dict(dataset="dense_embed", n=n, gl=gl,
+                        n_queries=n_queries, store="int8",
+                        execution="two_stage", n_replicas=2, trace_every=4),
+            p99_ms=round(p99_s * 1e3, 2),
+            n_series=n_series,
+            subsystems=subsystems,
+            overhead=overhead,
+            key_series={name: _series_total(snap, name) for name in (
+                mnames.ENGINE_REQUESTS, mnames.ENGINE_BATCHES,
+                mnames.ROUTER_REQUESTS, mnames.ROUTER_LATENCY,
+                mnames.PLAN_EXECUTIONS, mnames.STORE_FETCHES,
+                mnames.STORE_FETCH_BYTES, mnames.TRACE_FINISHED,
+            )},
+            exemplar_trace=(exemplar.to_dict() if exemplar else None),
+        )
+        print(f"[serve] telemetry: {n_series} series across "
+              f"{subsystems} p99={row['p99_ms']}ms "
+              f"overhead_ratio={overhead['ratio']}", flush=True)
+
+        # -- the CI contract (smoke and full) ------------------------------
+        for name in (mnames.ENGINE_REQUESTS, mnames.ROUTER_REQUESTS,
+                     mnames.STORE_FETCHES, mnames.PLAN_EXECUTIONS):
+            assert _series_total(snap, name) > 0, (
+                f"telemetry: series {name} is zero/absent after "
+                f"{n_queries} two_stage queries"
+            )
+        assert n_series >= 25 and len(subsystems) >= 5, (
+            f"telemetry: expected >= 25 series over >= 5 subsystems, got "
+            f"{n_series} over {subsystems}"
+        )
+        assert exemplar is not None, "telemetry: no trace was retained"
+        span_names = {s.name for s in exemplar.root.walk()}
+        for expect in ("attempt", "queue_wait", "execute", "plan", "scan",
+                       "rerank", "granule_fetch"):
+            assert expect in span_names, (
+                f"telemetry: exemplar trace is missing a {expect!r} span "
+                f"(got {sorted(span_names)})"
+            )
+        assert overhead["ratio"] >= 0.95, (
+            f"telemetry: instrumented throughput is "
+            f"{overhead['ratio']:.3f}x uninstrumented (< 0.95x bound): "
+            f"{overhead}"
+        )
+        return row
+    finally:
+        router.close(close_replicas=True)
+
+
 def run(smoke: bool = False, seed: int = 0):
     idx, test, cfg = _build(smoke, seed)
     query = Query(k=10, execution="beam", beam=32, with_stats=False)
@@ -247,9 +394,10 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     rows = run(smoke=args.smoke, seed=args.seed)
+    telemetry_row = telemetry(smoke=args.smoke, seed=args.seed)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump(rows + [telemetry_row], f, indent=1)
     if not args.smoke:
         payload = dict(
             bench="replicated_serving_under_faults",
@@ -258,6 +406,7 @@ def main(argv=None):
                 "health ejection + half-open readmission, zero "
                 "caller-visible errors",
             rows=rows,
+            telemetry=telemetry_row,
         )
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=1)

@@ -69,6 +69,9 @@ class PDASCArchConfig:
     router_degrade_at: float = 0.75
     router_eject_failures: int = 3
     router_probe_cooldown_s: float = 0.2
+    # Telemetry (DESIGN.md §3.11): trace 1 request in N through the router
+    # (deterministic by request seq; 0 = off).
+    router_trace_every: int = 0
 
     def kernel_config(self) -> KernelConfig:
         # Built field-wise from KernelConfig's own field list so a knob added
@@ -108,6 +111,7 @@ class PDASCArchConfig:
             degrade_at=self.router_degrade_at,
             eject_failures=self.router_eject_failures,
             probe_cooldown_s=self.router_probe_cooldown_s,
+            trace_every=self.router_trace_every,
         )
         base.update(overrides)
         return RouterConfig(**base)

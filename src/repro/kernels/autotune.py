@@ -42,12 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import kmedoids as _kmk
 from repro.kernels import pairwise as _pw
 from repro.kernels import quantized as _qk
 from repro.kernels import ref as _ref
 from repro.kernels import tiling
 from repro.kernels import topk as _tk
+from repro.obs import names as mnames
 
 CACHE_VERSION = 1
 _ENV_PATH = "REPRO_TUNE_CACHE"
@@ -167,6 +169,8 @@ def lookup(*, op: str, form: str, dtype: str, shape,
     """Cached winner knobs for a key, or None. Host-side dict read — safe to
     call at ops dispatch time, including under a jit trace."""
     entry = _entries().get(cache_key(op, form, dtype, shape, backend))
+    obs.counter(mnames.AUTOTUNE_HITS if entry else mnames.AUTOTUNE_MISSES,
+                op=op).inc()
     return dict(entry["knobs"]) if entry else None
 
 
@@ -180,6 +184,7 @@ def record(*, op: str, form: str, dtype: str, shape, knobs: dict, us: float,
         )
         _save()
         _state["gen"] += 1
+    obs.counter(mnames.AUTOTUNE_RETUNES, op=op).inc()
 
 
 # ---------------------------------------------------------------------------

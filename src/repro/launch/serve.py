@@ -33,6 +33,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.index import PDASCIndex
 from repro.data import make_dataset
 from repro.kernels.ops import KernelConfig, knn
@@ -84,6 +85,15 @@ def _parse():
                         "handler dispatches)")
     p.add_argument("--deadline-ms", type=float, default=2000.0,
                    help="router per-request deadline (replicated path)")
+    # Telemetry (DESIGN.md §3.11).
+    p.add_argument("--metrics-dump", default=None, metavar="PATH",
+                   help="periodically dump the repro.obs metrics snapshot "
+                        "to PATH ('-' = stdout at exit; .prom extension = "
+                        "Prometheus text, anything else JSON)")
+    p.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                   help="trace 1 request in N (deterministic by request "
+                        "seq; 0 = off) and print the slowest sampled "
+                        "trace as a text flamegraph at exit")
     # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
     kd = KernelConfig()
     p.add_argument("--bm", type=int, default=kd.bm)
@@ -111,7 +121,8 @@ def _serve_replicated(args, idx, kernel, train, test):
                           tombstone_ratio=args.compact_tombstone_ratio),
     )
     router = Router(replica_set, RouterConfig(
-        deadline_s=args.deadline_ms / 1e3, seed=args.seed))
+        deadline_s=args.deadline_ms / 1e3, seed=args.seed,
+        trace_every=args.trace_sample))
     print(f"[serve] replicated tier: {args.replicas} replicas"
           + (f", faults={args.faults}" if plan else ", fault-free"))
     router.search(test[0])  # warmup compile (every replica shares the jits)
@@ -151,10 +162,22 @@ def _serve_replicated(args, idx, kernel, train, test):
           f"p99={np.percentile(lat_ms, 99):.1f}ms "
           f"retries={retries} hedges={hedges} degraded={degraded_n}")
     print(f"[serve] health events: {counts or '{}'}")
+    if args.trace_sample:
+        ex = router.traces.exemplar()
+        if ex is not None:
+            print(f"[serve] slowest sampled trace "
+                  f"({len(router.traces)} retained):")
+            print(ex.render())
 
 
 def main():
     args = _parse()
+    # Periodic metrics dumper (DESIGN.md §3.11): rewrites PATH whole every
+    # few seconds while serving; closed (with a final snapshot) at exit.
+    dumper = None
+    if args.metrics_dump:
+        dumper = obs.MetricsDumper(obs.registry(), args.metrics_dump,
+                                   period_s=5.0)
     data = make_dataset(args.dataset, n=args.n, seed=args.seed)
     n_train = int(args.n * 0.95)
     train, test = data[:n_train], data[n_train:]
@@ -176,7 +199,11 @@ def main():
                           row_chunk=args.row_chunk)
 
     if args.replicas > 1:
-        _serve_replicated(args, idx, kernel, train, test)
+        try:
+            _serve_replicated(args, idx, kernel, train, test)
+        finally:
+            if dumper is not None:
+                dumper.close()
         return
 
     handle = None
@@ -225,6 +252,11 @@ def main():
     # warmup compile
     engine.submit(test[0]).wait(timeout=120)
 
+    # Deterministic 1-in-N tracing on the single-engine path: the Trace is
+    # created at submit time (there is no router in front), the engine
+    # records queue/batch/execute spans under its root.
+    sampler = obs.TraceSampler(args.trace_sample)
+
     rng = np.random.default_rng(args.seed)
     q_rows = rng.integers(0, len(test), args.queries)
     # writes interleave only with the head of the stream: the tail quarter
@@ -255,11 +287,14 @@ def main():
                     0, 0.01, train.shape[1]).astype(np.float32)
                 req_w = engine.submit_upsert(vec)
                 upserted_ids.extend(int(x) for x in req_w.wait(timeout=60))
+        tr = sampler.sample("request", j, kind="search")
         t0 = time.time()
-        req = engine.submit(test[i])
+        req = engine.submit(test[i], span=tr.root if tr else None)
         _, ids = req.wait(timeout=60)
         lat.append(time.time() - t0)
         results.append(ids)
+        if tr is not None:
+            tr.finish(outcome="ok")
     engine.close()
 
     # recall vs exact — over the *live* post-churn point set when churning
@@ -290,6 +325,14 @@ def main():
                  f"epoch_swaps={handle.swaps} "
                  f"epoch={handle.current.epoch}")
     print(line)
+    if args.trace_sample:
+        ex = sampler.buffer.exemplar()
+        if ex is not None:
+            print(f"[serve] slowest sampled trace "
+                  f"({len(sampler.buffer)} retained):")
+            print(ex.render())
+    if dumper is not None:
+        dumper.close()
 
 
 if __name__ == "__main__":

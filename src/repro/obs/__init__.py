@@ -1,0 +1,78 @@
+"""repro.obs — process-wide telemetry: metrics registry + request tracing.
+
+See DESIGN.md §3.11. Quick taste::
+
+    from repro import obs
+
+    obs.counter(obs.names.ENGINE_REQUESTS, engine="r0").inc()
+    snap = obs.snapshot()            # plain nested dict
+    print(obs.to_prometheus(snap))   # Prometheus text exposition
+
+    sampler = obs.TraceSampler(every_n=8)
+    t = sampler.sample("request", seq=16)   # deterministic 1-in-N
+    ...
+    t.finish(); print(t.render())           # text flamegraph
+
+Only stdlib is imported here — every layer (including kernels/autotune,
+which loads at import time) can depend on obs without cycles.
+"""
+
+from repro.obs import names
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsDumper,
+    MetricsRegistry,
+    counter,
+    gauge,
+    histogram,
+    registry,
+    reset,
+    set_enabled,
+    snapshot,
+    timed,
+    to_json,
+    to_prometheus,
+)
+from repro.obs.trace import (
+    Span,
+    Trace,
+    TraceBuffer,
+    TraceSampler,
+    activate,
+    active_spans,
+    is_tracing,
+    span,
+)
+
+__all__ = [
+    "names",
+    # metrics
+    "DEFAULT_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsDumper",
+    "MetricsRegistry",
+    "counter",
+    "gauge",
+    "histogram",
+    "registry",
+    "reset",
+    "set_enabled",
+    "snapshot",
+    "timed",
+    "to_json",
+    "to_prometheus",
+    # tracing
+    "Span",
+    "Trace",
+    "TraceBuffer",
+    "TraceSampler",
+    "activate",
+    "active_spans",
+    "is_tracing",
+    "span",
+]

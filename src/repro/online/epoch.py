@@ -34,7 +34,11 @@ across the fleet.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Optional
+
+from repro import obs
+from repro.obs import names as mnames
 
 
 class WriteLog:
@@ -136,11 +140,15 @@ class EpochHandle:
                         raise ValueError(f"unknown write kind {kind!r}")
                 except Exception as e:  # per-op isolation
                     out.append(e)
+                    obs.counter(mnames.ONLINE_WRITE_ERRORS, op=kind).inc()
+                else:
+                    obs.counter(mnames.ONLINE_WRITES, op=kind).inc()
             if idx.needs_compaction(
                 delta_fill=self.delta_fill,
                 tombstone_ratio=self.tombstone_ratio,
             ):
                 idx = self._swap(idx)
+            self._observe_tiers(idx)
             return out
 
     def maybe_compact(self) -> bool:
@@ -156,10 +164,23 @@ class EpochHandle:
             return False
 
     def _swap(self, idx):
+        t0 = time.perf_counter()
         new = idx.compact(scope=self.scope, **self.compact_kwargs)
         self._current = new  # the RCU publish: one reference assignment
         self.swaps += 1
+        obs.counter(mnames.ONLINE_EPOCH_SWAPS).inc()
+        obs.histogram(mnames.ONLINE_COMPACTION_TIME).observe(
+            time.perf_counter() - t0)
         return new
+
+    def _observe_tiers(self, idx) -> None:
+        """Gauge the online tiers after a write run (delta fill ratio,
+        tombstoned slots) — the feedback the compaction policy acts on."""
+        if idx.delta is not None and idx.delta.capacity:
+            obs.gauge(mnames.ONLINE_DELTA_FILL).set(
+                idx.delta.n_active / idx.delta.capacity)
+        if idx.tombstones is not None:
+            obs.gauge(mnames.ONLINE_TOMBSTONES).set(idx.tombstones.count)
 
 
 def _rows(vectors):

@@ -53,10 +53,12 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import distances as dist_lib
 from repro.core import nsa
 from repro.core.distances import BIG
 from repro.kernels import autotune as _autotune
+from repro.obs import names as mnames
 from repro.query.spec import Query, validate_query_batch
 
 Array = jax.Array
@@ -86,6 +88,7 @@ def reset_plan_stats() -> None:
 
 def record_cache_hit(pipeline: str) -> None:
     _STATS[pipeline]["cache_hits"] += 1
+    obs.counter(mnames.PLAN_CACHE_HITS, pipeline=pipeline).inc()
 
 
 # ---------------------------------------------------------------------------
@@ -240,12 +243,15 @@ class SearchPlan:
             # lands here: it publishes a new index object — RCU — and this
             # plan keeps serving its still-valid old epoch.)
             _STATS[self.pipeline][STALENESS_REPLAN] += 1
+            obs.counter(mnames.PLAN_REPLANS, pipeline=self.pipeline).inc()
             return self.index.plan(self.query)(queries)
         _STATS[self.pipeline]["executions"] += 1
+        obs.counter(mnames.PLAN_EXECUTIONS, pipeline=self.pipeline).inc()
         validate_query_batch(
             queries, self.index.distance, expect_dim=self.index._dim()
         )
-        return self._execute(queries)
+        with obs.span("plan", pipeline=self.pipeline):
+            return self._execute(queries)
 
     def _execute(self, queries) -> nsa.SearchResult:
         idx = self.index
@@ -294,7 +300,8 @@ class SearchPlan:
             )
 
         if self.caps.delta_dirty:
-            res = self._merge_delta_leg(Qb, res)
+            with obs.span("delta_leg", n_active=int(idx.delta.n_active)):
+                res = self._merge_delta_leg(Qb, res)
         if squeeze:
             res = jax.tree.map(lambda a: a[0], res)
         return res
@@ -325,8 +332,14 @@ class SearchPlan:
 
     # -- debuggability --------------------------------------------------------
 
-    def explain(self) -> str:
-        """Human-readable plan: pipeline, kernel lowering, online legs."""
+    def describe(self) -> dict:
+        """Structured counterpart of :meth:`explain` — a plain dict so
+        exporters/tests stop parsing the human string. Keys: ``pipeline``,
+        ``effective_pipeline`` (the ∞-rerank / scan-only refinement),
+        ``lowering``, ``query`` (the resolved execution-relevant fields),
+        ``capabilities`` (the fingerprint this plan bound against),
+        ``online_legs`` (tombstone mask / delta leg booleans + lowering
+        text) and ``kernel`` (the stamped kernel config, or None)."""
         q = self.query
         effective = self.pipeline
         if self.pipeline == "two_stage" and (
@@ -336,24 +349,53 @@ class SearchPlan:
             effective = "two_stage_inf"
         elif self.pipeline == "two_stage" and not q.exact_rerank:
             effective = "two_stage_scan"
+        kernel = self.kernel
+        return dict(
+            pipeline=self.pipeline,
+            effective_pipeline=effective,
+            lowering=_LOWERING[effective],
+            query=dict(
+                k=q.k, radius=self.radius, beam=q.beam,
+                rerank_width=q.rerank_width, exact_rerank=q.exact_rerank,
+                leaf_radius_filter=q.leaf_radius_filter,
+                execution=q.execution,
+            ),
+            capabilities=self.caps._asdict(),
+            online_legs=dict(
+                tombstone_mask=self.caps.tombstones_dirty,
+                tombstone_lowering=(
+                    "TombstoneSet.valid_mask() (cached device bool[n_0]) "
+                    "folded into the leaf ranking via ref.fold_slot_valid"
+                    if self.caps.tombstones_dirty
+                    else "none (no dead slots)"),
+                delta=self.caps.delta_dirty,
+                delta_lowering=(
+                    "exact ops.pairwise_distance scan over the delta "
+                    "buffer + merge_topk into the result"
+                    if self.caps.delta_dirty
+                    else "none (delta buffer empty)"),
+            ),
+            kernel=(kernel._asdict() if hasattr(kernel, "_asdict")
+                    else kernel),
+        )
+
+    def explain(self) -> str:
+        """Human-readable plan: pipeline, kernel lowering, online legs.
+        Formats :meth:`describe` — the dict is the source of truth."""
+        d = self.describe()
+        q, caps, legs = d["query"], d["capabilities"], d["online_legs"]
         lines = [
-            f"SearchPlan[{self.pipeline}] epoch={self.caps.epoch} "
-            f"levels={self.caps.n_levels} "
-            f"store={self.caps.store or 'dense-resident'}"
-            + (" (payload released)" if self.caps.payload_released else ""),
-            f"  query: k={q.k} radius={self.radius} beam={q.beam}"
-            + (f" rerank_width={q.rerank_width}"
-               if self.pipeline == "two_stage" else "")
-            + f" leaf_radius_filter={q.leaf_radius_filter}",
-            f"  lowering: {_LOWERING[effective]}",
-            "  tombstone mask: "
-            + ("TombstoneSet.valid_mask() (cached device bool[n_0]) folded "
-               "into the leaf ranking via ref.fold_slot_valid"
-               if self.caps.tombstones_dirty else "none (no dead slots)"),
-            "  delta leg: "
-            + ("exact ops.pairwise_distance scan over the delta buffer + "
-               "merge_topk into the result"
-               if self.caps.delta_dirty else "none (delta buffer empty)"),
+            f"SearchPlan[{d['pipeline']}] epoch={caps['epoch']} "
+            f"levels={caps['n_levels']} "
+            f"store={caps['store'] or 'dense-resident'}"
+            + (" (payload released)" if caps["payload_released"] else ""),
+            f"  query: k={q['k']} radius={q['radius']} beam={q['beam']}"
+            + (f" rerank_width={q['rerank_width']}"
+               if d["pipeline"] == "two_stage" else "")
+            + f" leaf_radius_filter={q['leaf_radius_filter']}",
+            f"  lowering: {d['lowering']}",
+            f"  tombstone mask: {legs['tombstone_lowering']}",
+            f"  delta leg: {legs['delta_lowering']}",
         ]
         return "\n".join(lines)
 
@@ -370,6 +412,7 @@ def compile_plan(index, query: Query) -> SearchPlan:
         kernel=_stamped_kernel(query.kernel, caps),
     )
     _STATS[pipeline]["compiles"] += 1
+    obs.counter(mnames.PLAN_COMPILES, pipeline=pipeline).inc()
     return plan
 
 
@@ -409,6 +452,7 @@ class ShardedPlan:
 
     def __call__(self, sharded_index, Q, *, slot_valid=None):
         _STATS[self.pipeline]["executions"] += 1
+        obs.counter(mnames.PLAN_EXECUTIONS, pipeline=self.pipeline).inc()
         validate_query_batch(Q, self.dist)
         q = self.query
         from repro.core import distributed as dd
@@ -422,21 +466,50 @@ class ShardedPlan:
             slot_valid=slot_valid,
         )
 
-    def explain(self) -> str:
-        axes = "x".join(
-            f"{a}={self.mesh.shape[a]}" for a in self.db_axes
+    def describe(self) -> dict:
+        """Structured counterpart of :meth:`explain` (cf.
+        :meth:`SearchPlan.describe`)."""
+        q = self.query
+        kernel = self.kernel
+        return dict(
+            pipeline=self.pipeline,
+            effective_pipeline=f"sharded/{self.shard_mode}",
+            lowering=_LOWERING[self.shard_mode],
+            query=dict(
+                k=q.k, radius=self.radius, beam=q.beam,
+                leaf_radius_filter=q.leaf_radius_filter,
+                execution=q.execution,
+            ),
+            mesh=dict(
+                axes={a: int(self.mesh.shape[a]) for a in self.db_axes},
+                merge=self.merge,
+            ),
+            online_legs=dict(
+                tombstone_mask=None,  # per-shard slot_valid at call time
+                tombstone_lowering=(
+                    "per-shard slot_valid slices (passed at call time; "
+                    "route_writes/local_slot_valid build them)"),
+                delta=False,
+                delta_lowering="none (sharded plans serve compacted tiers)",
+            ),
+            kernel=(kernel._asdict() if hasattr(kernel, "_asdict")
+                    else kernel),
         )
+
+    def explain(self) -> str:
+        d = self.describe()
+        q = d["query"]
+        axes = "x".join(f"{a}={n}" for a, n in d["mesh"]["axes"].items())
         lines = [
             f"ShardedPlan[sharded/{self.shard_mode}] mesh axes ({axes}), "
             f"merge={self.merge}",
-            f"  query: k={self.query.k} radius={self.radius} "
-            f"beam={self.query.beam} "
-            f"leaf_radius_filter={self.query.leaf_radius_filter}",
-            f"  per-shard lowering: {_LOWERING[self.shard_mode]}",
+            f"  query: k={q['k']} radius={q['radius']} "
+            f"beam={q['beam']} "
+            f"leaf_radius_filter={q['leaf_radius_filter']}",
+            f"  per-shard lowering: {d['lowering']}",
             f"  merge: distributed.topk_merge_{self.merge} over "
             f"{tuple(self.db_axes)} (global ids = shard offset + local rows)",
-            "  tombstone mask: per-shard slot_valid slices (passed at call "
-            "time; route_writes/local_slot_valid build them)",
+            f"  tombstone mask: {d['online_legs']['tombstone_lowering']}",
         ]
         return "\n".join(lines)
 
@@ -486,4 +559,5 @@ def compile_sharded_plan(
         else None, merge=merge, kernel=_stamped_kernel(query.kernel),
     )
     _STATS[plan.pipeline]["compiles"] += 1
+    obs.counter(mnames.PLAN_COMPILES, pipeline=plan.pipeline).inc()
     return plan

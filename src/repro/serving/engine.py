@@ -67,6 +67,9 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
+from repro.obs import names as mnames
+
 # Sentinel pushed by close() to wake a worker blocked on the request queue.
 _SHUTDOWN = object()
 
@@ -99,6 +102,13 @@ class Request:
     # thread calls it.
     on_done: Optional[Callable[["Request"], None]] = None
     _cancelled: bool = False
+    # Tracing (DESIGN.md §3.11): the sampled request's parent span (a
+    # router attempt leg, or a Trace root for bare submits). The worker
+    # hangs queue_wait / batch_wait / execute children off it. None for
+    # the unsampled 1-(1/N) of traffic.
+    span: Optional[Any] = None
+    _enqueued_pc: float = 0.0  # perf_counter twin of enqueued_at
+    _taken_pc: float = 0.0  # stamped when the worker takes it into a batch
 
     def cancel(self) -> None:
         """Mark the request dead: a worker that has not yet taken it skips
@@ -155,8 +165,10 @@ class BatchingEngine:
         prefetch_fn: Optional[Callable[[list], None]] = None,
         write_handler: Optional[Callable[[list], None]] = None,
         extra_handlers: Optional[dict] = None,
+        name: str = "engine",
     ):
         self.handler = handler
+        self.name = name  # the registry's `engine` label (replica id)
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
         self.pad_payload = pad_payload
@@ -180,9 +192,36 @@ class BatchingEngine:
         # stop+sentinel: without it a submit could land in the queue after
         # the worker drained it, leaving a request whose wait() never fires.
         self._submit_lock = threading.Lock()
-        self.stats = dict(batches=0, requests=0, occupancy_sum=0.0,
-                          prefetches=0, writes=0, write_batches=0,
-                          deadline_drops=0, cancelled_skips=0)
+        # Worker-mutated counters live behind _stats_lock; the public
+        # `stats` property returns an atomic copy (the bare-dict attribute
+        # it replaces was read torn while the worker mutated it).
+        self._stats_lock = threading.Lock()
+        self._stats = dict(batches=0, requests=0, occupancy_sum=0.0,
+                           prefetches=0, writes=0, write_batches=0,
+                           deadline_drops=0, cancelled_skips=0)
+        # Registry handles, pre-bound so the hot path pays one lock+add
+        # per increment (no name/label lookup per event).
+        self._m_requests = obs.counter(mnames.ENGINE_REQUESTS, engine=name)
+        self._m_batches = obs.counter(mnames.ENGINE_BATCHES, engine=name)
+        self._m_writes = obs.counter(mnames.ENGINE_WRITES, engine=name)
+        self._m_write_batches = obs.counter(
+            mnames.ENGINE_WRITE_BATCHES, engine=name)
+        self._m_prefetches = obs.counter(
+            mnames.ENGINE_PREFETCHES, engine=name)
+        self._m_deadline_drops = obs.counter(
+            mnames.ENGINE_DEADLINE_DROPS, engine=name)
+        self._m_cancelled = obs.counter(
+            mnames.ENGINE_CANCELLED_SKIPS, engine=name)
+        self._m_handler_errors = obs.counter(
+            mnames.ENGINE_HANDLER_ERRORS, engine=name)
+        self._m_occupancy = obs.histogram(
+            mnames.ENGINE_BATCH_OCCUPANCY, engine=name)
+        self._m_queue_depth = obs.gauge(
+            mnames.ENGINE_QUEUE_DEPTH, engine=name)
+        self._m_queue_wait = obs.histogram(
+            mnames.ENGINE_QUEUE_WAIT, engine=name)
+        self._m_handler_time = obs.histogram(
+            mnames.ENGINE_HANDLER_TIME, engine=name)
         self._prefetch_q: Optional[queue.Queue] = None
         self._prefetch_thread = None
         if prefetch_fn is not None:
@@ -196,22 +235,41 @@ class BatchingEngine:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    @property
+    def stats(self) -> dict:
+        """Deprecated view (use ``repro.obs``): an atomic snapshot of the
+        legacy counter dict. Kept for callers that read e.g.
+        ``engine.stats["writes"]``; unlike the bare dict it replaces, the
+        copy is taken under the stats lock so a reader can never observe a
+        torn multi-key update."""
+        with self._stats_lock:
+            return dict(self._stats)
+
+    def _bump(self, **deltas) -> None:
+        with self._stats_lock:
+            for k, v in deltas.items():
+                self._stats[k] += v
+
     def submit(self, payload, *, kind: str = "search",
                deadline_s: Optional[float] = None,
-               on_done: Optional[Callable[[Request], None]] = None) -> Request:
+               on_done: Optional[Callable[[Request], None]] = None,
+               span=None) -> Request:
         """Enqueue a search-like request. ``kind`` picks the handler
         ("search", or a key of ``extra_handlers``); ``deadline_s`` is a
         per-request budget from enqueue time — a request still queued when
         it expires is dropped with :class:`DeadlineExceeded` instead of
         occupying a batch slot. ``on_done`` must be attached here (not
-        after) so a fast worker can never complete the request first."""
+        after) so a fast worker can never complete the request first.
+        ``span`` is an optional tracing parent (an ``obs.Span``): the
+        worker records queue_wait / batch_wait / execute children under
+        it for this request."""
         if kind != "search" and kind not in self.extra_handlers:
             raise ValueError(
                 f"unknown request kind {kind!r}; registered extra kinds: "
                 f"{sorted(self.extra_handlers)}"
             )
         return self._enqueue(payload, kind, deadline_s=deadline_s,
-                             on_done=on_done)
+                             on_done=on_done, span=span)
 
     def submit_upsert(self, payload) -> Request:
         """Enqueue an upsert (payload: vectors, or ``(vectors, ids)``).
@@ -233,7 +291,7 @@ class BatchingEngine:
 
     def _enqueue(self, payload, kind: str,
                  deadline_s: Optional[float] = None,
-                 on_done=None) -> Request:
+                 on_done=None, span=None) -> Request:
         with self._submit_lock:
             if self._stop.is_set():
                 # Raise at the call site instead of enqueueing a request
@@ -247,7 +305,8 @@ class BatchingEngine:
                           enqueued_at=now,
                           deadline=(now + deadline_s
                                     if deadline_s is not None else None),
-                          on_done=on_done)
+                          on_done=on_done, span=span,
+                          _enqueued_pc=time.perf_counter())
             self._q.put(req)
         return req
 
@@ -258,11 +317,13 @@ class BatchingEngine:
         if req.kind in _WRITE_KINDS:
             return False
         if req.cancelled:
-            self.stats["cancelled_skips"] += 1
+            self._bump(cancelled_skips=1)
+            self._m_cancelled.inc()
             req._finish(error=Cancelled(f"request {req.id} cancelled"))
             return True
         if req.deadline is not None and (now or time.time()) > req.deadline:
-            self.stats["deadline_drops"] += 1
+            self._bump(deadline_drops=1)
+            self._m_deadline_drops.inc()
             req._finish(error=DeadlineExceeded(
                 f"request {req.id} missed its deadline before a worker "
                 f"took it"))
@@ -284,6 +345,8 @@ class BatchingEngine:
                 return []
             if not self._drop_dead(first):
                 break
+        first._taken_pc = time.perf_counter()
+        self._m_queue_depth.set(self._q.qsize())
         batch = [first]
         if first.kind in _WRITE_KINDS:
             # Writes batch without a deadline: take whatever writes are
@@ -327,6 +390,7 @@ class BatchingEngine:
                 # close this batch, the boundary request opens the next one
                 self._pending.append(item)
                 break
+            item._taken_pc = time.perf_counter()
             batch.append(item)
         return batch
 
@@ -337,7 +401,8 @@ class BatchingEngine:
                 return
             try:
                 self.prefetch_fn(snapshot)
-                self.stats["prefetches"] += 1
+                self._bump(prefetches=1)
+                self._m_prefetches.inc()
             except Exception:
                 pass  # best-effort: a cold cache costs latency, not errors
 
@@ -401,8 +466,9 @@ class BatchingEngine:
                 r._finish(error=results[i])
             else:
                 r._finish(result=results[i] if results is not None else None)
-        self.stats["writes"] += len(batch)
-        self.stats["write_batches"] += 1
+        self._bump(writes=len(batch), write_batches=1)
+        self._m_writes.inc(len(batch))
+        self._m_write_batches.inc()
 
     def _worker(self):
         # After close() the worker drains requests already enqueued (they
@@ -430,24 +496,60 @@ class BatchingEngine:
             pad = self.pad_payload if self.pad_payload is not None else batch[0].payload
             rows = [r.payload for r in batch] + [pad] * (self.batch_size - n)
             stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+            # Tracing: a batch serves many requests, several of which may
+            # be sampled. Each traced request gets queue_wait / batch_wait
+            # children (backdated from its own stamps) plus an execute
+            # span; the execute spans form the thread's active set around
+            # the handler call, so stage spans recorded inside (plan,
+            # scan, rerank, granule fetches) mirror into every sampled
+            # request of the batch.
+            exec_spans = []
+            t_exec = time.perf_counter()
+            for r in batch:
+                if r.span is None:
+                    continue
+                qw = r.span.child("queue_wait")
+                qw.t0, qw.t1 = r._enqueued_pc, r._taken_pc
+                bw = r.span.child("batch_wait")
+                bw.t0, bw.t1 = r._taken_pc, t_exec
+                exec_spans.append(r.span.child(
+                    "execute", kind=batch[0].kind, batch=n,
+                    engine=self.name))
             try:
-                results = handler(stacked, n)
+                if exec_spans:
+                    with obs.activate(exec_spans):
+                        results = handler(stacked, n)
+                else:
+                    results = handler(stacked, n)
             except BaseException as e:  # noqa: BLE001 — a handler failure
                 # fails this batch (each wait() re-raises), never the worker:
                 # a dead worker would silently hang every queued and future
                 # request until TimeoutError
+                for s in exec_spans:
+                    s.end(error=type(e).__name__)
                 for r in batch:
                     r._finish(error=e)
-                self.stats["batches"] += 1
-                self.stats["requests"] += n
-                self.stats["occupancy_sum"] += n / self.batch_size
+                self._bump(batches=1, requests=n,
+                           occupancy_sum=n / self.batch_size)
+                self._m_handler_errors.inc()
+                self._finish_batch_metrics(batch, n, t_exec)
                 continue
+            for s in exec_spans:
+                s.end()
             for i, r in enumerate(batch):
                 r._finish(result=jax.tree.map(
                     lambda a: np.asarray(a)[i], results))
-            self.stats["batches"] += 1
-            self.stats["requests"] += n
-            self.stats["occupancy_sum"] += n / self.batch_size
+            self._bump(batches=1, requests=n,
+                       occupancy_sum=n / self.batch_size)
+            self._finish_batch_metrics(batch, n, t_exec)
+
+    def _finish_batch_metrics(self, batch, n, t_exec):
+        self._m_batches.inc()
+        self._m_requests.inc(n)
+        self._m_occupancy.observe(n / self.batch_size)
+        self._m_handler_time.observe(time.perf_counter() - t_exec)
+        for r in batch:
+            self._m_queue_wait.observe(r._taken_pc - r._enqueued_pc)
 
     def close(self):
         with self._submit_lock:
@@ -465,8 +567,9 @@ class BatchingEngine:
 
     @property
     def mean_occupancy(self) -> float:
-        b = self.stats["batches"]
-        return self.stats["occupancy_sum"] / b if b else 0.0
+        snap = self.stats  # one atomic snapshot (not two racing reads)
+        b = snap["batches"]
+        return snap["occupancy_sum"] / b if b else 0.0
 
 
 class QueryHandler:

@@ -137,6 +137,7 @@ class Replica:
             pad_payload=self._pad,
             write_handler=self.handle.apply_writes,
             extra_handlers=extra or None,
+            name=f"r{self.id}",  # labels this replica's series in repro.obs
         )
 
     def kill(self) -> None:
@@ -164,11 +165,13 @@ class Replica:
 
     def submit(self, payload, *, kind: str = "search",
                deadline_s: Optional[float] = None,
-               on_done=None) -> Request:
+               on_done=None, span=None) -> Request:
         """Submit a search-like request; raises :class:`ReplicaDown` when
         the replica is not serving. ``outstanding`` counts requests between
         here and their completion callback (the router's least-loaded
-        signal); ``on_done`` chains the caller's completion hook after it."""
+        signal); ``on_done`` chains the caller's completion hook after it;
+        ``span`` is the tracing parent forwarded to the engine (a router
+        attempt leg)."""
         eng = self.engine
         if eng is None:
             raise ReplicaDown(f"replica r{self.id} is down")
@@ -182,7 +185,7 @@ class Replica:
                 _extra(req)
         try:
             return eng.submit(payload, kind=kind, deadline_s=deadline_s,
-                              on_done=cb)
+                              on_done=cb, span=span)
         except RuntimeError as e:  # closed between the check and the submit
             with self._out_lock:
                 self._outstanding -= 1

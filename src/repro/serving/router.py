@@ -41,14 +41,21 @@ request it runs a small state machine:
   growing cooldown: half-open state admits one probe (restarting a dead
   engine first, which replays the write log it missed); success readmits,
   failure re-ejects. The full lifecycle — eject, half-open probes,
-  readmission — lands in ``router.events`` for the fault harness to
-  assert on.
+  readmission — lands in the bounded event log (``router.events()``)
+  with from/to states and per-edge transition counters in ``repro.obs``,
+  for the fault harness to assert on.
+* **Telemetry** (DESIGN.md §3.11) — counters/histograms for every decision
+  above land in the process-wide ``repro.obs`` registry, and with
+  ``RouterConfig.trace_every = N`` every N-th request (deterministic by
+  request seq) records a full span tree — attempt legs, queue/batch waits,
+  plan stages, granule fetches — retained in ``router.traces``.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import random
 import threading
 import time
@@ -56,6 +63,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro import obs
+from repro.obs import names as mnames
 from repro.serving.engine import Cancelled, DeadlineExceeded
 from repro.serving.faults import ReplicaCrashed
 from repro.serving.replicated import ReplicaDown, ReplicaSet
@@ -90,6 +99,11 @@ class RouterConfig:
     probe_timeout_s: float = 0.3     # a probe slower than this failed
     probe_interval_s: float = 0.05   # prober thread wake period
     seed: int = 0
+    # Telemetry (DESIGN.md §3.11): trace 1 request in N, keyed on the
+    # router's request sequence number (deterministic; 0 disables), and
+    # bound the in-memory event log (oldest entries evicted).
+    trace_every: int = 0
+    events_maxlen: int = 4096
 
 
 class RouterResult(NamedTuple):
@@ -117,7 +131,7 @@ class RouterRequest:
     retry/hedge state machine from the caller's :meth:`wait`."""
 
     def __init__(self, router: "Router", payload, kind: str,
-                 deadline: float):
+                 deadline: float, *, seq: int = 0, trace=None):
         self.router = router
         self.payload = payload
         self.kind = kind
@@ -126,6 +140,8 @@ class RouterRequest:
         self.attempts: list = []  # live (replica, engine Request) pairs
         self.retries = 0
         self.hedged = False
+        self.seq = seq
+        self.trace = trace  # obs.Trace for the sampled 1-in-N, else None
         self._evt = threading.Event()  # poked by any attempt completing
         self._released = False
 
@@ -160,9 +176,25 @@ class Router:
         self._health = {r.id: _Health() for r in replica_set.replicas}
         self._inflight = 0
         self._t0 = time.time()
-        self.events: list = []
+        # Bounded event log: deque drops the oldest entries, so a long-
+        # lived router cannot grow without bound; read via events().
+        self._events: collections.deque = collections.deque(
+            maxlen=self.cfg.events_maxlen)
         self.stats = collections.Counter()
         self._lat = collections.deque(maxlen=512)
+        self._seq = itertools.count()
+        # Deterministic 1-in-N request tracing; completed traces land in
+        # self.traces (bounded), exemplar via self.traces.exemplar(p99).
+        self._sampler = obs.TraceSampler(self.cfg.trace_every)
+        self.traces = self._sampler.buffer
+        self._m_requests = obs.counter(mnames.ROUTER_REQUESTS)
+        self._m_rejects = obs.counter(mnames.ROUTER_REJECTS)
+        self._m_degraded = obs.counter(mnames.ROUTER_DEGRADED)
+        self._m_retries = obs.counter(mnames.ROUTER_RETRIES)
+        self._m_hedges = obs.counter(mnames.ROUTER_HEDGES)
+        self._m_hedge_wins = obs.counter(mnames.ROUTER_HEDGE_WINS)
+        self._m_deadline = obs.counter(mnames.ROUTER_DEADLINE_EXCEEDED)
+        self._m_latency = obs.histogram(mnames.ROUTER_LATENCY)
         self._stop = threading.Event()
         self._prober = threading.Thread(target=self._probe_loop, daemon=True)
         self._prober.start()
@@ -184,6 +216,7 @@ class Router:
         with self._lock:
             if self._inflight >= cfg.queue_limit:
                 self.stats["rejected"] += 1
+                self._m_rejects.inc()
                 self._log("reject", None, f"inflight={self._inflight}")
                 raise Overloaded(
                     f"router over capacity ({self._inflight} in flight >= "
@@ -193,13 +226,18 @@ class Router:
                     and self._inflight >= cfg.degrade_at * cfg.queue_limit):
                 kind = "degraded"
                 self.stats["degraded"] += 1
+                self._m_degraded.inc()
                 self._log("degrade", None, f"inflight={self._inflight}")
             self._inflight += 1
             self.stats["requests"] += 1
+            seq = next(self._seq)
+        self._m_requests.inc()
         budget = cfg.deadline_s if deadline_s is None else deadline_s
-        rr = RouterRequest(self, payload, kind, time.time() + budget)
+        trace = self._sampler.sample("request", seq, kind=kind)
+        rr = RouterRequest(self, payload, kind, time.time() + budget,
+                           seq=seq, trace=trace)
         try:
-            self._dispatch(rr)
+            self._dispatch(rr, leg="primary")
         except BaseException:
             self._release(rr)
             raise
@@ -211,9 +249,17 @@ class Router:
         if close_replicas:
             self.set.close()
 
+    def events(self) -> list:
+        """Snapshot of the bounded in-memory event log (oldest first).
+        Each entry: ``{"t": ..., "event": ..., "replica": ..., "detail":
+        ...}``; ejections/readmissions also carry ``from``/``to`` health
+        states so the fault harness can assert exact sequences."""
+        with self._lock:
+            return list(self._events)
+
     def event_counts(self) -> dict:
         with self._lock:
-            c = collections.Counter(e["event"] for e in self.events)
+            c = collections.Counter(e["event"] for e in self._events)
         return dict(c)
 
     def hedge_delay(self) -> float:
@@ -228,12 +274,23 @@ class Router:
 
     # -- dispatch + health ----------------------------------------------------
 
-    def _log(self, event: str, replica: Optional[int], detail: str = ""):
+    def _log(self, event: str, replica: Optional[int], detail: str = "",
+             **extra):
         # callers hold self._lock
-        self.events.append(dict(
+        self._events.append(dict(
             t=round(time.time() - self._t0, 4), event=event,
-            replica=replica, detail=detail,
+            replica=replica, detail=detail, **extra,
         ))
+
+    def _transition(self, rid: int, frm: str, to: str, event: str,
+                    detail: str = "") -> None:
+        """Record one health state-machine edge: the per-edge counter
+        (labelled from/to) plus an event-log entry carrying the states.
+        Callers hold self._lock and have already set ``h.state = to``."""
+        self.stats[f"transition_{frm}_{to}"] += 1
+        obs.counter(mnames.ROUTER_HEALTH_TRANSITIONS,
+                    **{"replica": str(rid), "from": frm, "to": to}).inc()
+        self._log(event, rid, detail, **{"from": frm, "to": to})
 
     def _pick(self, exclude: set):
         """Least-outstanding with power-of-two-choices over healthy
@@ -255,8 +312,10 @@ class Router:
             a, b = self._rng.sample(healthy, 2)
         return a if a.outstanding <= b.outstanding else b
 
-    def _dispatch(self, rr: RouterRequest) -> None:
-        """Submit one attempt for ``rr``; walks picks past dead replicas."""
+    def _dispatch(self, rr: RouterRequest, *, leg: str = "primary") -> None:
+        """Submit one attempt for ``rr``; walks picks past dead replicas.
+        ``leg`` tags the attempt ("primary" | "retry" | "hedge") for the
+        dispatch counters, the hedge-win accounting and the trace span."""
         exclude = {r.id for r, _ in rr.attempts}
         for _ in range(max(len(self.set.replicas), 1)):
             rep = self._pick(exclude)
@@ -266,13 +325,23 @@ class Router:
             if remaining <= 0:
                 raise DeadlineExceeded("request deadline exhausted before "
                                        "dispatch")
+            span = None
+            if rr.trace is not None:
+                span = rr.trace.root.child(
+                    "attempt", replica=rep.id, leg=leg)
             try:
                 req = rep.submit(rr.payload, kind=rr.kind,
-                                 deadline_s=remaining, on_done=rr._notify)
+                                 deadline_s=remaining, on_done=rr._notify,
+                                 span=span)
             except ReplicaDown:
+                if span is not None:
+                    span.end(error="ReplicaDown")
                 self._on_failure(rep.id, "down")
                 exclude.add(rep.id)
                 continue
+            req._leg = leg
+            obs.counter(mnames.ROUTER_DISPATCHES,
+                        replica=str(rep.id), leg=leg).inc()
             rr.attempts.append((rep, req))
             return
         raise ReplicaUnavailable("every dispatch candidate refused the "
@@ -285,10 +354,11 @@ class Router:
             if h.state == "half_open":
                 h.state = "healthy"
                 h.probe_attempts = 0
-                self._log("readmit", rid)
+                self._transition(rid, "half_open", "healthy", "readmit")
 
     def _on_failure(self, rid: int, reason: str, *,
                     crashed: bool = False) -> None:
+        obs.counter(mnames.ROUTER_FAILURES, replica=str(rid)).inc()
         with self._lock:
             h = self._health[rid]
             h.consec += 1
@@ -297,12 +367,13 @@ class Router:
                 h.state = "ejected"
                 h.ejected_at = time.time()
                 h.probe_attempts += 1
-                self._log("probe_fail", rid, reason)
+                self._transition(rid, "half_open", "ejected", "probe_fail",
+                                 reason)
             elif h.state == "healthy" and (
                     crashed or h.consec >= self.cfg.eject_failures):
                 h.state = "ejected"
                 h.ejected_at = time.time()
-                self._log("eject", rid, reason)
+                self._transition(rid, "healthy", "ejected", "eject", reason)
 
     def _handle_error(self, rr: RouterRequest, rep, err) -> None:
         """Health bookkeeping for one failed attempt."""
@@ -331,23 +402,38 @@ class Router:
             for rep, req in rr.finished():
                 rr.attempts.remove((rep, req))
                 if req.error is None:
+                    if req.span is not None:
+                        req.span.end(outcome="won")
                     self._on_success(rep.id)
+                    if getattr(req, "_leg", "primary") == "hedge":
+                        self.stats["hedge_wins"] += 1
+                        self._m_hedge_wins.inc()
                     # winner: cancel the losers; a loser still incomplete is
                     # the stall signal that ejects wedged replicas
                     for lrep, lreq in list(rr.attempts):
                         if not lreq._event.is_set():
                             lreq.cancel()
+                            if lreq.span is not None:
+                                lreq.span.end(outcome="cancelled")
                             self._on_failure(lrep.id, "hedge_loss")
                     lat = time.time() - rr.t0
                     with self._lock:
                         self._lat.append(lat)
                         self.stats["successes"] += 1
+                    self._m_latency.observe(lat)
+                    if rr.trace is not None:
+                        rr.trace.finish(
+                            outcome="ok", replica=rep.id,
+                            degraded=(rr.kind == "degraded"),
+                            retries=rr.retries, hedged=rr.hedged)
                     dists, ids = req.result
                     return RouterResult(
                         dists=np.asarray(dists), ids=np.asarray(ids),
                         replica=rep.id, degraded=(rr.kind == "degraded"),
                         retries=rr.retries, hedged=rr.hedged, latency_s=lat,
                     )
+                if req.span is not None:
+                    req.span.end(error=type(req.error).__name__)
                 if isinstance(req.error, Cancelled):
                     continue  # our own cancel racing the worker: not a fault
                 last_err = req.error
@@ -366,9 +452,12 @@ class Router:
                                       and now >= hard_stop):
                 for rep, req in rr.live():
                     req.cancel()
+                    if req.span is not None:
+                        req.span.end(outcome="deadline")
                     self._on_failure(rep.id, "deadline")
                 with self._lock:
                     self.stats["deadline_exceeded"] += 1
+                self._m_deadline.inc()
                 if now >= rr.deadline:
                     raise DeadlineExceeded(
                         f"request missed its {cfg.deadline_s * 1e3:.0f}ms "
@@ -382,8 +471,9 @@ class Router:
                 with self._lock:
                     self.stats["retries"] += 1
                     self._log("retry", None, f"n={rr.retries}")
+                self._m_retries.inc()
                 try:
-                    self._dispatch(rr)
+                    self._dispatch(rr, leg="retry")
                 except (ReplicaUnavailable, DeadlineExceeded) as e:
                     last_err = e
                     if not rr.live():
@@ -401,8 +491,9 @@ class Router:
                     self.stats["hedges"] += 1
                     self._log("hedge", rr.live()[0][0].id,
                               f"after {now - rr.t0:.3f}s")
+                self._m_hedges.inc()
                 try:
-                    self._dispatch(rr)
+                    self._dispatch(rr, leg="hedge")
                 except (ReplicaUnavailable, DeadlineExceeded):
                     pass  # hedging is opportunistic, never fatal
             # 6) sleep until the next actionable moment
@@ -420,6 +511,10 @@ class Router:
         if rr._released:
             return
         rr._released = True
+        if rr.trace is not None:
+            # idempotent: the winner path already finished it with
+            # outcome="ok"; error/deadline exits finish it here
+            rr.trace.finish(outcome="error")
         with self._lock:
             self._inflight -= 1
 
@@ -449,8 +544,8 @@ class Router:
                 if now - h.ejected_at < cooldown:
                     continue
                 h.state = "half_open"
-                self._log("half_open", rep.id,
-                          f"probe #{h.probe_attempts + 1}")
+                self._transition(rep.id, "ejected", "half_open", "half_open",
+                                 f"probe #{h.probe_attempts + 1}")
             if not rep.alive:
                 try:
                     self.set.restart(rep.id)

@@ -51,7 +51,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import ref as kref
+from repro.obs import names as mnames
 
 Array = jax.Array
 
@@ -173,6 +175,15 @@ class ExactSource:
         self._cache_max = max(1, cache_granules)
         self._lock = threading.Lock()
         self.stats = dict(fetches=0, hits=0)
+        # Granules warmed by prefetch() and not yet hit by a real fetch —
+        # a later cache hit on one counts as "prefetch useful" (the
+        # prefetch-usefulness signal in repro.obs).
+        self._prefetched: set = set()
+        self._m_fetches = obs.counter(mnames.STORE_FETCHES)
+        self._m_hits = obs.counter(mnames.STORE_HITS)
+        self._m_fetch_bytes = obs.counter(mnames.STORE_FETCH_BYTES)
+        self._m_prefetched = obs.counter(mnames.STORE_PREFETCHED)
+        self._m_prefetch_useful = obs.counter(mnames.STORE_PREFETCH_USEFUL)
 
     @property
     def on_disk(self) -> bool:
@@ -187,20 +198,35 @@ class ExactSource:
     def nbytes(self) -> int:
         return self.n * self.d * 4
 
-    def _granule(self, g: int) -> np.ndarray:
+    def _granule(self, g: int, *, _prefetch: bool = False) -> np.ndarray:
         with self._lock:
             blk = self._cache.get(g)
             if blk is not None:
                 self._cache.move_to_end(g)
                 self.stats["hits"] += 1
+                if not _prefetch and g in self._prefetched:
+                    # first real hit on a prefetch-warmed granule: the
+                    # prefetch saved exactly one backing-store read
+                    self._prefetched.discard(g)
+                    self._m_prefetch_useful.inc()
+                self._m_hits.inc()
                 return blk
         lo = g * self.block
         blk = np.asarray(self._arr[lo: lo + self.block], np.float32)
         with self._lock:
             self.stats["fetches"] += 1
             self._cache[g] = blk
+            if _prefetch:
+                self._prefetched.add(g)
+                self._m_prefetched.inc()
+            else:
+                # a real fetch of a granule that was prefetched but already
+                # evicted: the warm-up did not help, stop tracking it
+                self._prefetched.discard(g)
             while len(self._cache) > self._cache_max:
                 self._cache.popitem(last=False)
+        self._m_fetches.inc()
+        self._m_fetch_bytes.inc(blk.nbytes)
         return blk
 
     def read_all(self) -> np.ndarray:
@@ -216,7 +242,7 @@ class ExactSource:
         """
         gs = np.unique(np.asarray(granules, np.int64))[: self._cache_max]
         for g in gs:
-            self._granule(int(g))
+            self._granule(int(g), _prefetch=True)
 
     def fetch_rows(self, idx: np.ndarray) -> np.ndarray:
         """Gather exact rows: idx [...] int -> [..., d] f32, granule-wise."""
@@ -224,10 +250,13 @@ class ExactSource:
         flat = np.clip(idx.reshape(-1), 0, self.n - 1)
         out = np.empty((flat.shape[0], self.d), np.float32)
         gran = flat // self.block
-        for g in np.unique(gran):
-            sel = gran == g
-            blk = self._granule(int(g))
-            out[sel] = blk[flat[sel] - int(g) * self.block]
+        uniq = np.unique(gran)
+        with obs.span("granule_fetch", kind="host",
+                      granules=int(uniq.size), rows=int(flat.shape[0])):
+            for g in uniq:
+                sel = gran == g
+                blk = self._granule(int(g))
+                out[sel] = blk[flat[sel] - int(g) * self.block]
         return out.reshape(*idx.shape, self.d)
 
 

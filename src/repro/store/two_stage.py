@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import distances as dist_lib
 from repro.core.distances import BIG
 from repro.core.msa import PDASCIndexData
@@ -130,10 +131,18 @@ def search_two_stage(
         )
         return jax.tree.map(lambda a: a[0], res) if squeeze else res
 
-    cand_idx, cand_ok = descend_beam(
-        index, Qb, dist=dist, r=r, beam=beam,
-        max_children=tuple(max_children), kernel=kernel,
-    )
+    # Tracing (DESIGN.md §3.11): stage spans mirror into every sampled
+    # request of the batch. Device stages block_until_ready ONLY when a
+    # trace is active — otherwise async dispatch would attribute device
+    # time to whichever later stage happens to synchronise.
+    tracing = obs.is_tracing()
+    with obs.span("descend", kind="device", beam=beam):
+        cand_idx, cand_ok = descend_beam(
+            index, Qb, dist=dist, r=r, beam=beam,
+            max_children=tuple(max_children), kernel=kernel,
+        )
+        if tracing:
+            jax.block_until_ready(cand_idx)
     W = cand_idx.shape[1]
     # Never let the rerank pool shrink below k: a small rerank_width is a
     # fetch-traffic knob, not permission to return fewer than k neighbours.
@@ -144,11 +153,15 @@ def search_two_stage(
         # No prefetch, no granule fetch, no stage 2 — the exact payload is
         # never touched. Distances are code-space (scale/2-ish error).
         k_eff = min(k, W)
-        d_scan, slot = kops.scan_quantized(
-            Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
-            k=k_eff, block=store.block, slot_valid=slot_valid,
-            code_format=store.code_format, config=kernel,
-        )
+        with obs.span("scan", kind="device", candidates=W,
+                      backend=store.backend, scan_only=True):
+            d_scan, slot = kops.scan_quantized(
+                Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
+                k=k_eff, block=store.block, slot_valid=slot_valid,
+                code_format=store.code_format, config=kernel,
+            )
+            if tracing:
+                jax.block_until_ready(d_scan)
         slots = jnp.take_along_axis(cand_idx, slot, axis=1)
         res = assemble_result(
             index, d_scan, slots, cand_ok, k=k, leaf_radius=radii[0],
@@ -168,23 +181,31 @@ def search_two_stage(
         )
         prefetcher.start()
 
-    d_scan, slot = kops.scan_quantized(
-        Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
-        k=R, block=store.block, slot_valid=slot_valid,
-        code_format=store.code_format, config=kernel,
-    )
-    surv_idx = jnp.take_along_axis(cand_idx, slot, axis=1)  # [B, R]
-    surv_ok = d_scan < BIG / 2
+    with obs.span("scan", kind="device", candidates=W, survivors=R,
+                  backend=store.backend):
+        d_scan, slot = kops.scan_quantized(
+            Qb, store.codes, store.scales, cand_idx, cand_ok, dist,
+            k=R, block=store.block, slot_valid=slot_valid,
+            code_format=store.code_format, config=kernel,
+        )
+        surv_idx = jnp.take_along_axis(cand_idx, slot, axis=1)  # [B, R]
+        surv_ok = d_scan < BIG / 2
+        if tracing:
+            jax.block_until_ready(surv_idx)
 
     if prefetcher is not None:
         prefetcher.join()
 
     # Stage 2: exact fp32 rows from the out-of-core payload, granule-wise.
+    # (the granule_fetch span is recorded inside ExactSource.fetch_rows)
     C = store.fetch_rows(np.asarray(surv_idx))  # [B, R, d] host f32
     k_eff = min(k, R)
-    dists, slot2 = kops.rank_candidates(
-        Qb, jnp.asarray(C), surv_ok, dist, k=k_eff, config=kernel,
-    )
+    with obs.span("rerank", kind="device", survivors=R):
+        dists, slot2 = kops.rank_candidates(
+            Qb, jnp.asarray(C), surv_ok, dist, k=k_eff, config=kernel,
+        )
+        if tracing:
+            jax.block_until_ready(dists)
     slots = jnp.take_along_axis(surv_idx, slot2, axis=1)
     res = assemble_result(
         index, dists, slots, cand_ok, k=k, leaf_radius=radii[0],

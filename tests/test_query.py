@@ -337,6 +337,43 @@ def test_explain_names_pipeline_and_legs():
     assert "valid_mask" in text and "merge_topk" in text
 
 
+def test_describe_is_the_structured_explain():
+    """Satellite (DESIGN.md §3.11): ``describe()`` is the machine-readable
+    plan record — ``explain()`` is rendered from it, so the two can never
+    drift; exporters/tests read the dict instead of parsing the string."""
+    idx, data = _build(store="int8")
+    plan = idx.plan(Query(k=5, execution="two_stage", rerank_width=32))
+    d = plan.describe()
+    assert d["pipeline"] == "two_stage"
+    assert d["effective_pipeline"] == "two_stage"
+    assert d["query"]["k"] == 5 and d["query"]["rerank_width"] == 32
+    assert d["capabilities"] == plan.caps._asdict()
+    assert d["online_legs"]["tombstone_mask"] is False
+    assert d["online_legs"]["delta"] is False
+    import json
+    json.dumps(d)  # export-ready: plain JSON-serialisable values only
+    # a stamped kernel config exports field-wise
+    from repro.kernels.ops import KernelConfig
+    dk = idx.plan(Query(k=5, execution="two_stage", rerank_width=32,
+                        kernel=KernelConfig(bm=64))).describe()
+    assert isinstance(dk["kernel"], dict) and dk["kernel"]["bm"] == 64
+    # the human string is a pure rendering of the dict
+    text = plan.explain()
+    assert d["lowering"] in text
+    assert f"k={d['query']['k']}" in text
+    # the ∞-rerank refinement shows up structurally, not just as prose
+    inf = idx.plan(Query(k=5, execution="two_stage", rerank_width=None))
+    assert inf.describe()["effective_pipeline"] == "two_stage_inf"
+    scan_only = idx.plan(Query(k=5, execution="two_stage", rerank_width=32,
+                               exact_rerank=False))
+    assert scan_only.describe()["effective_pipeline"] == "two_stage_scan"
+    # a dirty index flips the online legs on
+    _dirty(idx, data)
+    d2 = idx.plan(Query(k=5, execution="beam")).describe()
+    assert d2["online_legs"]["tombstone_mask"] is True
+    assert d2["online_legs"]["delta"] is True
+
+
 def test_tombstone_valid_mask_device_cache():
     """Satellite: the unpacked device mask is cached on the TombstoneSet —
     repeated searches between deletes reuse one array; a new delete (and

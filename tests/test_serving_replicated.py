@@ -396,5 +396,36 @@ def test_long_faulted_schedule_zero_caller_errors(built):
         assert all(r.alive for r in rs.replicas)
         # and the fleet converged: replay left every replica at the log head
         assert all(r.applied_seq == rs.log.last_seq for r in rs.replicas)
+        # The event log (DESIGN.md §3.11) must show the exact health
+        # lifecycle per replica: transitions chain state-to-state (each
+        # edge's "from" is the previous edge's "to", starting healthy), and
+        # every ejection recovers through eject -> half_open -> readmit.
+        transitions = [e for e in router.events() if "from" in e]
+        assert transitions, "faulted soak produced no health transitions"
+        ejected_rids = {e["replica"] for e in transitions
+                        if e["event"] == "eject"}
+        assert ejected_rids, "no replica was ever ejected under faults"
+        for rid in {e["replica"] for e in transitions}:
+            chain = [e for e in transitions if e["replica"] == rid]
+            state = "healthy"
+            for e in chain:
+                assert e["from"] == state, (
+                    f"r{rid}: transition {e} does not chain from {state}"
+                )
+                state = e["to"]
+            events = [e["event"] for e in chain]
+            for ej in (i for i, ev in enumerate(events) if ev == "eject"):
+                rest = events[ej + 1:]
+                assert "half_open" in rest and \
+                    "readmit" in rest[rest.index("half_open"):], (
+                        f"r{rid}: ejection at step {ej} never recovered "
+                        f"via half_open -> readmit: {events}"
+                    )
+            # the soak's convergence loop means nobody ends ejected
+            assert state == "healthy", f"r{rid} finished in state {state}"
+        # the per-edge transition counters agree with the event log
+        counted = sum(v for k, v in router.stats.items()
+                      if k.startswith("transition_"))
+        assert counted == len(transitions)
     finally:
         router.close(close_replicas=True)
