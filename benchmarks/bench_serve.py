@@ -16,6 +16,15 @@ A third ``telemetry`` scenario (DESIGN.md §3.11) serves a store-backed
 instrumentation overhead (``--smoke`` asserts non-zero engine/router/store
 series, a complete exemplar trace, and overhead ratio >= 0.95).
 
+A fourth ``quality`` scenario (DESIGN.md §3.12) adds shadow recall
+sampling, the plan-cost JSONL log and SLO burn alerts on the same tier,
+asserting: online recall within +-0.05 of the offline recall over the
+same served queries; a non-empty re-loadable cost log; >= 1 SLO burn
+alert under an injected wedge and zero fault-free; and instrumented +
+shadow-sampled throughput >= 0.93x uninstrumented. The run always leaves
+``experiments/serve_metrics.json`` behind for
+``python -m repro.obs.report`` (the CI offline-report contract).
+
 Scenarios: ``fault_free``, and ``wedged`` — a deterministic ``FaultPlan``
 wedges 1 of 4 replicas mid-run (its batch handler stalls per dispatch).
 The router must route around it: hedges rescue the stalled requests,
@@ -319,6 +328,207 @@ def telemetry(smoke: bool = False, seed: int = 0):
         router.close(close_replicas=True)
 
 
+def quality(smoke: bool = False, seed: int = 0,
+            costlog_path: str = "experiments/serve_costlog.jsonl"):
+    """Quality & SLO scenario (DESIGN.md §3.12): a store-backed two_stage
+    tier with shadow recall sampling, a plan-cost log on the traced
+    requests, and an SLO tracker with multi-rate burn alerts. The four
+    acceptance bars (smoke and full):
+
+      * the online (shadow-sampled) recall estimate lands within +-0.05 of
+        the offline recall computed over the same served queries,
+      * the cost log is non-empty and loads back with the documented
+        schema (v/seq/latency_s/spans + plan features),
+      * the SLO tracker fires >= 1 burn alert under an injected wedge and
+        ZERO on the fault-free leg,
+      * instrumented + shadow-sampled throughput stays >= 0.93x the
+        uninstrumented tier (same alternating best-of guard as telemetry).
+    """
+    obs.reset()  # before building: engines pre-bind series handles
+    if smoke:
+        n, gl, n_queries, n_probe, trials = 1500, 64, 240, 96, 3
+        n_slo, n_wedged = 60, 36
+    else:
+        n, gl, n_queries, n_probe, trials = 6000, 256, 480, 200, 3
+        n_slo, n_wedged = 120, 48
+    k = 10
+    data = make_dataset("dense_embed", n=n + 64, seed=seed)
+    train, test = data[:n], data[n:]
+    idx = PDASCIndex.build(train, gl=gl, distance="euclidean",
+                           radius_quantile=0.35, store="int8",
+                           store_block=128)
+    idx.release_dense_payload()
+    query = Query(k=k, execution="two_stage", beam=32, rerank_width=64,
+                  with_stats=False)
+    rs = ReplicaSet(idx, query, n_replicas=2, batch_size=8, max_wait_ms=1.0)
+    os.makedirs(os.path.dirname(costlog_path) or ".", exist_ok=True)
+    if os.path.exists(costlog_path):
+        os.remove(costlog_path)
+    from repro.obs import costlog as costlog_lib
+
+    costlog = obs.CostLog(costlog_path)
+    router = Router(rs, RouterConfig(deadline_s=30.0, seed=seed,
+                                     trace_every=4, shadow_every=4),
+                    costlog=costlog)
+    est = router.quality
+    try:
+        warm = [r.submit(test[0]) for r in rs.replicas]
+        for req in warm:
+            req.wait(timeout=300)
+        # Warm the shadow path too (reference read + exact-kNN compile on
+        # the worker) so the overhead guard never times a compile.
+        for i in range(4):
+            router.search(test[i])
+        assert est.drain(timeout=120), "quality: shadow warmup never drained"
+
+        # -- (d) overhead guard: uninstrumented vs instrumented+shadowed --
+        every_n, router._sampler.every_n = router._sampler.every_n, 0
+        qps_off, qps_on = [], []
+        for t in range(trials):
+            obs.set_enabled(False)
+            est.every_n = 0
+            qps_off.append(_closed_loop_seq(router, test, n=n_probe,
+                                            seed=seed + 10 + t))
+            obs.set_enabled(True)
+            est.every_n = 4
+            qps_on.append(_closed_loop_seq(router, test, n=n_probe,
+                                           seed=seed + 10 + t))
+        router._sampler.every_n = every_n
+        est.drain(timeout=120)
+        overhead = dict(
+            qps_uninstrumented=round(max(qps_off), 1),
+            qps_instrumented=round(max(qps_on), 1),
+            ratio=round(max(qps_on) / max(qps_off), 3),
+            trials=trials, probe_queries=n_probe, shadow_every=4,
+        )
+
+        # -- (a) measured pass: online estimate vs offline ground truth ---
+        est.reset_stats()
+        rng = np.random.default_rng(seed + 1)
+        rows_served = []  # (test row, served ids) for EVERY query
+        lats = []
+        for i in rng.integers(0, len(test), n_queries):
+            res = router.search(test[int(i)])
+            rows_served.append((int(i), np.asarray(res.ids).reshape(-1)))
+            lats.append(res.latency_s)
+        assert est.drain(timeout=120), "quality: shadow queue never drained"
+        online = est.estimate()
+        from repro.baselines.exact import exact_knn
+
+        q_rows = np.array([r for r, _ in rows_served])
+        _, gt = exact_knn(test[q_rows], train, distance="euclidean", k=k)
+        gt = np.asarray(gt)
+        offline = float(np.mean([
+            len(set(int(x) for x in served if x >= 0)
+                & set(int(x) for x in gt[j])) / k
+            for j, (_, served) in enumerate(rows_served)
+        ]))
+
+        # -- (b) the cost log loads back with the documented schema -------
+        costlog.close()
+        recs = costlog_lib.load(costlog_path)
+
+        # -- (c) SLO: zero alerts fault-free, >= 1 under a wedge ----------
+        p99_s = float(np.percentile(np.array(lats), 99))
+        target_s = max(5.0 * p99_s, 0.25)
+        spec = obs.SLOSpec(latency_p99_s=target_s, window_s=8.0,
+                           fast_window_frac=0.25, min_samples=4)
+        slo_ff = obs.SLOTracker(spec)
+        router.slo = slo_ff  # hooks pick the tracker up per request
+        for i in rng.integers(0, len(test), n_slo):
+            router.search(test[int(i)])
+            slo_ff.evaluate()
+    finally:
+        router.close(close_replicas=True)
+
+    # Wedged leg: 1 of 2 replicas stalls 0.8s per dispatch mid-window —
+    # far past the derived latency target. Hedging is off so the stalls
+    # stay caller-visible as latency (not rescued), which is exactly what
+    # the burn alert must catch.
+    wedge_plan = f"wedge:r1@6+{n_wedged // 3}:0.8"
+    rs2 = ReplicaSet(idx, query, n_replicas=2, batch_size=8,
+                     max_wait_ms=1.0, degraded_query=degraded(query),
+                     fault_plan=FaultPlan.parse(wedge_plan))
+    slo_wedged = obs.SLOTracker(spec)
+    router2 = Router(rs2, RouterConfig(deadline_s=30.0, hedge=False,
+                                       seed=seed),
+                     slo=slo_wedged)
+    try:
+        warm = [r.submit(test[0]) for r in rs2.replicas]
+        for req in warm:
+            req.wait(timeout=300)
+        rng2 = np.random.default_rng(seed + 2)
+        for i in rng2.integers(0, len(test), n_wedged):
+            router2.search(test[int(i)])
+            slo_wedged.evaluate()
+    finally:
+        router2.close(close_replicas=True)
+
+    row = dict(
+        scenario="quality",
+        config=dict(dataset="dense_embed", n=n, gl=gl,
+                    n_queries=n_queries, store="int8",
+                    execution="two_stage", n_replicas=2,
+                    trace_every=4, shadow_every=4, k=k),
+        online_recall=round(online["recall"], 4),
+        online_wilson=[round(online["wilson_lo"], 4),
+                       round(online["wilson_hi"], 4)],
+        shadow_samples=online["queries"],
+        offline_recall=round(offline, 4),
+        recall_gap=round(abs(online["recall"] - offline), 4),
+        cost_records=len(recs),
+        costlog_path=costlog_path,
+        slo=dict(latency_target_ms=round(target_s * 1e3, 1),
+                 fault_free_alerts=sum(slo_ff.alert_counts().values()),
+                 wedged_alerts=sum(slo_wedged.alert_counts().values()),
+                 wedged_events=slo_wedged.events()[:8],
+                 faults=wedge_plan),
+        overhead=overhead,
+    )
+    print(f"[serve] quality: online={row['online_recall']} "
+          f"offline={row['offline_recall']} gap={row['recall_gap']} "
+          f"({row['shadow_samples']} shadow samples) "
+          f"cost_records={row['cost_records']} "
+          f"slo_alerts=ff:{row['slo']['fault_free_alerts']}/"
+          f"wedged:{row['slo']['wedged_alerts']} "
+          f"overhead_ratio={overhead['ratio']}", flush=True)
+
+    # -- the CI contract (smoke and full) ---------------------------------
+    assert online["recall"] is not None and online["queries"] >= 30, (
+        f"quality: too few shadow samples answered: {online}"
+    )
+    assert abs(online["recall"] - offline) <= 0.05, (
+        f"quality: online estimate {online['recall']:.3f} vs offline "
+        f"{offline:.3f} over the same served queries (gap > 0.05)"
+    )
+    assert len(recs) > 0, "quality: the cost log is empty"
+    for key in ("v", "seq", "latency_s", "spans", "pipeline",
+                "effective_pipeline", "query", "index", "counts"):
+        assert key in recs[0], (
+            f"quality: cost record is missing {key!r}: {sorted(recs[0])}"
+        )
+    assert recs[0]["pipeline"] == "two_stage" and \
+        recs[0]["index"]["store"] == "int8" and \
+        "code_format" in recs[0]["index"], (
+            f"quality: cost record carries the wrong plan features: "
+            f"{recs[0]}"
+        )
+    assert sum(slo_ff.alert_counts().values()) == 0, (
+        f"quality: SLO burn alert fired on the fault-free leg: "
+        f"{slo_ff.events()}"
+    )
+    assert sum(slo_wedged.alert_counts().values()) >= 1, (
+        f"quality: no SLO burn alert under {wedge_plan}: "
+        f"{slo_wedged.status()}"
+    )
+    assert overhead["ratio"] >= 0.93, (
+        f"quality: instrumented+shadowed throughput is "
+        f"{overhead['ratio']:.3f}x uninstrumented (< 0.93x bound): "
+        f"{overhead}"
+    )
+    return row
+
+
 def run(smoke: bool = False, seed: int = 0):
     idx, test, cfg = _build(smoke, seed)
     query = Query(k=10, execution="beam", beam=32, with_stats=False)
@@ -395,9 +605,16 @@ def main(argv=None):
 
     rows = run(smoke=args.smoke, seed=args.seed)
     telemetry_row = telemetry(smoke=args.smoke, seed=args.seed)
+    quality_row = quality(smoke=args.smoke, seed=args.seed)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(rows + [telemetry_row], f, indent=1)
+        json.dump(rows + [telemetry_row, quality_row], f, indent=1)
+    # Always (smoke included) leave a metrics snapshot on disk: CI feeds it
+    # to ``python -m repro.obs.report`` as the offline-report contract.
+    metrics_out = os.path.join(os.path.dirname(args.out) or ".",
+                               "serve_metrics.json")
+    obs.MetricsDumper(obs.registry(), metrics_out, period_s=0).dump()
+    print(f"[serve] wrote {metrics_out}")
     if not args.smoke:
         payload = dict(
             bench="replicated_serving_under_faults",
@@ -407,6 +624,7 @@ def main(argv=None):
                 "caller-visible errors",
             rows=rows,
             telemetry=telemetry_row,
+            quality=quality_row,
         )
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=1)

@@ -19,7 +19,14 @@ To serve an index behind the batching engine, see ``examples/serve_ann.py``
 / ``python -m repro.launch.serve``; add ``--replicas 4`` for the replicated
 fault-tolerant tier (health-checked replica pool + retry/hedge router,
 DESIGN.md §3.10) and ``--faults "wedge:r1@20+8"`` to watch it route around
-a deterministically injected fault.
+a deterministically injected fault. For the observability surface add
+``--shadow-sample 8`` (online recall estimate with a Wilson interval,
+re-answered exactly off the hot path), ``--trace-sample 16 --cost-log
+experiments/costlog.jsonl`` (one JSONL plan-cost record per traced
+request), ``--slo-p99-ms 50`` (multi-rate error-budget burn alerts) and
+``--dash`` (live terminal dashboard); ``python -m repro.obs.report
+--metrics experiments/serve_metrics.json`` renders a dump offline
+(DESIGN.md §3.12).
 """
 
 import numpy as np
@@ -78,7 +85,24 @@ def main():
                            radius_quantile=0.6)
     res = idx.plan(Query(k=10, execution="dense"))(d_test)
     _, gt = exact_knn(d_test, d_train, distance="jaccard", k=10)
-    print(f"jaccard    recall@10 = {recall(np.asarray(res.ids), np.asarray(gt)):.3f}")
+    rec = recall(np.asarray(res.ids), np.asarray(gt))
+    print(f"jaccard    recall@10 = {rec:.3f}")
+
+    # --- observability tour (DESIGN.md §3.11/§3.12) -------------------------
+    # Everything above also reported into the process-wide repro.obs
+    # registry; recall@k is k Bernoulli trials per query, so an estimate
+    # over a sample carries a Wilson score interval (what the serving
+    # tier's --shadow-sample online estimator publishes live).
+    from repro import obs
+
+    trials = int(np.asarray(gt).size)
+    lo, hi = obs.wilson(rec * trials, trials)
+    print(f"           95% Wilson interval over {trials} trials: "
+          f"[{lo:.3f}, {hi:.3f}]")
+    snap = obs.snapshot()
+    print("\nplan executions by pipeline (obs.snapshot()):")
+    for row in snap[obs.names.PLAN_EXECUTIONS]["series"]:
+        print(f"  {row['labels']}: {int(row['value'])}")
 
 
 if __name__ == "__main__":

@@ -72,6 +72,16 @@ class PDASCArchConfig:
     # Telemetry (DESIGN.md §3.11): trace 1 request in N through the router
     # (deterministic by request seq; 0 = off).
     router_trace_every: int = 0
+    # Quality & SLO observability (DESIGN.md §3.12): shadow-sample 1 served
+    # request in N for online recall estimation (0 = off), plus the serve
+    # SLO — p99 latency target, recall floor, availability target and the
+    # rolling window the burn alerts evaluate over. None disables an
+    # objective.
+    router_shadow_every: int = 0
+    slo_latency_p99_s: float = None
+    slo_recall_floor: float = None
+    slo_availability: float = 0.999
+    slo_window_s: float = 60.0
 
     def kernel_config(self) -> KernelConfig:
         # Built field-wise from KernelConfig's own field list so a knob added
@@ -112,9 +122,24 @@ class PDASCArchConfig:
             eject_failures=self.router_eject_failures,
             probe_cooldown_s=self.router_probe_cooldown_s,
             trace_every=self.router_trace_every,
+            shadow_every=self.router_shadow_every,
         )
         base.update(overrides)
         return RouterConfig(**base)
+
+    def slo_spec(self, **overrides):
+        """The arch's serve SLO as a ``repro.obs.SLOSpec`` (pass the
+        resulting ``obs.SLOTracker`` to ``Router(..., slo=...)``)."""
+        from repro.obs.slo import SLOSpec
+
+        base = dict(
+            latency_p99_s=self.slo_latency_p99_s,
+            recall_floor=self.slo_recall_floor,
+            availability=self.slo_availability,
+            window_s=self.slo_window_s,
+        )
+        base.update(overrides)
+        return SLOSpec(**base)
 
 
 def config() -> PDASCArchConfig:

@@ -23,6 +23,16 @@ takes a deterministic fault plan (``kind:rR@START+DURATION[:DELAY]``,
 replica batch handlers; the run reports caller-visible errors (expected:
 zero), retries, hedges and the health event log alongside the latency
 percentiles.
+
+Quality & SLO observability (DESIGN.md §3.12): ``--shadow-sample N``
+re-answers 1 served query in N exactly on a background worker and prints
+the online recall estimate (with its Wilson interval) at exit;
+``--cost-log PATH`` appends one JSONL cost record per traced request
+(requires ``--trace-sample``); ``--slo-p99-ms`` / ``--slo-recall-floor``
+attach an SLO tracker with multi-rate burn alerts (replicated path);
+``--dash`` renders a live terminal dashboard while serving; and
+``--trace-dump PATH`` writes the retained sampled traces as JSON at exit
+(both serve paths — feed it to ``python -m repro.obs.report``).
 """
 
 from __future__ import annotations
@@ -94,6 +104,31 @@ def _parse():
                    help="trace 1 request in N (deterministic by request "
                         "seq; 0 = off) and print the slowest sampled "
                         "trace as a text flamegraph at exit")
+    p.add_argument("--trace-dump", default=None, metavar="PATH",
+                   help="write every retained sampled trace as JSON to "
+                        "PATH at exit (needs --trace-sample; readable by "
+                        "python -m repro.obs.report --trace PATH)")
+    # Quality & SLO observability (DESIGN.md §3.12).
+    p.add_argument("--shadow-sample", type=int, default=0, metavar="N",
+                   help="shadow-sample 1 served query in N and re-answer "
+                        "it exactly off the hot path; prints the online "
+                        "recall estimate with its Wilson interval at exit "
+                        "(0 = off)")
+    p.add_argument("--cost-log", default=None, metavar="PATH",
+                   help="append one JSONL plan-cost record per traced "
+                        "request to PATH (needs --trace-sample)")
+    p.add_argument("--slo-p99-ms", type=float, default=None,
+                   help="SLO latency target: at most 1%% of requests may "
+                        "take longer (replicated path)")
+    p.add_argument("--slo-recall-floor", type=float, default=None,
+                   help="SLO recall floor for shadow-sampled estimates "
+                        "(needs --shadow-sample; replicated path)")
+    p.add_argument("--slo-window-s", type=float, default=30.0,
+                   help="SLO rolling-window length in seconds")
+    p.add_argument("--dash", action="store_true",
+                   help="render a live terminal dashboard (QPS, latency, "
+                        "recall estimate, SLO budget, replica health) "
+                        "while serving")
     # Kernel-layer block knobs (forwarded as a KernelConfig to the search).
     kd = KernelConfig()
     p.add_argument("--bm", type=int, default=kd.bm)
@@ -120,12 +155,25 @@ def _serve_replicated(args, idx, kernel, train, test):
         epoch_kwargs=dict(delta_fill=args.compact_delta_fill,
                           tombstone_ratio=args.compact_tombstone_ratio),
     )
+    slo = None
+    if args.slo_p99_ms is not None or args.slo_recall_floor is not None:
+        slo = obs.SLOTracker(obs.SLOSpec(
+            latency_p99_s=(args.slo_p99_ms / 1e3
+                           if args.slo_p99_ms is not None else None),
+            recall_floor=args.slo_recall_floor,
+            window_s=args.slo_window_s,
+        ))
+    costlog = obs.CostLog(args.cost_log) if args.cost_log else None
     router = Router(replica_set, RouterConfig(
         deadline_s=args.deadline_ms / 1e3, seed=args.seed,
-        trace_every=args.trace_sample))
+        trace_every=args.trace_sample, shadow_every=args.shadow_sample),
+        slo=slo, costlog=costlog)
     print(f"[serve] replicated tier: {args.replicas} replicas"
           + (f", faults={args.faults}" if plan else ", fault-free"))
     router.search(test[0])  # warmup compile (every replica shares the jits)
+    dash = None
+    if args.dash:
+        dash = obs.Dashboard(quality=router.quality, slo=slo, router=router)
 
     rng = np.random.default_rng(args.seed)
     q_rows = rng.integers(0, len(test), args.queries)
@@ -153,6 +201,19 @@ def _serve_replicated(args, idx, kernel, train, test):
         retries += res.retries
         hedges += int(res.hedged)
         degraded_n += int(res.degraded)
+    est = None
+    if router.quality is not None:
+        router.quality.drain()
+        est = router.quality.estimate()
+    if slo is not None:
+        slo.evaluate()
+    if dash is not None:
+        dash.close()
+    if args.trace_dump:
+        with open(args.trace_dump, "w") as f:
+            f.write(router.traces.to_json(indent=1))
+        print(f"[serve] wrote {len(router.traces)} traces "
+              f"to {args.trace_dump}")
     router.close(close_replicas=True)
 
     lat_ms = np.array(lat) * 1e3
@@ -162,6 +223,20 @@ def _serve_replicated(args, idx, kernel, train, test):
           f"p99={np.percentile(lat_ms, 99):.1f}ms "
           f"retries={retries} hedges={hedges} degraded={degraded_n}")
     print(f"[serve] health events: {counts or '{}'}")
+    if est is not None:
+        rec = est["recall"]
+        print(f"[serve] online recall estimate: "
+              + (f"{rec:.3f} [{est['wilson_lo']:.3f}, "
+                 f"{est['wilson_hi']:.3f}] over {est['queries']} shadow "
+                 f"samples" if rec is not None else "no samples answered"))
+    if slo is not None:
+        print(f"[serve] SLO status: {slo.status()}")
+        for ev in slo.events():
+            print(f"[serve]   slo event: {ev}")
+    if costlog is not None:
+        costlog.close()
+        print(f"[serve] wrote {len(costlog)} cost records "
+              f"to {args.cost_log}")
     if args.trace_sample:
         ex = router.traces.exemplar()
         if ex is not None:
@@ -256,6 +331,14 @@ def main():
     # created at submit time (there is no router in front), the engine
     # records queue/batch/execute spans under its root.
     sampler = obs.TraceSampler(args.trace_sample)
+    # Shadow recall estimation + cost recording (DESIGN.md §3.12): no
+    # router here, so the driver feeds both directly from the query loop.
+    est = None
+    if args.shadow_sample:
+        est = obs.RecallEstimator(handle if handle is not None else idx,
+                                  every_n=args.shadow_sample)
+    costlog = obs.CostLog(args.cost_log) if args.cost_log else None
+    dash = obs.Dashboard(quality=est) if args.dash else None
 
     rng = np.random.default_rng(args.seed)
     q_rows = rng.integers(0, len(test), args.queries)
@@ -293,9 +376,16 @@ def main():
         _, ids = req.wait(timeout=60)
         lat.append(time.time() - t0)
         results.append(ids)
+        if est is not None and est.should_sample(j):
+            est.observe(j, test[i], ids,
+                        pipeline=handler.describe()["effective_pipeline"])
         if tr is not None:
             tr.finish(outcome="ok")
+            if costlog is not None:
+                costlog.record(tr, handler.describe())
     engine.close()
+    if dash is not None:
+        dash.close()
 
     # recall vs exact — over the *live* post-churn point set when churning
     if handle is not None:
@@ -325,12 +415,30 @@ def main():
                  f"epoch_swaps={handle.swaps} "
                  f"epoch={handle.current.epoch}")
     print(line)
+    if est is not None:
+        est.drain()
+        e = est.estimate()
+        print(f"[serve] online recall estimate: "
+              + (f"{e['recall']:.3f} [{e['wilson_lo']:.3f}, "
+                 f"{e['wilson_hi']:.3f}] over {e['queries']} shadow "
+                 f"samples" if e["recall"] is not None
+                 else "no samples answered"))
+        est.close()
+    if costlog is not None:
+        costlog.close()
+        print(f"[serve] wrote {len(costlog)} cost records "
+              f"to {args.cost_log}")
     if args.trace_sample:
         ex = sampler.buffer.exemplar()
         if ex is not None:
             print(f"[serve] slowest sampled trace "
                   f"({len(sampler.buffer)} retained):")
             print(ex.render())
+    if args.trace_dump:
+        with open(args.trace_dump, "w") as f:
+            f.write(sampler.buffer.to_json(indent=1))
+        print(f"[serve] wrote {len(sampler.buffer)} traces "
+              f"to {args.trace_dump}")
     if dumper is not None:
         dumper.close()
 

@@ -13,8 +13,10 @@ See DESIGN.md §3.11. Quick taste::
     ...
     t.finish(); print(t.render())           # text flamegraph
 
-Only stdlib is imported here — every layer (including kernels/autotune,
-which loads at import time) can depend on obs without cycles.
+Only stdlib (+numpy) is imported here — every layer (including
+kernels/autotune, which loads at import time) can depend on obs without
+cycles; the recall estimator's jax-side work (``baselines.exact``,
+``online.live_dataset``) is imported lazily inside its worker.
 """
 
 from repro.obs import names
@@ -46,6 +48,10 @@ from repro.obs.trace import (
     is_tracing,
     span,
 )
+from repro.obs.quality import RecallEstimator, wilson
+from repro.obs.costlog import CostLog, build_record, load_costlog
+from repro.obs.slo import SLOSpec, SLOTracker
+from repro.obs.report import Dashboard, build_report, render_dashboard
 
 __all__ = [
     "names",
@@ -75,4 +81,15 @@ __all__ = [
     "active_spans",
     "is_tracing",
     "span",
+    # quality / cost / SLO / report (DESIGN.md §3.12)
+    "RecallEstimator",
+    "wilson",
+    "CostLog",
+    "build_record",
+    "load_costlog",
+    "SLOSpec",
+    "SLOTracker",
+    "Dashboard",
+    "build_report",
+    "render_dashboard",
 ]

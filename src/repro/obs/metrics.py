@@ -129,6 +129,11 @@ class Histogram(_Series):
         if not self._registry.enabled:
             return
         v = float(v)
+        if not math.isfinite(v):
+            # A NaN/inf observation would poison sum/min/max (and NaN
+            # compares false everywhere, so it would land in bucket 0).
+            # Swallow it: a broken caller must not corrupt the series.
+            return
         i = bisect.bisect_left(self.bounds, v)
         with self._lock:
             self.counts[i] += 1
@@ -288,13 +293,27 @@ class MetricsRegistry:
 # ---------------------------------------------------------------------------
 
 
+def _escape_label_value(v) -> str:
+    """Escape a label value per the Prometheus text exposition format:
+    backslash, double-quote and newline must be backslash-escaped inside
+    the quoted value."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    # HELP lines escape backslash and newline (quotes are legal there).
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(labels: dict, extra: Optional[dict] = None) -> str:
     items = dict(labels)
     if extra:
         items.update(extra)
     if not items:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+    body = ",".join(f'{k}="{_escape_label_value(v)}"'
+                    for k, v in sorted(items.items()))
     return "{" + body + "}"
 
 
@@ -311,7 +330,8 @@ def to_prometheus(snapshot: dict) -> str:
     ``_count`` families)."""
     lines = []
     for name, entry in sorted(snapshot.items()):
-        lines.append(f"# HELP {name} {entry.get('help', '')}".rstrip())
+        lines.append(
+            f"# HELP {name} {_escape_help(entry.get('help', ''))}".rstrip())
         lines.append(f"# TYPE {name} {entry['kind']}")
         for row in entry["series"]:
             labels = row["labels"]

@@ -5,7 +5,7 @@ Every series the repo exports is named here, following the
 
 * ``subsystem`` — one of :data:`SUBSYSTEMS` (the layer that owns the
   series: ``engine``, ``router``, ``plan``, ``store``, ``online``,
-  ``autotune``, ``trace``);
+  ``autotune``, ``trace``, ``quality``, ``slo``);
 * ``name`` — one or more snake_case words describing the quantity;
 * ``unit`` — the trailing token, one of :data:`UNITS`: ``total``
   (monotonic counter), ``seconds`` / ``bytes`` (histogram or counter in
@@ -25,6 +25,7 @@ import re
 
 SUBSYSTEMS = (
     "engine", "router", "plan", "store", "online", "autotune", "trace",
+    "quality", "slo",
 )
 
 UNITS = ("total", "seconds", "bytes", "ratio", "count")
@@ -75,6 +76,7 @@ PLAN_COMPILES = "plan_compiles_total"
 PLAN_CACHE_HITS = "plan_cache_hits_total"
 PLAN_REPLANS = "plan_replans_total"
 PLAN_EXECUTIONS = "plan_executions_total"
+PLAN_COST_RECORDS = "plan_cost_records_total"
 
 # --------------------------------------------------------------------------
 # store — the tiered leaf store's out-of-core payload (store/leaf_store.py)
@@ -84,6 +86,7 @@ STORE_HITS = "store_granule_hits_total"
 STORE_FETCH_BYTES = "store_granule_fetch_bytes"
 STORE_PREFETCHED = "store_prefetch_granules_total"
 STORE_PREFETCH_USEFUL = "store_prefetch_useful_total"
+STORE_CACHE_GRANULES = "store_granule_cache_count"
 
 # --------------------------------------------------------------------------
 # online — live writes / epoch swaps (online/epoch.py)
@@ -107,6 +110,29 @@ AUTOTUNE_RETUNES = "autotune_retunes_total"
 # --------------------------------------------------------------------------
 TRACE_SAMPLED = "trace_sampled_total"
 TRACE_FINISHED = "trace_finished_total"
+
+# --------------------------------------------------------------------------
+# quality — the online recall estimator (obs/quality.py)
+# --------------------------------------------------------------------------
+QUALITY_RECALL = "quality_recall_ratio"
+QUALITY_RECALL_MEAN = "quality_recall_mean_ratio"
+QUALITY_RECALL_LO = "quality_recall_wilson_lo_ratio"
+QUALITY_RECALL_HI = "quality_recall_wilson_hi_ratio"
+QUALITY_SAMPLED = "quality_shadow_sampled_total"
+QUALITY_ANSWERED = "quality_shadow_answered_total"
+QUALITY_DROPPED = "quality_shadow_dropped_total"
+QUALITY_ERRORS = "quality_shadow_errors_total"
+QUALITY_PENDING = "quality_shadow_pending_count"
+QUALITY_LAG = "quality_shadow_lag_seconds"
+
+# --------------------------------------------------------------------------
+# slo — the declarative SLO tracker (obs/slo.py)
+# --------------------------------------------------------------------------
+SLO_SLI = "slo_sli_ratio"
+SLO_BURN = "slo_burn_rate_ratio"
+SLO_BUDGET = "slo_budget_remaining_ratio"
+SLO_ALERTS = "slo_alerts_total"
+SLO_EVALUATIONS = "slo_evaluations_total"
 
 CATALOGUE: dict[str, tuple[str, str]] = {
     # name -> (kind, help)
@@ -140,12 +166,16 @@ CATALOGUE: dict[str, tuple[str, str]] = {
     PLAN_CACHE_HITS: ("counter", "plan-cache hits, by pipeline"),
     PLAN_REPLANS: ("counter", "stale-fingerprint transparent replans"),
     PLAN_EXECUTIONS: ("counter", "plan executions, by pipeline"),
+    PLAN_COST_RECORDS: ("counter", "plan-execution cost records appended "
+                                   "to the cost log"),
     STORE_FETCHES: ("counter", "granules fetched from the exact payload"),
     STORE_HITS: ("counter", "granule requests served from the LRU"),
     STORE_FETCH_BYTES: ("counter", "bytes fetched from the exact payload"),
     STORE_PREFETCHED: ("counter", "granules warmed by prefetch"),
     STORE_PREFETCH_USEFUL: ("counter", "prefetched granules later hit by a "
                                        "real fetch"),
+    STORE_CACHE_GRANULES: ("gauge", "granules resident in the exact-payload "
+                                    "LRU"),
     ONLINE_WRITES: ("counter", "upsert/delete ops applied, by op"),
     ONLINE_WRITE_ERRORS: ("counter", "write ops that failed per-op"),
     ONLINE_EPOCH_SWAPS: ("counter", "compaction epoch swaps published"),
@@ -157,6 +187,28 @@ CATALOGUE: dict[str, tuple[str, str]] = {
     AUTOTUNE_RETUNES: ("counter", "winners recorded (cache mutations)"),
     TRACE_SAMPLED: ("counter", "requests picked by the 1-in-N sampler"),
     TRACE_FINISHED: ("counter", "sampled traces finished and retained"),
+    QUALITY_RECALL: ("histogram", "per-shadow-sample recall@k, by pipeline "
+                                  "and leg"),
+    QUALITY_RECALL_MEAN: ("gauge", "running recall@k estimate, by pipeline "
+                                   "and leg"),
+    QUALITY_RECALL_LO: ("gauge", "Wilson 95% lower bound on the recall "
+                                 "estimate"),
+    QUALITY_RECALL_HI: ("gauge", "Wilson 95% upper bound on the recall "
+                                 "estimate"),
+    QUALITY_SAMPLED: ("counter", "served queries picked for shadow "
+                                 "re-answering"),
+    QUALITY_ANSWERED: ("counter", "shadow samples answered exactly by the "
+                                  "worker"),
+    QUALITY_DROPPED: ("counter", "shadow samples dropped (queue full)"),
+    QUALITY_ERRORS: ("counter", "shadow re-answers that raised"),
+    QUALITY_PENDING: ("gauge", "shadow samples queued awaiting the worker"),
+    QUALITY_LAG: ("histogram", "serve -> shadow-answer lag per sample"),
+    SLO_SLI: ("gauge", "rolling-window SLI value, by objective"),
+    SLO_BURN: ("gauge", "error-budget burn rate, by objective and window"),
+    SLO_BUDGET: ("gauge", "fraction of the window's error budget left, by "
+                          "objective"),
+    SLO_ALERTS: ("counter", "multi-rate burn alerts fired, by objective"),
+    SLO_EVALUATIONS: ("counter", "SLO evaluation passes run"),
 }
 
 

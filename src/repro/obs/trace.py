@@ -178,6 +178,16 @@ class TraceBuffer:
         with self._lock:
             return list(self._traces)
 
+    def to_dicts(self) -> List[dict]:
+        """Every retained trace as a plain dict (oldest first)."""
+        return [t.to_dict() for t in self.traces()]
+
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        """The full buffer as a JSON document — the ``--trace-dump``
+        format, and the ``repro.obs.report`` CLI's trace input:
+        ``{"traces": [trace.to_dict(), ...]}``."""
+        return json.dumps({"traces": self.to_dicts()}, indent=indent)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._traces)

@@ -338,6 +338,7 @@ class SearchPlan:
         ``effective_pipeline`` (the ∞-rerank / scan-only refinement),
         ``lowering``, ``query`` (the resolved execution-relevant fields),
         ``capabilities`` (the fingerprint this plan bound against),
+        ``index`` (size + code-format features for the cost recorder),
         ``online_legs`` (tombstone mask / delta leg booleans + lowering
         text) and ``kernel`` (the stamped kernel config, or None)."""
         q = self.query
@@ -361,6 +362,11 @@ class SearchPlan:
                 execution=q.execution,
             ),
             capabilities=self.caps._asdict(),
+            index=dict(
+                n_points=getattr(self.index, "n_points", None),
+                code_format=getattr(
+                    getattr(self.index, "store", None), "code_format", None),
+            ),
             online_legs=dict(
                 tombstone_mask=self.caps.tombstones_dirty,
                 tombstone_lowering=(

@@ -605,6 +605,11 @@ class QueryHandler:
         """The plan the next batch would execute (for ``explain()``)."""
         return self.current.plan(self.query)
 
+    def describe(self) -> dict:
+        """Plan features for the next batch (``SearchPlan.describe()``) —
+        what the cost log joins against measured span timings."""
+        return self.plan().describe()
+
     def __call__(self, batch, n_valid):
         res = self.current.plan(self.query)(batch)
         return res.dists, res.ids

@@ -233,6 +233,15 @@ class ReplicaSet:
     def __len__(self) -> int:
         return len(self.replicas)
 
+    def live_index(self):
+        """The current epoch's index from the first live replica (falling
+        back to replica 0 if none is up) — the exact-reference source for
+        the shadow recall estimator and the plan-describe resolver."""
+        for r in self.replicas:
+            if r.alive:
+                return r.handle.current
+        return self.replicas[0].handle.current
+
     # -- write fan-out --------------------------------------------------------
 
     def upsert(self, vectors, ids=None, *, timeout: float = 60.0):

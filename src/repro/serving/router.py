@@ -104,6 +104,11 @@ class RouterConfig:
     # bound the in-memory event log (oldest entries evicted).
     trace_every: int = 0
     events_maxlen: int = 4096
+    # Quality observability (DESIGN.md §3.12): shadow-sample 1 served
+    # request in N (same seq-keyed scheme as trace_every; 0 disables) and
+    # re-answer it exactly off the hot path — the router builds its own
+    # ``obs.RecallEstimator`` over the replica set unless one is passed in.
+    shadow_every: int = 0
 
 
 class RouterResult(NamedTuple):
@@ -168,9 +173,32 @@ class Router:
     callers use :meth:`search` (sync) or :meth:`submit` + ``wait()``."""
 
     def __init__(self, replica_set: ReplicaSet,
-                 config: Optional[RouterConfig] = None):
+                 config: Optional[RouterConfig] = None, *,
+                 quality=None, slo=None, costlog=None):
         self.set = replica_set
         self.cfg = config or RouterConfig()
+        # Quality/SLO/cost observability (DESIGN.md §3.12), all optional:
+        # ``quality`` is an obs.RecallEstimator (built here when
+        # cfg.shadow_every > 0 and none is passed), ``slo`` an
+        # obs.SLOTracker fed from every request completion and evaluated
+        # by the prober thread, ``costlog`` an obs.CostLog appended for
+        # each traced (sampled) request.
+        self.slo = slo
+        self.costlog = costlog
+        self._own_quality = False
+        if quality is None and self.cfg.shadow_every > 0:
+            from repro.obs.quality import RecallEstimator
+
+            quality = RecallEstimator(replica_set,
+                                      every_n=self.cfg.shadow_every)
+            self._own_quality = True
+        self.quality = quality
+        if (self.quality is not None and self.slo is not None
+                and self.quality.on_sample is None):
+            # the shadow worker feeds the SLO recall objective
+            self.quality.on_sample = \
+                lambda recall, pipeline, leg: self.slo.record_recall(recall)
+        self._pipelines: dict = {}  # kind -> effective_pipeline label
         self._rng = random.Random(self.cfg.seed)
         self._lock = threading.Lock()
         self._health = {r.id: _Health() for r in replica_set.replicas}
@@ -218,6 +246,8 @@ class Router:
                 self.stats["rejected"] += 1
                 self._m_rejects.inc()
                 self._log("reject", None, f"inflight={self._inflight}")
+                if self.slo is not None:
+                    self.slo.record_request(0.0, ok=False)
                 raise Overloaded(
                     f"router over capacity ({self._inflight} in flight >= "
                     f"queue_limit={cfg.queue_limit})"
@@ -246,8 +276,16 @@ class Router:
     def close(self, *, close_replicas: bool = False) -> None:
         self._stop.set()
         self._prober.join(timeout=5.0)
+        if self._own_quality and self.quality is not None:
+            self.quality.close()
         if close_replicas:
             self.set.close()
+
+    def health_states(self) -> dict:
+        """replica id -> current health state ("healthy" | "ejected" |
+        "half_open") — the dashboard's per-replica view."""
+        with self._lock:
+            return {rid: h.state for rid, h in self._health.items()}
 
     def events(self) -> list:
         """Snapshot of the bounded in-memory event log (oldest first).
@@ -427,8 +465,10 @@ class Router:
                             degraded=(rr.kind == "degraded"),
                             retries=rr.retries, hedged=rr.hedged)
                     dists, ids = req.result
+                    ids = np.asarray(ids)
+                    self._observe_success(rr, rep, lat, ids)
                     return RouterResult(
-                        dists=np.asarray(dists), ids=np.asarray(ids),
+                        dists=np.asarray(dists), ids=ids,
                         replica=rep.id, degraded=(rr.kind == "degraded"),
                         retries=rr.retries, hedged=rr.hedged, latency_s=lat,
                     )
@@ -458,6 +498,8 @@ class Router:
                 with self._lock:
                     self.stats["deadline_exceeded"] += 1
                 self._m_deadline.inc()
+                if self.slo is not None:
+                    self.slo.record_request(now - rr.t0, ok=False)
                 if now >= rr.deadline:
                     raise DeadlineExceeded(
                         f"request missed its {cfg.deadline_s * 1e3:.0f}ms "
@@ -480,6 +522,8 @@ class Router:
                         raise
             # 4) no live attempt and no retry pending -> the error is final
             if not rr.live() and backoff_until is None:
+                if self.slo is not None:
+                    self.slo.record_request(time.time() - rr.t0, ok=False)
                 if last_err is not None:
                     raise last_err
                 raise ReplicaUnavailable("request has no live attempts")
@@ -507,6 +551,50 @@ class Router:
             rr._evt.clear()
             rr._evt.wait(max(0.0, min(wake) - time.time()))
 
+    # -- quality / SLO / cost hooks (DESIGN.md §3.12) --------------------------
+
+    def _observe_success(self, rr: RouterRequest, rep, lat: float,
+                         ids) -> None:
+        """Feed a served request into the SLO tracker, the shadow recall
+        estimator, and (when traced) the cost log. Telemetry never kills a
+        request: failures here are swallowed, not raised."""
+        try:
+            if self.slo is not None:
+                self.slo.record_request(lat, ok=True)
+            if self.quality is not None:
+                self.quality.observe(
+                    rr.seq, rr.payload, ids,
+                    pipeline=self._pipeline_label(rr.kind),
+                    leg="degraded" if rr.kind == "degraded" else "normal")
+            if self.costlog is not None and rr.trace is not None:
+                self.costlog.record(
+                    rr.trace, self._describe_for(rr.kind),
+                    replica=rep.id, degraded=(rr.kind == "degraded"),
+                    retries=rr.retries, hedged=rr.hedged)
+        except Exception:
+            pass
+
+    def _describe_for(self, kind: str):
+        """The served plan's ``describe()`` for a request kind, resolved
+        against the live epoch; None when no replica can answer."""
+        try:
+            q = (self.set.degraded_query if kind == "degraded"
+                 else self.set.query)
+            if q is None:
+                return None
+            idx = self.set.live_index()
+            return idx.plan(q).describe()
+        except Exception:
+            return None
+
+    def _pipeline_label(self, kind: str) -> str:
+        label = self._pipelines.get(kind)
+        if label is None:
+            d = self._describe_for(kind)
+            label = (d or {}).get("effective_pipeline") or "unknown"
+            self._pipelines[kind] = label
+        return label
+
     def _release(self, rr: RouterRequest) -> None:
         if rr._released:
             return
@@ -526,6 +614,11 @@ class Router:
                 self._probe_once()
             except Exception:
                 pass  # the prober must survive anything a probe throws
+            if self.slo is not None:
+                try:
+                    self.slo.maybe_evaluate()
+                except Exception:
+                    pass  # SLO evaluation must never kill the prober
 
     def _probe_once(self) -> None:
         """Half-open probing: for each ejected replica past its cooldown,

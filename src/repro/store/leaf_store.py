@@ -184,6 +184,7 @@ class ExactSource:
         self._m_fetch_bytes = obs.counter(mnames.STORE_FETCH_BYTES)
         self._m_prefetched = obs.counter(mnames.STORE_PREFETCHED)
         self._m_prefetch_useful = obs.counter(mnames.STORE_PREFETCH_USEFUL)
+        self._m_cached = obs.gauge(mnames.STORE_CACHE_GRANULES)
 
     @property
     def on_disk(self) -> bool:
@@ -225,6 +226,7 @@ class ExactSource:
                 self._prefetched.discard(g)
             while len(self._cache) > self._cache_max:
                 self._cache.popitem(last=False)
+            self._m_cached.set(len(self._cache))
         self._m_fetches.inc()
         self._m_fetch_bytes.inc(blk.nbytes)
         return blk

@@ -31,6 +31,25 @@ def _clear_jax_caches_between_modules():
     jax.clear_caches()
 
 
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    """Reset repro.obs process-wide state after every test.
+
+    The metrics registry and trace context are module-level singletons; a
+    test that increments counters, disables the registry, or leaves a span
+    activated would otherwise leak into every later test's snapshot.
+    Teardown-only (the test runs against whatever it sets up itself), so
+    module-scoped fixtures that pre-bind handles inside a test body keep
+    them live for that test."""
+    yield
+    from repro import obs
+    from repro.obs import trace as _trace
+
+    obs.set_enabled(True)
+    obs.reset()
+    _trace._local.spans = ()
+
+
 def run_in_devices(script: str, n_devices: int = 8, timeout: int = 480) -> str:
     """Run a python snippet in a subprocess with N fake devices.
 

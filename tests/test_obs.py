@@ -166,6 +166,62 @@ def test_snapshot_exports_in_both_formats():
     assert 'engine_wait_seconds_sum 0.5' in text
 
 
+def test_prometheus_label_values_are_escaped_and_reparse():
+    """Exporter hardening: backslashes, quotes and newlines in label
+    values must escape per the Prometheus text format — a scraper parsing
+    the line back recovers the original value exactly."""
+    hostile = {
+        "back\\slash": 'v1"quoted"',
+        "multi\nline": "tab\tok",
+        "plain": 'a\\b"c\nd',
+    }
+    reg = MetricsRegistry(strict=False)
+    for i, (k, v) in enumerate(hostile.items()):
+        reg.counter("engine_esc_total", label=k + v).inc(i + 1)
+    text = to_prometheus(reg.snapshot())
+    assert "\n" == text[-1] or "\n" in text
+    # every sample line must be single-line and round-trip-parseable
+    import re
+
+    seen = {}
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        m = re.fullmatch(
+            r'(?P<name>\w+)(\{label="(?P<val>(?:[^"\\]|\\.)*)"\})? '
+            r'(?P<value>\S+)', line)
+        assert m is not None, f"unparseable exposition line: {line!r}"
+        if m.group("val") is not None:
+            unescaped = (m.group("val")
+                         .replace("\\n", "\n")
+                         .replace('\\"', '"')
+                         .replace("\\\\", "\\"))
+            seen[unescaped] = float(m.group("value"))
+    assert seen == {k + v: float(i + 1)
+                    for i, (k, v) in enumerate(hostile.items())}
+    # HELP text with newlines/backslashes must stay single-line too
+    snap = reg.snapshot()
+    snap["engine_esc_total"]["help"] = "line1\nline2 \\ slash"
+    text2 = to_prometheus(snap)
+    for line in text2.splitlines():
+        if line.startswith("# HELP"):
+            assert "line1\\nline2 \\\\ slash" in line
+
+
+def test_histogram_ignores_non_finite_observations():
+    """A NaN/inf observation must not poison the sum/min/max (one bad
+    latency sample would otherwise wreck every later percentile)."""
+    reg = MetricsRegistry(strict=False)
+    h = reg.histogram("engine_nf_seconds")
+    h.observe(0.5)
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        h.observe(bad)
+    s = h.snapshot()
+    assert s["count"] == 1 and s["sum"] == 0.5
+    assert np.isfinite(s["min"]) and np.isfinite(s["max"])
+    assert h.percentile(0.99) == pytest.approx(0.5)
+
+
 def test_metrics_dumper_writes_snapshots(tmp_path):
     reg = MetricsRegistry(strict=False)
     reg.counter("engine_d_total").inc(5)

@@ -388,12 +388,20 @@ def test_long_faulted_schedule_zero_caller_errors(built):
             t.join()
         assert not errors, errors[:5]
         # every replica that went down must be back up (prober restarts)
+        # AND readmitted by the router: `alive` flips the moment a wedge
+        # fault's dispatch window clears, but an ejected replica only sees
+        # probe traffic (on doubling cooldowns), so routing-level recovery
+        # lands strictly later — keep traffic flowing until the prober has
+        # walked every replica back to healthy.
         deadline = time.time() + 60
-        while time.time() < deadline and not all(
-                r.alive for r in rs.replicas):
+        while time.time() < deadline and not (
+                all(r.alive for r in rs.replicas)
+                and all(s == "healthy"
+                        for s in router.health_states().values())):
             router.search(X[0])
             time.sleep(0.05)
         assert all(r.alive for r in rs.replicas)
+        assert all(s == "healthy" for s in router.health_states().values())
         # and the fleet converged: replay left every replica at the log head
         assert all(r.applied_seq == rs.log.last_seq for r in rs.replicas)
         # The event log (DESIGN.md §3.11) must show the exact health
