@@ -19,11 +19,24 @@ the scan would use (``KernelConfig(auto=True)``, kernels/autotune.py) are
 recorded alongside.
 
     PYTHONPATH=src python -m benchmarks.bench_store [--smoke]
+        [--scenario tiers|remote|all]
         [--out experiments/store.json] [--bench-out BENCH_store.json]
 
 ``--smoke`` runs a tiny config (correctness assertions only, no wall-time
 numbers recorded) so CI can catch storage-path regressions after the tier-1
 suite, matching the ``bench_build.py --smoke`` step.
+
+``--scenario remote`` exercises the out-of-core remote tier (DESIGN.md
+§3.13): ``build_streaming`` consumes the dataset as shards that never
+coexist in memory (the full run is >= 100x the smoke scale: 10 shards x
+12288 rows = 122,880 rows), flushing exact fp32 granules into a
+``SimulatedObjectStore``; two-stage serving then runs with the payload
+behind the host LRU. Asserted: per-node resident bytes (quantised codes +
+host cache, i.e. everything except the navigation tier that is inherently
+O(n*d)) stay below a configured ceiling while ``remote_bytes`` carries the
+whole payload; recall@10 within 0.02 of the same index served with an
+in-memory exact payload. Recorded: the ceiling, cache hit ratio, prefetch
+stats and recall into BENCH_store.json.
 """
 
 from __future__ import annotations
@@ -179,20 +192,136 @@ def run(smoke: bool = False, seed: int = 0):
     return rows
 
 
+def run_remote(smoke: bool = False, seed: int = 0):
+    """The out-of-core remote scenario: streaming build + remote serving."""
+    from repro.store import SimulatedObjectStore, build_streaming
+    from repro.store.leaf_store import ExactSource
+
+    if smoke:
+        shard_rows, n_shards, n_queries = 2048, 3, 32
+        gl, block, rerank, repeats = 64, 64, 64, 1
+        cache_granules, latency_ms = 8, 0.0
+    else:
+        # >= 100x the tiers-scenario smoke scale (1200 rows): ten shards
+        # of 12288 rows = 122,880 rows, never coexisting in host memory
+        # on the build path.
+        shard_rows, n_shards, n_queries = 12288, 10, 256
+        gl, block, rerank, repeats = 256, 256, 128, 2
+        cache_granules, latency_ms = 64, 0.2
+    k, beam = 10, 32
+    n = shard_rows * n_shards
+    data = make_dataset("dense_embed", n=n + n_queries, seed=seed)
+    train, test = data[:n], data[n:]
+    d_dim = train.shape[1]
+    _, gt = exact_knn(test, train, distance="euclidean", k=k)
+    gt = np.asarray(gt)
+
+    obj = SimulatedObjectStore(latency_ms=latency_ms, parallelism=8)
+
+    def shards():
+        for s in range(n_shards):
+            yield train[s * shard_rows:(s + 1) * shard_rows]
+
+    t0 = time.time()
+    idx = build_streaming(
+        shards(), gl=gl, remote=obj, distance="euclidean", store="int8",
+        block=block, method="kmeans", radius_quantile=0.35,
+        cache_granules=cache_granules,
+    )
+    build_s = time.time() - t0
+    dense_payload = n * d_dim * 4
+    # The resident ceiling covers the per-node *payload* memory: quantised
+    # codes + scales + the bounded host cache of decoded granules. The
+    # navigation tier is excluded — it is O(n*d) by construction (prototype
+    # hierarchy) and identical across local/remote payload tiers.
+    ceiling = int(0.40 * dense_payload)
+    print(f"[store] remote: streamed {n_shards} shards ({n} rows) in "
+          f"{build_s:.1f}s; {obj.total_bytes} bytes in object store",
+          flush=True)
+
+    plan = idx.plan(Query(k=k, execution="two_stage", beam=beam,
+                          rerank_width=rerank))
+    res, us_q = _timed(lambda: plan(test), n_queries, repeats)
+    recall_remote = _recall(np.asarray(res.ids), gt)
+    mem = idx.memory_bytes()
+    resident = mem["payload"] + mem["host_cache"]
+    src = idx.store.exact
+    st = src.stats
+    hit_ratio = (st["hits"] / max(st["hits"] + st["fetches"], 1))
+    pf = src.pool.stats
+    assert mem["remote_bytes"] == dense_payload, (
+        "remote tier must carry the whole exact payload", mem)
+    assert resident <= ceiling, (
+        f"resident payload bytes {resident} above the configured ceiling "
+        f"{ceiling} (codes+scales+host cache must stay bounded)", mem)
+
+    # In-memory payload reference: the *same* index (codes, navigation,
+    # radii all identical) served with the exact tier as a host array —
+    # recall deltas isolate the remote tier, and equality of the fetched
+    # bytes validates granule round-tripping.
+    idx.store.exact = ExactSource(src.read_all(), block)
+    idx._plan_cache = None  # capability fingerprint changed (remote flag)
+    res_mem = idx.plan(Query(k=k, execution="two_stage", beam=beam,
+                             rerank_width=rerank))(test)
+    recall_mem = _recall(np.asarray(res_mem.ids), gt)
+    src.close()
+    delta = recall_remote - recall_mem
+    assert abs(delta) <= 0.02, (
+        "remote-payload recall drifted >0.02 from the in-memory path",
+        recall_remote, recall_mem)
+
+    row = dict(
+        bench="store_remote", mode="two_stage_streaming",
+        n=n, n_shards=n_shards, d=d_dim, gl=gl, block=block,
+        rerank_width=rerank, remote_latency_ms=latency_ms,
+        cache_granules=cache_granules,
+        build_s=round(build_s, 2), us_per_q=round(us_q, 1),
+        recall=recall_remote, recall_in_memory=recall_mem,
+        recall_delta_vs_in_memory=round(delta, 4),
+        resident_bytes=int(resident),
+        resident_ceiling_bytes=ceiling,
+        resident_ratio_vs_dense=round(resident / dense_payload, 4),
+        remote_bytes=int(mem["remote_bytes"]),
+        host_cache_bytes=int(mem["host_cache"]),
+        cache_hit_ratio=round(hit_ratio, 4),
+        cache_fetches=int(st["fetches"]), cache_hits=int(st["hits"]),
+        prefetch=dict(pf),
+        remote_ops=dict(obj.op_counts),
+    )
+    print(f"[store] remote serve: recall {recall_remote:.4f} "
+          f"(Δin-memory {row['recall_delta_vs_in_memory']}) "
+          f"{us_q:.1f}us/q  resident {resident}B "
+          f"<= ceiling {ceiling}B ({row['resident_ratio_vs_dense']}x dense) "
+          f"cache hit ratio {hit_ratio:.3f}", flush=True)
+    return [row]
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="tiny config, correctness assertions only (CI)")
+    p.add_argument("--scenario", default="tiers",
+                   choices=["tiers", "remote", "all"],
+                   help="tiers: quantised-backend sweep (the original "
+                        "bench); remote: streaming build + remote payload "
+                        "serving (DESIGN.md §3.13)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="experiments/store.json")
     p.add_argument("--bench-out", default="BENCH_store.json")
     args = p.parse_args(argv)
 
-    rows = run(smoke=args.smoke, seed=args.seed)
+    rows = []
+    if args.scenario in ("tiers", "all"):
+        rows += run(smoke=args.smoke, seed=args.seed)
+    if args.scenario in ("remote", "all"):
+        rows += run_remote(smoke=args.smoke, seed=args.seed)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
-    if not args.smoke:
+    if args.smoke:
+        return
+    payload = None
+    if args.scenario in ("tiers", "all"):
         int8_row = next(r for r in rows if r.get("backend") == "int8")
         int4_row = next(r for r in rows if r.get("backend") == "int4")
         payload = dict(
@@ -217,11 +346,28 @@ def main(argv=None):
                 int4_row["recall"] - int8_row["recall"], 4
             ),
         )
-        with open(args.bench_out, "w") as f:
-            json.dump(payload, f, indent=1)
-        print(f"[store] wrote {args.bench_out}: int8 payload "
-              f"{int8_row['payload_ratio']}x dense, recall delta "
-              f"{int8_row['recall_delta_vs_beam']}")
+    if args.scenario in ("remote", "all"):
+        remote_row = next(r for r in rows
+                          if r.get("bench") == "store_remote")
+        if payload is None:
+            # remote-only invocation: extend the existing BENCH_store.json
+            # (the tiers scenario's last full run) rather than clobber it
+            try:
+                with open(args.bench_out) as f:
+                    payload = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                payload = dict(bench="tiered_leaf_store_vs_dense_resident",
+                               backend=jax.default_backend())
+        payload["remote"] = remote_row
+        payload["headline_remote_resident_ratio"] = \
+            remote_row["resident_ratio_vs_dense"]
+        payload["headline_remote_recall_delta"] = \
+            remote_row["recall_delta_vs_in_memory"]
+        payload["headline_remote_cache_hit_ratio"] = \
+            remote_row["cache_hit_ratio"]
+    with open(args.bench_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[store] wrote {args.bench_out} (scenario={args.scenario})")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,17 @@ class PDASCArchConfig:
     store: str = "int8"
     store_block: int = 1024
     rerank_width: int = 128
+    # Remote payload tier (DESIGN.md §3.13): host-LRU capacity (decoded
+    # granules), the async prefetch pool's worker count and queue depth
+    # (None = max(8, cache//2)), and the simulated object store's
+    # performance envelope for local experiments (per-op latency, transfer
+    # bandwidth, concurrent-op cap).
+    remote_cache_granules: int = 256
+    remote_prefetch_workers: int = 2
+    remote_prefetch_depth: int = None
+    remote_latency_ms: float = 0.0
+    remote_bandwidth_mbps: float = None
+    remote_parallelism: int = 8
     # Online substrate (DESIGN.md §3.7): delta-buffer capacity for live
     # upserts, and the epoch-swap compaction triggers — compact when the
     # delta append cursor passes ``compact_delta_fill`` of capacity or the

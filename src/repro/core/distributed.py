@@ -367,6 +367,41 @@ def shard_payload(store, mesh: Mesh, *, db_axes: Sequence[str] = ("data",)):
     )
 
 
+def payload_placement(n: int, block: int, n_shards: int) -> list:
+    """Granule co-placement map for a remote exact tier (DESIGN.md §3.13).
+
+    The same row-range ownership :func:`shard_payload` gives the resident
+    codes, expressed in *granule* coordinates: node ``p`` owns rows
+    ``[p*per, (p+1)*per)`` and therefore granules
+    ``[p*per//block, (p+1)*per//block)`` of the remote payload. Because
+    granules never straddle shard boundaries (``per % block == 0``,
+    enforced here exactly as in :func:`shard_payload`, and the streaming
+    build aligns shard flushes the same way), a node's exact-rerank
+    fetches only ever touch its own granule range — co-placement with the
+    code shard, no cross-node payload traffic.
+
+    Returns ``[dict(shard=p, rows=(lo, hi), granules=(g_lo, g_hi)), ...]``
+    — half-open ranges. Use a node's ``granules`` range to warm its host
+    LRU (``RemoteSource.prefetch_async(range(g_lo, g_hi))``) at placement
+    time.
+    """
+    if n % n_shards:
+        raise ValueError(f"payload rows n={n} not divisible by "
+                         f"shards {n_shards}")
+    per = n // n_shards
+    if per % block:
+        raise ValueError(
+            f"per-shard rows {per} not granule-aligned (block={block}); "
+            f"granules would straddle shard boundaries"
+        )
+    g_per = per // block
+    return [
+        dict(shard=p, rows=(p * per, (p + 1) * per),
+             granules=(p * g_per, (p + 1) * g_per))
+        for p in range(n_shards)
+    ]
+
+
 def scan_quantized_sharded(
     codes: Array,  # [P, per, d] from shard_payload
     scales: Array,  # [P, nb_per]

@@ -60,8 +60,12 @@ Array = jax.Array
 _FORMAT_VERSION = 2  # v2: tiered leaf store (payload codes + scales)
 _MUTABLE_VERSION = 3  # v3: v2 + online tiers (delta buffer, tombstones)
 _PACKED_VERSION = 4  # v4: packed payload codes (int4 / binary backends)
+# v5: remote payload — the exact fp32 tier stays in the remote object store;
+# the artifact carries a manifest referencing the granules instead of
+# embedding level0_points (DESIGN.md §3.13).
+_REMOTE_VERSION = 5
 # v1 artifacts load with a dense fp32 payload; older versions load unchanged.
-_SUPPORTED_VERSIONS = (1, 2, 3, 4)
+_SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
 
 DEFAULT_DELTA_CAPACITY = 4096
 
@@ -172,6 +176,19 @@ class PDASCIndex:
         if store is not None:
             idx.attach_store(store, block=store_block, path=store_path)
         return idx
+
+    @classmethod
+    def build_streaming(cls, shards, **kwargs) -> "PDASCIndex":
+        """Build shard-by-shard over a remote payload tier (DESIGN.md
+        §3.13): consumes an iterator of ``[m, d]`` shards that never fit in
+        memory together, clusters and quantises one shard at a time, and
+        flushes the exact fp32 granules to ``remote=`` as it goes. Returns
+        the released, two-stage-served form (``store.exact`` is a
+        :class:`~repro.store.remote.RemoteSource`). See
+        :func:`repro.store.streaming.build_streaming` for the knobs."""
+        from repro.store import streaming as streaming_lib
+
+        return streaming_lib.build_streaming(shards, **kwargs)
 
     def attach_store(
         self,
@@ -516,6 +533,14 @@ class PDASCIndex:
         ``tombstones``: the online tiers (0 until mutations are enabled) —
         the delta is a fixed ``capacity x d`` fp32 buffer + bookkeeping, the
         tombstones 1 bit per leaf slot.
+
+        Remote payload tiers (DESIGN.md §3.13) split the out-of-core story:
+        ``remote_bytes`` is the exact payload living in the remote object
+        store (grows with the dataset, resident nowhere on this node) and
+        ``host_cache`` the decoded granules currently held by the bounded
+        host LRU (counted into ``total_resident`` — it is real node
+        memory). ``out_of_core`` keeps meaning local host/disk bytes, so it
+        is 0 for a remote tier.
         """
         nav = 0
         for lv in self.data.levels[1:]:
@@ -525,18 +550,30 @@ class PDASCIndex:
                    if f != "points")
         nav += self.data.leaf_ids.nbytes
         payload = 0 if self._payload_released else int(leaf.points.nbytes)
-        out_of_core = 0
+        out_of_core = remote_b = host_cache = 0
         if self.store is not None and self.store.backend != "fp32":
             payload += self.store.resident_bytes
-            out_of_core = self.store.out_of_core_bytes
+            exact = self.store.exact
+            if getattr(exact, "remote", False):
+                remote_b = exact.nbytes
+            else:
+                out_of_core = self.store.out_of_core_bytes
+            if getattr(exact, "remote", False) or getattr(exact, "on_disk",
+                                                          False):
+                # cached granules are decoded copies of bytes that live
+                # outside host RAM — real node memory; a host-array source's
+                # cache holds views of the (already-counted) backing array
+                host_cache = int(getattr(exact, "cache_resident_bytes", 0))
         delta_b = self.delta.nbytes if self.delta is not None else 0
         tomb_b = self.tombstones.nbytes if self.tombstones is not None else 0
         n = max(self.n_points, 1)
-        total = nav + payload + delta_b + tomb_b
+        total = nav + payload + host_cache + delta_b + tomb_b
         return dict(
             navigation=int(nav),
             payload=int(payload),
             out_of_core=int(out_of_core),
+            remote_bytes=int(remote_b),
+            host_cache=int(host_cache),
             delta=int(delta_b),
             tombstones=int(tomb_b),
             total_resident=int(total),
@@ -583,6 +620,11 @@ class PDASCIndex:
         dense fp32 leaf array resident again. To resume out-of-core serving
         after a load, re-attach a memmapped store and release:
         ``idx.attach_store("int8", path=...); idx.release_dense_payload()``.
+
+        Format v5 (remote payload tier, DESIGN.md §3.13) is the exception
+        to self-containment: the exact payload stays in the remote object
+        store and only its *manifest* is persisted — the artifact holds
+        navigation + quantised codes and reloads in served (released) form.
         """
         try:
             registered = dist_lib.get(self.distance.name)
@@ -611,11 +653,19 @@ class PDASCIndex:
             for field in lv._fields:
                 arrays[f"level{l}_{field}"] = np.asarray(getattr(lv, field))
         store_meta = None
+        remote_exact = (
+            self.store is not None
+            and getattr(self.store.exact, "remote", False)
+        )
         if self.store is not None:
-            if self._payload_released:
+            if self._payload_released and not remote_exact:
                 arrays["level0_points"] = self.store.exact.read_all()
             store_meta = dict(backend=self.store.backend,
                               block=self.store.block)
+            if remote_exact:
+                # v5: the exact payload stays remote — persist the manifest,
+                # not the bytes (the artifact is navigation + codes only)
+                store_meta["remote"] = self.store.exact.manifest()
             if self.store.backend != "fp32":
                 arrays["store_codes"] = np.asarray(self.store.codes)
                 arrays["store_scales"] = np.asarray(self.store.scales)
@@ -643,6 +693,10 @@ class PDASCIndex:
             # packed containers ([n, ceil(d/2)] int8 / [n, ceil(d/8)] uint8)
             # are unreadable by pre-v4 builds, which expect dc == d
             version = _PACKED_VERSION
+        if remote_exact:
+            # remote manifest + missing level0_points: pre-v5 builds cannot
+            # reconstruct the exact tier at all
+            version = _REMOTE_VERSION
         meta = dict(
             version=version,
             distance=self.distance.name,
@@ -671,7 +725,18 @@ class PDASCIndex:
         os.replace(tmp, path + ".json")
 
     @classmethod
-    def load(cls, path: str) -> "PDASCIndex":
+    def load(cls, path: str, *, remote=None, cache_granules: int = 256,
+             prefetch_workers: int = 2) -> "PDASCIndex":
+        """Load a saved index.
+
+        ``remote`` (v5 artifacts only): a live
+        :class:`~repro.store.remote.RemoteStore` holding the exact payload
+        granules the artifact's manifest describes. When omitted, the store
+        is reopened from the manifest itself (``store.remote.open_store``) —
+        which works for ``localfs`` manifests and raises for simulated /
+        non-reopenable kinds. ``cache_granules`` / ``prefetch_workers``
+        size the host LRU + prefetch pool in front of the remote tier.
+        """
         with open(path + ".json") as f:
             meta = json.load(f)
         version = meta.get("version")
@@ -681,7 +746,7 @@ class PDASCIndex:
                 f"{path + '.json'}; this build reads versions "
                 f"{_SUPPORTED_VERSIONS} (1 = dense fp32 payload, 2 = tiered "
                 f"leaf store, 3 = + online tiers, 4 = packed int4/binary "
-                f"payload codes)"
+                f"payload codes, 5 = remote payload manifest)"
             )
         z = np.load(path + ".npz")
         levels = []
@@ -717,10 +782,29 @@ class PDASCIndex:
         # dense fp32 leaf array already loaded above.
         store_meta = meta.get("store")
         if store_meta is not None:
-            exact = store_lib.ExactSource(
-                np.asarray(z["level0_points"], np.float32),
-                store_meta["block"],
-            )
+            manifest = store_meta.get("remote")
+            if manifest is not None:
+                # v5: reconstruct the remote tier from the manifest — the
+                # exact payload was never in the artifact. Loads straight
+                # into served (released) form.
+                from repro.store import remote as remote_lib
+
+                store = remote if remote is not None else \
+                    remote_lib.open_store(manifest)
+                exact = remote_lib.RemoteSource(
+                    store,
+                    n=int(manifest["n"]), d=int(manifest["d"]),
+                    block=int(manifest["block"]),
+                    prefix=manifest.get("prefix", ""),
+                    cache_granules=cache_granules,
+                    prefetch_workers=prefetch_workers,
+                )
+                idx._payload_released = True
+            else:
+                exact = store_lib.ExactSource(
+                    np.asarray(z["level0_points"], np.float32),
+                    store_meta["block"],
+                )
             codes = scales = None
             if store_meta["backend"] != "fp32":
                 codes = jnp.asarray(z["store_codes"])

@@ -70,10 +70,28 @@ def _parse():
     # Storage substrate (DESIGN.md §3.6): mode=two_stage serves from the
     # tiered leaf store — quantised payload resident, exact fp32 out of core
     # (memmapped at --store-path if given), dense leaf array released.
-    p.add_argument("--store", default="int8", choices=["int8", "fp16"])
+    p.add_argument("--store", default="int8",
+                   choices=["int8", "fp16", "remote"],
+                   help="payload tier: int8/fp16 quantised resident codes "
+                        "with a host/memmap exact tier, or 'remote' — int8 "
+                        "codes resident, exact fp32 granules behind a "
+                        "simulated object store (DESIGN.md §3.13)")
     p.add_argument("--store-block", type=int, default=1024)
     p.add_argument("--store-path", default=None)
     p.add_argument("--rerank-width", type=int, default=128)
+    # Remote payload tier (DESIGN.md §3.13): the simulated object store's
+    # performance envelope and the host LRU / prefetch pool in front of it.
+    p.add_argument("--remote-latency-ms", type=float, default=0.0,
+                   help="simulated object store per-op latency "
+                        "(--store remote)")
+    p.add_argument("--remote-bandwidth-mbps", type=float, default=None,
+                   help="simulated object store transfer bandwidth "
+                        "(--store remote; default: unlimited)")
+    p.add_argument("--remote-cache-granules", type=int, default=256,
+                   help="host LRU capacity in decoded granules "
+                        "(--store remote)")
+    p.add_argument("--remote-prefetch-workers", type=int, default=2,
+                   help="async prefetch pool size (--store remote)")
     # Online substrate (DESIGN.md §3.7): interleave live writes with search
     # traffic; the EpochHandle compacts + swaps epochs between batches.
     p.add_argument("--churn", type=int, default=0,
@@ -260,12 +278,29 @@ def main():
           f"({args.distance}, gl={args.gl})", flush=True)
     t0 = time.time()
     store_kw = {}
+    remote = args.mode == "two_stage" and args.store == "remote"
     if args.mode == "two_stage":
-        store_kw = dict(store=args.store, store_block=args.store_block,
-                        store_path=args.store_path)
+        # --store remote keeps int8 codes resident; the exact tier moves to
+        # the object store after the build (make_remote below)
+        store_kw = dict(store="int8" if remote else args.store,
+                        store_block=args.store_block,
+                        store_path=None if remote else args.store_path)
     idx = PDASCIndex.build(train, gl=args.gl, distance=args.distance,
                            radius_quantile=args.radius_quantile, **store_kw)
-    if args.mode == "two_stage":
+    if remote:
+        from repro.store import SimulatedObjectStore, make_remote
+
+        obj = SimulatedObjectStore(
+            latency_ms=args.remote_latency_ms,
+            bandwidth_mbps=args.remote_bandwidth_mbps,
+        )
+        make_remote(idx, obj,
+                    cache_granules=args.remote_cache_granules,
+                    prefetch_workers=args.remote_prefetch_workers)
+        print(f"[serve] remote exact tier: {obj.total_bytes} bytes in "
+              f"object store, latency={args.remote_latency_ms}ms, "
+              f"host cache={args.remote_cache_granules} granules")
+    elif args.mode == "two_stage":
         idx.release_dense_payload()  # serve within the tiered memory budget
     print(f"[serve] built in {time.time()-t0:.1f}s\n{idx.describe()}")
     print(f"[serve] memory: {idx.memory_bytes()}")
@@ -298,7 +333,7 @@ def main():
     print(f"[serve] plan:\n{handler.plan().explain()}")
 
     prefetch_fn = None
-    if args.mode == "two_stage" and idx.store.exact.on_disk:
+    if args.mode == "two_stage" and idx.store.exact.wants_prefetch:
         from repro.core import nsa
 
         def prefetch_fn(payloads):
@@ -316,7 +351,10 @@ def main():
                 r=cur.default_radius, beam=args.beam,
                 max_children=cur.max_children, kernel=kernel,
             )
-            cur.store.prefetch_rows(np.asarray(ci[:len(payloads)]))
+            # async handle: the engine's prefetch thread waits on it with a
+            # bounded timeout (overlaps the current batch's handler call)
+            return cur.store.prefetch_rows_async(
+                np.asarray(ci[:len(payloads)]))
 
     engine = BatchingEngine(
         handler, batch_size=args.batch, max_wait_ms=args.max_wait_ms,

@@ -8,9 +8,9 @@ Every series the repo exports is named here, following the
   ``autotune``, ``trace``, ``quality``, ``slo``);
 * ``name`` — one or more snake_case words describing the quantity;
 * ``unit`` — the trailing token, one of :data:`UNITS`: ``total``
-  (monotonic counter), ``seconds`` / ``bytes`` (histogram or counter in
-  that unit), ``ratio`` (0..1 gauge or histogram), ``count`` (instantaneous
-  gauge).
+  (monotonic counter), ``seconds`` / ``bytes`` (histogram, counter or
+  gauge in that unit), ``ratio`` (0..1 gauge or histogram), ``count``
+  (instantaneous gauge).
 
 The default registry is *strict*: creating a series whose name is not in
 :data:`CATALOGUE` raises, so an instrumented call site cannot invent an
@@ -87,6 +87,26 @@ STORE_FETCH_BYTES = "store_granule_fetch_bytes"
 STORE_PREFETCHED = "store_prefetch_granules_total"
 STORE_PREFETCH_USEFUL = "store_prefetch_useful_total"
 STORE_CACHE_GRANULES = "store_granule_cache_count"
+# The cache hierarchy in front of a remote payload tier (store/cache.py):
+# per-tier hit/miss accounting (labelled ``tier=``), eviction counts, the
+# decoded bytes resident in the host LRU, in-flight fetch dedup, and the
+# async prefetch pool's queue depth / overflow drops.
+STORE_CACHE_HITS = "store_cache_hits_total"
+STORE_CACHE_MISSES = "store_cache_misses_total"
+STORE_CACHE_EVICTIONS = "store_cache_evictions_total"
+STORE_CACHE_RESIDENT = "store_cache_resident_bytes"
+STORE_CACHE_HIT_RATIO = "store_cache_hit_ratio"
+STORE_CACHE_INFLIGHT_DEDUP = "store_cache_inflight_dedup_total"
+STORE_PREFETCH_QUEUE = "store_prefetch_queue_count"
+STORE_PREFETCH_DROPS = "store_prefetch_drops_total"
+# The remote object-store tier itself (store/remote.py): op counts, error
+# counts (fault seam included), and the fetch latency/byte volume of
+# granule reads against the backing store.
+STORE_REMOTE_GETS = "store_remote_gets_total"
+STORE_REMOTE_PUTS = "store_remote_puts_total"
+STORE_REMOTE_ERRORS = "store_remote_errors_total"
+STORE_REMOTE_FETCH_TIME = "store_remote_fetch_seconds"
+STORE_REMOTE_FETCH_BYTES = "store_remote_fetch_bytes"
 
 # --------------------------------------------------------------------------
 # online — live writes / epoch swaps (online/epoch.py)
@@ -176,6 +196,28 @@ CATALOGUE: dict[str, tuple[str, str]] = {
                                        "real fetch"),
     STORE_CACHE_GRANULES: ("gauge", "granules resident in the exact-payload "
                                     "LRU"),
+    STORE_CACHE_HITS: ("counter", "granule cache hits, by tier"),
+    STORE_CACHE_MISSES: ("counter", "granule cache misses, by tier"),
+    STORE_CACHE_EVICTIONS: ("counter", "granules evicted from the host LRU, "
+                                       "by tier"),
+    STORE_CACHE_RESIDENT: ("gauge", "decoded granule bytes resident in the "
+                                    "host LRU, by tier"),
+    STORE_CACHE_HIT_RATIO: ("gauge", "lifetime hit ratio of the granule "
+                                     "cache, by tier"),
+    STORE_CACHE_INFLIGHT_DEDUP: ("counter", "fetches coalesced onto an "
+                                            "in-flight fetch of the same "
+                                            "granule"),
+    STORE_PREFETCH_QUEUE: ("gauge", "granule keys queued in the async "
+                                    "prefetch pool"),
+    STORE_PREFETCH_DROPS: ("counter", "prefetch keys dropped (queue at "
+                                      "depth bound)"),
+    STORE_REMOTE_GETS: ("counter", "objects fetched from the remote store"),
+    STORE_REMOTE_PUTS: ("counter", "objects written to the remote store"),
+    STORE_REMOTE_ERRORS: ("counter", "remote-store ops that raised "
+                                     "(injected faults included)"),
+    STORE_REMOTE_FETCH_TIME: ("histogram", "remote granule fetch latency"),
+    STORE_REMOTE_FETCH_BYTES: ("counter", "bytes fetched from the remote "
+                                          "store"),
     ONLINE_WRITES: ("counter", "upsert/delete ops applied, by op"),
     ONLINE_WRITE_ERRORS: ("counter", "write ops that failed per-op"),
     ONLINE_EPOCH_SWAPS: ("counter", "compaction epoch swaps published"),

@@ -120,6 +120,48 @@ def validate_snapshot(snapshot) -> dict:
     return snapshot
 
 
+def _tier_values(snapshot: dict, name: str) -> dict:
+    """``tier`` label -> summed value for one counter/gauge family."""
+    entry = snapshot.get(name)
+    out: dict = {}
+    if entry is None or entry["kind"] == "histogram":
+        return out
+    for row in entry["series"]:
+        tier = row["labels"].get("tier", "")
+        out[tier] = out.get(tier, 0.0) + row["value"]
+    return out
+
+
+def store_cache_summary(snapshot: dict) -> dict:
+    """Per-tier cache effectiveness derived from the ``store_cache_*``
+    series (DESIGN.md §3.13): hit ratio, resident bytes, in-flight dedup
+    hits, plus the prefetch pool's drop count. Empty when the snapshot has
+    no cache traffic."""
+    hits = _tier_values(snapshot, names_lib.STORE_CACHE_HITS)
+    misses = _tier_values(snapshot, names_lib.STORE_CACHE_MISSES)
+    resident = _tier_values(snapshot, names_lib.STORE_CACHE_RESIDENT)
+    dedup = _tier_values(snapshot, names_lib.STORE_CACHE_INFLIGHT_DEDUP)
+    tiers: dict = {}
+    for tier in sorted(set(hits) | set(misses)):
+        h = hits.get(tier, 0.0)
+        m = misses.get(tier, 0.0)
+        if not h and not m:
+            continue
+        tiers[tier] = dict(
+            hits=int(h), misses=int(m),
+            hit_ratio=h / (h + m),
+            resident_bytes=int(resident.get(tier, 0.0)),
+            inflight_dedup=int(dedup.get(tier, 0.0)),
+        )
+    if not tiers:
+        return {}
+    return dict(
+        tiers=tiers,
+        prefetch_drops=int(_series_value(
+            snapshot, names_lib.STORE_PREFETCH_DROPS)),
+    )
+
+
 def build_report(snapshot: dict, traces: Optional[list] = None) -> dict:
     """Structured report dict from a snapshot (+ optional trace dicts):
     per-subsystem series tables, histogram summaries, and trace stats."""
@@ -142,6 +184,9 @@ def build_report(snapshot: dict, traces: Optional[list] = None) -> dict:
         n_series=sum(len(v["series"]) for v in snapshot.values()),
         subsystems=subsystems,
     )
+    cache = store_cache_summary(snapshot)
+    if cache:
+        report["store_cache"] = cache
     if traces is not None:
         durations = [t["root"]["duration"] for t in traces]
         slowest = max(traces, key=lambda t: t["root"]["duration"]) \
@@ -196,6 +241,16 @@ def render_text(report: dict) -> str:
             else:
                 lines.append(
                     f"  {label:<58} {_fmt_num(item['value'])}")
+    cache = report.get("store_cache")
+    if cache:
+        lines.append("\n[store cache]")
+        for tier, t in sorted(cache["tiers"].items()):
+            lines.append(
+                f"  tier={tier or '-'}: hit_ratio={t['hit_ratio']:.3f} "
+                f"({t['hits']} hits / {t['misses']} misses) "
+                f"resident={t['resident_bytes']}B "
+                f"dedup={t['inflight_dedup']}")
+        lines.append(f"  prefetch drops={cache['prefetch_drops']}")
     tr = report.get("traces")
     if tr:
         lines.append(f"\n[traces] retained={tr['n']} "
@@ -236,6 +291,20 @@ def render_html(report: dict) -> str:
                 f"<tr><td>{esc(label)}</td><td>{esc(item['kind'])}</td>"
                 + "".join(f"<td>{esc(c)}</td>" for c in cells) + "</tr>")
         parts.append("</table>")
+    cache = report.get("store_cache")
+    if cache:
+        parts.append("<h2>store cache</h2><table>"
+                     "<tr><th>tier</th><th>hit ratio</th><th>hits</th>"
+                     "<th>misses</th><th>resident bytes</th>"
+                     "<th>dedup</th></tr>")
+        for tier, t in sorted(cache["tiers"].items()):
+            parts.append(
+                f"<tr><td>{esc(tier or '-')}</td>"
+                f"<td>{t['hit_ratio']:.3f}</td><td>{t['hits']}</td>"
+                f"<td>{t['misses']}</td><td>{t['resident_bytes']}</td>"
+                f"<td>{t['inflight_dedup']}</td></tr>")
+        parts.append(f"</table><p>prefetch drops="
+                     f"{cache['prefetch_drops']}</p>")
     tr = report.get("traces")
     if tr:
         parts.append(f"<h2>traces</h2><p>retained={tr['n']} "
@@ -322,6 +391,13 @@ def render_dashboard(snap: dict, *, prev: Optional[dict] = None,
                 (names_lib.ROUTER_REJECTS, "rejects"),
                 (names_lib.QUALITY_SAMPLED, "shadowed"),
             )))
+    cache = store_cache_summary(snap)
+    if cache:
+        lines.append("  cache: " + "  ".join(
+            f"{tier or '-'}={t['hit_ratio']:.2f} "
+            f"({t['resident_bytes'] // 1024}KiB)"
+            for tier, t in sorted(cache["tiers"].items()))
+            + f"  prefetch_drops={cache['prefetch_drops']}")
     if quality is not None:
         est = quality.estimate()
         if est["queries"]:

@@ -109,6 +109,7 @@ class Capabilities(NamedTuple):
     n_levels: int
     store: Optional[str]  # payload-tier backend, None = dense seed path
     payload_released: bool
+    remote: bool  # exact payload behind a remote store (fetch = network op)
     delta_dirty: bool  # active delta entries -> the exact-scan merge leg
     tombstones_dirty: bool  # dead slots -> the slot_valid mask threading
     tuned_gen: int  # autotune winner-cache generation (auto=True kernels)
@@ -121,6 +122,10 @@ def capabilities(index) -> Capabilities:
         n_levels=len(index.data.levels),
         store=index.store.backend if index.store is not None else None,
         payload_released=bool(index._payload_released),
+        remote=bool(
+            index.store is not None
+            and getattr(index.store.exact, "remote", False)
+        ),
         delta_dirty=bool(index.delta is not None and index.delta.n_active),
         tombstones_dirty=bool(
             index.tombstones is not None and index.tombstones.count
@@ -394,7 +399,8 @@ class SearchPlan:
             f"SearchPlan[{d['pipeline']}] epoch={caps['epoch']} "
             f"levels={caps['n_levels']} "
             f"store={caps['store'] or 'dense-resident'}"
-            + (" (payload released)" if caps["payload_released"] else ""),
+            + (" (payload released)" if caps["payload_released"] else "")
+            + (" (remote exact tier)" if caps.get("remote") else ""),
             f"  query: k={q['k']} radius={q['radius']} beam={q['beam']}"
             + (f" rerank_width={q['rerank_width']}"
                if d["pipeline"] == "two_stage" else "")

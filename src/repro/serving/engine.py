@@ -10,9 +10,11 @@ deadline: a batch departs when full OR when the oldest request has waited
 worker runs the current batch, a helper thread receives a snapshot of the
 payloads still queued — a tiered-store handler uses it to warm the leaf
 store's granule cache so the next batch's exact-rerank fetches hit memory
-instead of disk. Prefetching is best-effort: snapshots that arrive while
-the helper is busy are coalesced to the latest one, and exceptions are
-swallowed (a cold cache is a latency miss, not an error).
+instead of disk (or, behind a remote tier, instead of the network: a
+``prefetch_fn`` may return an async ``PrefetchHandle``, which the helper
+waits on with a bounded timeout). Prefetching is best-effort: snapshots
+that arrive while the helper is busy are coalesced to the latest one, and
+exceptions are swallowed (a cold cache is a latency miss, not an error).
 
 ``write_handler`` hooks the online substrate (DESIGN.md §3.7):
 ``submit_upsert`` / ``submit_delete`` enqueue *write* requests into the
@@ -400,7 +402,12 @@ class BatchingEngine:
             if snapshot is _SHUTDOWN:
                 return
             try:
-                self.prefetch_fn(snapshot)
+                handle = self.prefetch_fn(snapshot)
+                if hasattr(handle, "wait"):
+                    # async warm-up (store.cache.PrefetchHandle, the remote
+                    # tier): bound the wait so a slow/faulted remote only
+                    # coalesces snapshots, never wedges this thread
+                    handle.wait(timeout=30.0)
                 self._bump(prefetches=1)
                 self._m_prefetches.inc()
             except Exception:

@@ -1,11 +1,15 @@
-"""Storage substrate: the tiered leaf store (DESIGN.md §3.6).
+"""Storage substrate: the tiered leaf store (DESIGN.md §3.6/§3.13).
 
 Separates the index's hot navigation tier (prototype hierarchy, fp32 in
-device memory) from the payload tier (leaf vectors as int8/fp16 quantised
-blocks, exact fp32 kept out of core), and serves it with the two-stage
-scan -> rerank search.
+device memory) from the payload tier (leaf vectors as int8/fp16/int4/binary
+quantised blocks, exact fp32 kept out of core), and serves it with the
+two-stage scan -> rerank search. The out-of-core tier runs on host arrays,
+on-disk memmaps, or a pluggable remote object store behind the host LRU +
+async prefetch hierarchy (``cache`` / ``remote``); ``streaming`` builds an
+index shard-by-shard over a dataset that never fits in memory.
 """
 
+from repro.store.cache import GranuleCache, PrefetchHandle, PrefetchPool
 from repro.store.leaf_store import (
     BACKENDS,
     ExactSource,
@@ -13,13 +17,36 @@ from repro.store.leaf_store import (
     dequantize,
     quantize,
 )
+from repro.store.remote import (
+    LocalFSStore,
+    RemoteSource,
+    RemoteStore,
+    RemoteStoreError,
+    SimulatedObjectStore,
+    make_remote,
+    open_store,
+    upload_payload,
+)
+from repro.store.streaming import build_streaming
 from repro.store.two_stage import search_two_stage
 
 __all__ = [
     "BACKENDS",
     "ExactSource",
+    "GranuleCache",
     "LeafStore",
+    "LocalFSStore",
+    "PrefetchHandle",
+    "PrefetchPool",
+    "RemoteSource",
+    "RemoteStore",
+    "RemoteStoreError",
+    "SimulatedObjectStore",
+    "build_streaming",
     "dequantize",
+    "make_remote",
+    "open_store",
     "quantize",
     "search_two_stage",
+    "upload_payload",
 ]

@@ -41,7 +41,6 @@ scan kernel (``kernels/quantized.py``) or ``ref.unpack_codes``.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import os
 import threading
@@ -54,6 +53,7 @@ import numpy as np
 from repro import obs
 from repro.kernels import ref as kref
 from repro.obs import names as mnames
+from repro.store.cache import GranuleCache, PrefetchHandle, PrefetchPool
 
 Array = jax.Array
 
@@ -169,16 +169,12 @@ class ExactSource:
         self._arr = arr  # np.ndarray or np.memmap, [n, d] f32
         self.block = block
         self.n, self.d = arr.shape
-        self._cache: collections.OrderedDict[int, np.ndarray] = (
-            collections.OrderedDict()
-        )
-        self._cache_max = max(1, cache_granules)
-        self._lock = threading.Lock()
-        self.stats = dict(fetches=0, hits=0)
-        # Granules warmed by prefetch() and not yet hit by a real fetch —
-        # a later cache hit on one counts as "prefetch useful" (the
-        # prefetch-usefulness signal in repro.obs).
-        self._prefetched: set = set()
+        # LRU + in-flight dedup live in the shared GranuleCache
+        # (store/cache.py) — the same hierarchy piece the remote tier uses,
+        # so hit/miss/eviction semantics cannot drift between backends.
+        self.cache = GranuleCache(cache_granules, tier="host")
+        self._pool: Optional[PrefetchPool] = None
+        self._pool_lock = threading.Lock()
         self._m_fetches = obs.counter(mnames.STORE_FETCHES)
         self._m_hits = obs.counter(mnames.STORE_HITS)
         self._m_fetch_bytes = obs.counter(mnames.STORE_FETCH_BYTES)
@@ -191,6 +187,17 @@ class ExactSource:
         return isinstance(self._arr, np.memmap)
 
     @property
+    def remote(self) -> bool:
+        return False
+
+    @property
+    def wants_prefetch(self) -> bool:
+        """Whether warming the cache ahead of the rerank pays: a memmap
+        fetch is real I/O worth overlapping; an in-memory source's fetch is
+        a host slice, cheaper than the copy the warm-up would do."""
+        return self.on_disk
+
+    @property
     def path(self) -> Optional[str]:
         """Backing file of a memmapped source (None for host arrays)."""
         return os.fspath(self._arr.filename) if self.on_disk else None
@@ -199,36 +206,35 @@ class ExactSource:
     def nbytes(self) -> int:
         return self.n * self.d * 4
 
-    def _granule(self, g: int, *, _prefetch: bool = False) -> np.ndarray:
-        with self._lock:
-            blk = self._cache.get(g)
-            if blk is not None:
-                self._cache.move_to_end(g)
-                self.stats["hits"] += 1
-                if not _prefetch and g in self._prefetched:
-                    # first real hit on a prefetch-warmed granule: the
-                    # prefetch saved exactly one backing-store read
-                    self._prefetched.discard(g)
-                    self._m_prefetch_useful.inc()
-                self._m_hits.inc()
-                return blk
+    @property
+    def cache_resident_bytes(self) -> int:
+        """Decoded granule bytes held by the host LRU."""
+        return self.cache.resident_bytes
+
+    @property
+    def stats(self) -> dict:
+        """Fetch/hit counters (fetches = backing-store granule reads)."""
+        c = self.cache.stats
+        return dict(fetches=c["misses"], hits=c["hits"])
+
+    def _read_granule(self, g: int) -> np.ndarray:
         lo = g * self.block
-        blk = np.asarray(self._arr[lo: lo + self.block], np.float32)
-        with self._lock:
-            self.stats["fetches"] += 1
-            self._cache[g] = blk
+        return np.asarray(self._arr[lo: lo + self.block], np.float32)
+
+    def _granule(self, g: int, *, _prefetch: bool = False) -> np.ndarray:
+        before_m = self.cache.stats["misses"]
+        before_u = self.cache.stats["prefetch_useful"]
+        blk = self.cache.get(g, self._read_granule, prefetch=_prefetch)
+        if self.cache.stats["misses"] != before_m:
+            self._m_fetches.inc()
+            self._m_fetch_bytes.inc(blk.nbytes)
             if _prefetch:
-                self._prefetched.add(g)
                 self._m_prefetched.inc()
-            else:
-                # a real fetch of a granule that was prefetched but already
-                # evicted: the warm-up did not help, stop tracking it
-                self._prefetched.discard(g)
-            while len(self._cache) > self._cache_max:
-                self._cache.popitem(last=False)
-            self._m_cached.set(len(self._cache))
-        self._m_fetches.inc()
-        self._m_fetch_bytes.inc(blk.nbytes)
+        else:
+            self._m_hits.inc()
+            if self.cache.stats["prefetch_useful"] != before_u:
+                self._m_prefetch_useful.inc()
+        self._m_cached.set(len(self.cache))
         return blk
 
     def read_all(self) -> np.ndarray:
@@ -236,15 +242,30 @@ class ExactSource:
         return np.asarray(self._arr, np.float32)
 
     def prefetch(self, granules) -> None:
-        """Warm the cache (the serving engine's between-batch hook).
+        """Warm the cache synchronously (tests / small warm-ups).
 
         Capped at the cache capacity: warming more granules than the LRU can
         hold would evict the warm-up's own earlier inserts (and anything
         already warm) — strictly worse I/O than not prefetching.
         """
-        gs = np.unique(np.asarray(granules, np.int64))[: self._cache_max]
+        gs = np.unique(np.asarray(granules, np.int64))[: self.cache.capacity]
         for g in gs:
             self._granule(int(g), _prefetch=True)
+
+    def prefetch_async(self, granules) -> PrefetchHandle:
+        """Warm the cache on the shared prefetch pool (two-stage search /
+        the serving engine's between-batch hook) — depth-bounded, deduped
+        against resident and in-flight granules; returns a waitable
+        handle."""
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = PrefetchPool(
+                    self.cache, self._read_granule, workers=2,
+                    depth=max(8, self.cache.capacity // 2),
+                )
+        gs = np.unique(np.asarray(granules, np.int64))
+        gs = gs[gs >= 0][: self.cache.capacity]
+        return self._pool.submit([int(g) for g in gs])
 
     def fetch_rows(self, idx: np.ndarray) -> np.ndarray:
         """Gather exact rows: idx [...] int -> [..., d] f32, granule-wise."""
@@ -408,6 +429,12 @@ class LeafStore:
         return self.exact.fetch_rows(idx)
 
     def prefetch_rows(self, idx) -> None:
-        """Warm the granule cache for the rows ``idx`` (async-friendly)."""
+        """Warm the granule cache for the rows ``idx`` (blocking)."""
         flat = np.clip(np.asarray(idx, np.int64).reshape(-1), 0, self.n - 1)
         self.exact.prefetch(flat // self.block)
+
+    def prefetch_rows_async(self, idx) -> "PrefetchHandle":
+        """Warm the granule cache for ``idx`` on the async prefetch pool;
+        returns a waitable :class:`~repro.store.cache.PrefetchHandle`."""
+        flat = np.clip(np.asarray(idx, np.int64).reshape(-1), 0, self.n - 1)
+        return self.exact.prefetch_async(flat // self.block)

@@ -1,0 +1,274 @@
+"""Streaming shard-by-shard index build over a remote payload tier
+(DESIGN.md §3.13).
+
+``build_streaming`` consumes an *iterator* of ``[m, d]`` fp32 shards — a
+dataset that never fits in memory — and produces a served-form
+:class:`~repro.core.index.PDASCIndex`: quantised codes resident, exact
+fp32 payload living as granules in a :class:`~repro.store.remote
+.RemoteStore`, dense leaf array never materialised.
+
+Per shard (one pass, bounded live memory ~ one shard + the medoid
+accumulator):
+
+1. **cluster** the shard's leaf groups through the PR 2 build substrate
+   (``msa._build_level`` — the same jitted program the in-memory build and
+   compaction run, so per-group clustering, sibling-contiguous reorder and
+   child bookkeeping are identical);
+2. **quantise** the reordered leaf rows into the resident code tier
+   (per-``block`` scales — shard slot counts are granule-aligned, so
+   per-shard scales concatenate exactly);
+3. **flush** the exact fp32 rows to the remote store as whole granules
+   (``remote.upload_granules``) and free the shard.
+
+Only the per-shard *medoids* (~``n_prototypes/gl`` of the data) accumulate;
+after the stream ends they are clustered bottom-up into the upper levels by
+``msa._cluster_levels(prev_levels=[leaf])`` — the exact mechanism online
+compaction uses to regrow the hierarchy above re-clustered leaf groups, so
+the leaf parent pointers are fixed through the first upper level's reorder
+the same way.
+
+The stream order *is* the group assignment: shards are clustered as they
+arrive (no global shuffle). Feed pre-shuffled shards for i.i.d. groups —
+the usual object-store layout — or accept locality-biased groups, which
+NSA tolerates (groups are local neighbourhoods by construction).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import distances as dist_lib
+from repro.core import msa, radius as radius_lib
+from repro.store import remote as remote_lib
+from repro.store.leaf_store import LeafStore, quantize
+
+Array = jax.Array
+
+# Rows sampled (evenly across shards) for the default-radius estimate.
+_RADIUS_SAMPLE = 4096
+
+
+def build_streaming(
+    shards: Iterable,
+    *,
+    gl: int,
+    remote: remote_lib.RemoteStore,
+    n_prototypes: Optional[int] = None,
+    distance="euclidean",
+    store: str = "int8",
+    block: int = 1024,
+    method: str = "pam",
+    max_swaps: int = 64,
+    key: Optional[Array] = None,
+    radius_quantile: float = 0.05,
+    row_chunk: int = 512,
+    group_chunk: int = 8,
+    swap_tol: float = 1e-3,
+    bg: int = 128,
+    cache_granules: int = 256,
+    prefetch_workers: int = 2,
+    prefix: str = "",
+):
+    """Build a remote-payload PDASC index from a shard iterator.
+
+    Args:
+      shards: iterable of ``[m, d]`` float32 arrays. Every shard's padded
+        slot count (``ceil(m/gl) * gl``) must be a multiple of ``block`` —
+        granules never straddle shards, which is what lets each shard flush
+        independently (and is the co-placement unit
+        ``core.distributed.payload_placement`` hands out).
+      gl / n_prototypes / distance / method / ...: the standard MSA build
+        knobs (``PDASCIndex.build``).
+      remote: the object store receiving the exact fp32 granules.
+      store: resident payload backend — a *quantised* one
+        (int8/fp16/int4/binary); the streamed index is always the released,
+        two-stage-served form (there is no dense leaf array to keep).
+      block: granule rows (quantisation block == remote fetch unit).
+      cache_granules / prefetch_workers: the host LRU + prefetch pool in
+        front of the remote tier (``RemoteSource``).
+
+    Returns a :class:`~repro.core.index.PDASCIndex` with
+    ``_payload_released=True`` and ``index.store.exact`` a
+    :class:`~repro.store.remote.RemoteSource`.
+    """
+    from repro.core.index import PDASCIndex, _validate_points
+
+    dist = dist_lib.get(distance)
+    k = n_prototypes or gl // 2
+    if k < 1 or k > gl:
+        raise ValueError(f"need 1 <= n_prototypes <= gl, got {k} vs gl={gl}")
+    if store == "fp32" or store not in ("int8", "fp16", "int4", "binary"):
+        raise ValueError(
+            f"build_streaming needs a quantised store backend "
+            f"(int8/fp16/int4/binary), got {store!r} — the dense payload is "
+            f"never resident on the streaming path"
+        )
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    d: Optional[int] = None
+    row_off = 0  # leaf slots flushed so far (granule-aligned)
+    group_off = 0  # leaf groups so far (parent/UL-item offset unit)
+    id_off = 0  # raw stream rows so far (leaf id space)
+    valid_parts, parent_parts, ids_parts, norm_parts = [], [], [], []
+    codes_parts, scales_parts = [], []
+    med_pts, med_valid, med_cs, med_cc = [], [], [], []
+    leaf_td = 0.0
+    radius_sample: list[np.ndarray] = []
+    n_shards = 0
+
+    for shard in shards:
+        shard = _validate_points(shard, dist, what="build_streaming shard")
+        m = shard.shape[0]
+        if d is None:
+            d = shard.shape[1]
+        elif shard.shape[1] != d:
+            raise ValueError(
+                f"shard {n_shards} has d={shard.shape[1]}, earlier shards "
+                f"had d={d}"
+            )
+        G = -(-m // gl)
+        n_pad = G * gl
+        if n_pad % block:
+            raise ValueError(
+                f"shard {n_shards}: padded slot count {n_pad} (= ceil({m}/"
+                f"{gl})*{gl}) is not a multiple of block={block}; granules "
+                f"would straddle the shard boundary. Use shard sizes whose "
+                f"ceil(m/gl)*gl is block-aligned (e.g. gl a multiple of "
+                f"block, or shards of a fixed block-aligned group count)."
+            )
+        with obs.span("stream_shard", kind="host", shard=n_shards, rows=m):
+            key, sub = jax.random.split(key)
+            level_arrays, next_arrays, _, td = msa._build_level(
+                jnp.asarray(shard, jnp.float32),
+                jnp.ones((m,), bool),
+                jnp.arange(id_off, id_off + m, dtype=jnp.int32),
+                jnp.full((m,), -1, jnp.int32),
+                sub,
+                dist=dist, gl=gl, k=k, method=method, max_swaps=max_swaps,
+                swap_tol=swap_tol, row_chunk=row_chunk,
+                group_chunk=group_chunk, bg=bg, force_pallas=False,
+            )
+            rows = np.asarray(level_arrays["points"], np.float32)  # [n_pad,d]
+            lvalid = np.asarray(level_arrays["valid"])
+            lparent = np.asarray(level_arrays["parent"])
+            lids = np.asarray(level_arrays["carry_a"])
+            # resident tier: quantise the final-layout shard rows
+            c, s = quantize(rows, store, block)
+            codes_parts.append(np.asarray(c))
+            scales_parts.append(np.asarray(s))
+            # exact tier: flush whole granules to the remote store
+            remote_lib.upload_granules(remote, rows, block,
+                                       row_offset=row_off, prefix=prefix)
+            # leaf bookkeeping (global layout: this shard owns rows
+            # [row_off, row_off + n_pad) and upper items
+            # [group_off*k, (group_off+G)*k))
+            valid_parts.append(lvalid)
+            parent_parts.append(
+                np.where(lparent >= 0, lparent + group_off * k, -1)
+                .astype(np.int32)
+            )
+            ids_parts.append(lids.astype(np.int32))
+            norm_parts.append(np.einsum("ij,ij->i", rows, rows,
+                                        dtype=np.float32))
+            med_pts.append(np.asarray(next_arrays["points"], np.float32))
+            med_valid.append(np.asarray(next_arrays["valid"]))
+            med_cs.append(
+                (np.asarray(next_arrays["child_start"]) + row_off)
+                .astype(np.int32)
+            )
+            med_cc.append(np.asarray(next_arrays["child_count"], np.int32))
+            leaf_td += float(np.asarray(td))
+            stride = max(1, m // max(1, _RADIUS_SAMPLE // 8))
+            radius_sample.append(shard[::stride][: _RADIUS_SAMPLE])
+        row_off += n_pad
+        group_off += G
+        id_off += m
+        n_shards += 1
+
+    if n_shards == 0:
+        raise ValueError("build_streaming got an empty shard iterator")
+    msa._check_level_convergence(id_off, gl, k)
+
+    n_total = row_off
+    # Leaf level in released form: the dense payload never existed on this
+    # path — the [n, 0] placeholder is the same shape release_dense_payload
+    # leaves behind; sq_norm is patched below with the real streamed norms.
+    leaf_dict = dict(
+        points=jnp.zeros((n_total, 0), jnp.float32),
+        valid=jnp.asarray(np.concatenate(valid_parts)),
+        parent=jnp.asarray(np.concatenate(parent_parts)),
+        child_start=jnp.full((n_total,), -1, jnp.int32),
+        child_count=jnp.zeros((n_total,), jnp.int32),
+        leaf_ids=jnp.asarray(np.concatenate(ids_parts)),
+    )
+    med_flat = jnp.asarray(np.concatenate(med_pts))
+    mv_flat = jnp.asarray(np.concatenate(med_valid))
+    cs_flat = jnp.asarray(np.concatenate(med_cs))
+    cc_flat = jnp.asarray(np.concatenate(med_cc))
+
+    if group_off == 1:  # single group: its medoids are the top level
+        raw_levels = [leaf_dict]
+        top = dict(
+            points=med_flat, valid=mv_flat,
+            parent=jnp.full((med_flat.shape[0],), -1, jnp.int32),
+            child_start=cs_flat, child_count=cc_flat,
+        )
+        upper_td: list = []
+    else:
+        key, sub = jax.random.split(key)
+        with obs.span("stream_upper_levels", kind="host",
+                      items=int(med_flat.shape[0])):
+            raw_levels, upper_td, top = msa._cluster_levels(
+                med_flat, mv_flat, cs_flat, cc_flat, sub,
+                dist=dist, gl=gl, k=k, method=method, max_swaps=max_swaps,
+                swap_tol=swap_tol, row_chunk=row_chunk,
+                group_chunk=group_chunk, bg=bg, force_pallas=False,
+                prev_levels=[leaf_dict],
+            )
+    data = msa.finalize_index(raw_levels, top)
+    leaf = data.levels[0]
+    data = data._replace(levels=(
+        leaf._replace(sq_norm=jnp.asarray(np.concatenate(norm_parts))),
+    ) + data.levels[1:])
+
+    sizes = [int(np.asarray(lv.valid).sum()) for lv in data.levels]
+    tds = [leaf_td] + [float(np.asarray(t)) for t in upper_td] + [0.0]
+    stats = msa.BuildStats(
+        level_sizes=tuple(sizes), level_td=tuple(tds), n_levels=len(sizes)
+    )
+
+    sample = np.concatenate(radius_sample)[:_RADIUS_SAMPLE]
+    default_r = float(radius_lib.estimate_radius(
+        jnp.asarray(sample, jnp.float32), dist, quantile=radius_quantile
+    ))
+
+    source = remote_lib.RemoteSource(
+        remote, n=n_total, d=d, block=block, prefix=prefix,
+        cache_granules=cache_granules, prefetch_workers=prefetch_workers,
+    )
+    leaf_store = LeafStore(
+        backend=store, block=block,
+        codes=jnp.asarray(np.concatenate(codes_parts)),
+        scales=jnp.asarray(np.concatenate(scales_parts)),
+        exact=source,
+    )
+    remote.put(prefix + remote_lib.MANIFEST_KEY,
+               json.dumps(source.manifest()).encode("utf-8"))
+
+    return PDASCIndex(
+        data=data,
+        stats=stats,
+        distance=dist,
+        gl=gl,
+        n_prototypes=k,
+        max_children=msa.max_children(data),
+        default_radius=default_r,
+        store=leaf_store,
+        _payload_released=True,
+    )

@@ -28,13 +28,16 @@ degrades gracefully from "trust the scan" (small R, granule-sized fetch
 traffic) to "trust nothing" (∞, the dense result).
 
 While stage 1 runs on device, the candidate granules (a superset of the
-survivors') are prefetched into the exact source's cache on a worker thread
-— the fetch in stage 2 then mostly hits cache (``prefetch=True``).
+survivors') are prefetched into the exact source's cache through the async
+prefetch pool (``store.cache.PrefetchPool`` — depth-bounded, deduped
+against resident and in-flight granules) — the fetch in stage 2 then
+mostly hits cache (``prefetch=True``). The same pool serves memmapped and
+remote (``store.remote.RemoteSource``) payloads; sources whose fetch is a
+plain host slice opt out via ``wants_prefetch``.
 """
 
 from __future__ import annotations
 
-import threading
 from typing import Optional
 
 import jax
@@ -170,16 +173,13 @@ def search_two_stage(
         return jax.tree.map(lambda a: a[0], res) if squeeze else res
 
     prefetcher = None
-    if prefetch and store.exact.on_disk:
+    if prefetch and store.exact.wants_prefetch:
         # cand_idx is already materialised (descend_beam returned);
-        # warming the granule cache overlaps the device-side scan below.
-        # In-memory exact sources skip this — their fetch is a host slice,
-        # cheaper than the copy the warm-up would do.
-        cand_host = np.asarray(cand_idx)
-        prefetcher = threading.Thread(
-            target=store.prefetch_rows, args=(cand_host,), daemon=True
-        )
-        prefetcher.start()
+        # warming the granule cache on the async pool overlaps the
+        # device-side scan below. In-memory exact sources opt out
+        # (wants_prefetch=False) — their fetch is a host slice, cheaper
+        # than the copy the warm-up would do.
+        prefetcher = store.prefetch_rows_async(np.asarray(cand_idx))
 
     with obs.span("scan", kind="device", candidates=W, survivors=R,
                   backend=store.backend):
@@ -194,7 +194,10 @@ def search_two_stage(
             jax.block_until_ready(surv_idx)
 
     if prefetcher is not None:
-        prefetcher.join()
+        # bound the wait: prefetch is advisory — a slow remote must not
+        # stall stage 2 past the point where fetching the survivors
+        # directly (mostly warm by now) would be faster
+        prefetcher.wait(timeout=30.0)
 
     # Stage 2: exact fp32 rows from the out-of-core payload, granule-wise.
     # (the granule_fetch span is recorded inside ExactSource.fetch_rows)
